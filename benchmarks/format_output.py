@@ -1,0 +1,24 @@
+"""Reconstruct a clean benchmark log from the results/bench JSON sinks
+(used when a previous writer interleaved bench_output.txt)."""
+import glob
+import json
+import sys
+
+
+def main(outdir="results/bench"):
+    order = ["selection", "roofline_fig3", "kernels", "reorder",
+             "scaling", "realworld"]
+    files = {f.split("/")[-1][:-5]: f
+             for f in glob.glob(f"{outdir}/*.json")}
+    for name in order + sorted(set(files) - set(order)):
+        if name not in files:
+            continue
+        rows = json.load(open(files[name]))
+        print(f"\n=== bench:{name} ===")
+        for r in rows:
+            print(",".join(f"{k}={v}" for k, v in r.items()))
+        print(f"=== bench:{name} done ===")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run             # all
+    PYTHONPATH=src python -m benchmarks.run --only selection,reorder
+    PYTHONPATH=src python -m benchmarks.run --quick     # reduced sizes
+
+Prints one CSV-ish line per measurement; JSON sinks go to results/bench/.
+Paper artifact map:
+    selection   -> §4.1 (16x fused, 1.12x turbosampling)
+    reorder     -> Table 1 (locality), Fig. 4 (purity), Fig. 5 (per-iter)
+    scaling     -> Fig. 6 (vs n), Fig. 7 (vs d), O(n^1.14)
+    realworld   -> Table 2 (MNIST/Audio stand-ins)
+    roofline    -> Fig. 3 (memory/compute crossover, v5e ridge)
+    kernels     -> (ours) blocked-kernel tile model
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_kernels,
+        bench_realworld,
+        bench_reorder,
+        bench_roofline,
+        bench_scaling,
+        bench_selection,
+    )
+
+    quick = args.quick
+    jobs = {
+        "selection": lambda: bench_selection.run(
+            n=4096 if quick else 16_384),
+        "roofline": lambda: bench_roofline.run(),
+        "kernels": lambda: bench_kernels.run(
+            m=1024 if quick else 2048, n=1024 if quick else 2048),
+        "reorder": lambda: bench_reorder.run(
+            n=4096 if quick else 8192),
+        "scaling": lambda: bench_scaling.run(
+            axis="d" if quick else "both"),
+        "realworld": lambda: bench_realworld.run(
+            n_mnist=2048 if quick else 4096,
+            n_audio=2048 if quick else 4096),
+    }
+    only = set(args.only.split(",")) if args.only else set(jobs)
+    t0 = time.time()
+    for name, fn in jobs.items():
+        if name not in only:
+            continue
+        print(f"\n=== bench:{name} ===", flush=True)
+        t = time.time()
+        fn()
+        print(f"=== bench:{name} done in {time.time()-t:.1f}s", flush=True)
+    print(f"\nall benches done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""The paper's centerpiece, visualized: the greedy reordering heuristic
+(Algorithm 1) turning data-space locality into memory-space locality.
+
+Prints an ASCII rendition of the paper's Fig. 4 (windowed cluster purity
+along the reordered axis) and the Table-1 analog (locality metrics before
+/ after), plus the per-iteration timing of Fig. 5.
+
+    PYTHONPATH=src python examples/reorder_locality.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import (
+    DescentConfig,
+    NeighborLists,
+    apply_permutation,
+    build_knn_graph,
+    greedy_reorder,
+    locality_stats,
+    window_cluster_purity,
+)
+from repro.core import datasets
+
+
+def bar(frac, width=40):
+    n = int(frac * width)
+    return "#" * n + "." * (width - n)
+
+
+def main():
+    n, d, c = 8192, 8, 8
+    key = jax.random.key(0)
+    x, labels = datasets.clustered(key, n, d, c, labels=True)
+    print(f"Synthetic Clustered Dataset: n={n}, d={d}, {c} clusters "
+          f"(input order shuffled — reveals nothing)\n")
+
+    cfg = DescentConfig(k=20, rho=1.0, max_iters=4, reorder=False)
+    dist, idx, _ = build_knn_graph(x, k=20, cfg=cfg)
+    nl = NeighborLists(dist, idx, jnp.zeros_like(idx, dtype=bool))
+
+    before = locality_stats(nl)
+    t0 = time.time()
+    sigma, sigma_inv = greedy_reorder(nl)
+    t_reorder = time.time() - t0
+    _, nl2 = apply_permutation(x, nl, sigma, sigma_inv)
+    after = locality_stats(nl2)
+
+    print("Table-1 analog (cachegrind stand-in):")
+    print(f"  in-block edge fraction : {before['in_block_fraction']:.3f} "
+          f"-> {after['in_block_fraction']:.3f}")
+    print(f"  mean gather spread     : {before['mean_gather_spread']:.0f} "
+          f"-> {after['mean_gather_spread']:.0f} rows")
+    print(f"  (reorder pass itself: {t_reorder*1e3:.0f} ms, one pass, "
+          f"O(nk))\n")
+
+    print("Fig. 4: dominant-cluster fraction per 1000-row window after "
+          "reordering")
+    starts, purity = window_cluster_purity(labels, sigma, window=1000,
+                                           stride=1000)
+    for s, p in zip(starts, purity):
+        print(f"  rows {s:5d}+ |{bar(p)}| {p:.2f}")
+    print(f"  (random order would sit at {1/c:.3f} everywhere; the tail "
+          f"decays exactly as the paper's Fig. 4 describes — the "
+          f"single-pass heuristic runs out of unassigned nodes)\n")
+
+    print("Fig. 5: per-iteration wall time, with vs without the heuristic")
+    for variant, reorder in (("no-heuristic", False),
+                             ("greedyheuristic", True)):
+        times = []
+
+        def cb(it, upd, nl, _t=[time.perf_counter()]):
+            now = time.perf_counter()
+            times.append(now - _t[0])
+            _t[0] = now
+
+        cfgv = DescentConfig(k=20, rho=1.0, max_iters=6, reorder=reorder)
+        build_knn_graph(x, k=20, cfg=cfgv, callback=cb)
+        row = " ".join(f"{t:5.2f}" for t in times)
+        print(f"  {variant:16s} [{row}] s  total={sum(times):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""repro — a multi-pod JAX training/serving framework built around fast
+K-NN-graph construction (Kluser et al. 2021: NN-Descent with turbosampling
+selection, greedy memory reordering, and MXU-blocked distance evaluation).
+
+Public API:
+  * ``repro.build_knn_graph`` / ``repro.core`` — the paper's contribution.
+  * ``repro.models`` / ``repro.configs`` — the assigned LM architectures.
+  * ``repro.train`` / ``repro.serve`` — training and serving substrates.
+  * ``repro.launch`` — production mesh, dry-run, roofline tooling.
+"""
+from repro.core import (
+    DescentConfig,
+    DescentStats,
+    NeighborLists,
+    apply_permutation,
+    brute_force_knn,
+    build_knn_graph,
+    distance_recall,
+    graph_search,
+    greedy_reorder,
+    locality_stats,
+    nn_descent_iteration,
+    recall_at_k,
+    window_cluster_purity,
+)
+
+__version__ = "0.1.0"
+
+__all__ = [
+    "DescentConfig",
+    "DescentStats",
+    "NeighborLists",
+    "apply_permutation",
+    "brute_force_knn",
+    "build_knn_graph",
+    "distance_recall",
+    "graph_search",
+    "greedy_reorder",
+    "locality_stats",
+    "nn_descent_iteration",
+    "recall_at_k",
+    "window_cluster_purity",
+]

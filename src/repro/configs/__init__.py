@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    batch_specs,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    list_archs,
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "batch_specs",
+    "get_config",
+    "get_smoke_config",
+    "input_specs",
+    "list_archs",
+]

@@ -1,0 +1,53 @@
+"""internvl2-1b [arXiv:2404.16821; hf OpenGVLab/InternVL2-1B] — VLM.
+
+Text backbone = Qwen2-0.5B: 24L d_model=896 14H (GQA kv=2, d_head=64)
+d_ff=4864 vocab=151655, QKV bias, RoPE theta=1e6, tied embeddings.
+The InternViT vision tower is a STUB per the assignment: ``input_specs``
+provides precomputed patch embeddings (B, 256, 1024); the model owns the
+MLP projector (1024 -> d_model) and prepends the projected patches to the
+token sequence.
+
+14 heads do not divide the 16-way model axis: the sharding rules fall back
+to replicated heads for this arch (activations shard on batch only) —
+exercised deliberately as the "awkward divisibility" case (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_head=64,
+        d_ff=4864,
+        vocab=151_655,
+        rope_theta=1_000_000.0,
+        attn_bias=True,
+        tie_embeddings=True,
+        frontend="vision",
+        frontend_dim=1024,
+        n_patches=256,
+    ),
+    smoke=ModelConfig(
+        arch="internvl2-1b",
+        family="vlm",
+        n_layers=2,
+        d_model=128,
+        n_heads=7,                     # keep the awkward head count
+        n_kv_heads=1,
+        d_head=16,
+        d_ff=256,
+        vocab=512,
+        rope_theta=1_000_000.0,
+        attn_bias=True,
+        tie_embeddings=True,
+        frontend="vision",
+        frontend_dim=64,
+        n_patches=16,
+        attn_chunk_q=64,
+        attn_chunk_kv=64,
+    ),
+)

@@ -1,0 +1,34 @@
+"""The paper's contribution: fast K-NN-graph construction (NN-Descent with
+turbosampling selection, greedy memory reordering, and blocked distance
+evaluation), single-chip and mesh-sharded."""
+from repro.core.graph_search import graph_search
+from repro.core.heap import NeighborLists
+from repro.core.nn_descent import (
+    DescentConfig,
+    DescentStats,
+    build_knn_graph,
+    nn_descent_iteration,
+)
+from repro.core.recall import brute_force_knn, distance_recall, recall_at_k
+from repro.core.reorder import (
+    apply_permutation,
+    greedy_reorder,
+    locality_stats,
+    window_cluster_purity,
+)
+
+__all__ = [
+    "DescentConfig",
+    "DescentStats",
+    "NeighborLists",
+    "apply_permutation",
+    "brute_force_knn",
+    "build_knn_graph",
+    "distance_recall",
+    "graph_search",
+    "greedy_reorder",
+    "locality_stats",
+    "nn_descent_iteration",
+    "recall_at_k",
+    "window_cluster_purity",
+]

@@ -1,0 +1,472 @@
+"""Distributed K-NN-graph construction (the scale-out layer the paper's
+single-core scope stops short of; DESIGN.md assumption change #4).
+
+Points are sharded over the mesh's ``data`` axis under shard_map. Global
+ids are ``shard * n_local + row``. Three collective patterns:
+
+  * exact_knn_sharded — blocked brute force: the local block of features
+    ring-rotates (collective_permute) P-1 times; each step every shard
+    evaluates an (n_local x n_local) blocked-distance tile and folds the
+    top-k into its running lists. Peak memory O(n_local * d); validates
+    recall of the approximate build.
+  * nn_descent_sharded_iteration — one NN-Descent iteration where
+      - candidate features are fetched by the same feature ring (each
+        shard absorbs the rows it sampled as the owning block passes), and
+      - update routing is an all_to_all: each evaluated pair is bucketed
+        by its receiver's owner shard and exchanged in fixed-size buckets.
+  * reorder_sharded — the paper's greedy reorder run shard-locally on the
+    locally-owned subgraph, followed by one all_gather of the per-shard
+    permutations so every shard can rewrite its neighbor ids.
+
+The per-shard inner work reuses the exact same selection/merge/blocked
+kernels as the single-chip path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import heap, selection
+from repro.core.heap import NeighborLists
+from repro.core.nn_descent import DescentConfig, _compact_pairs, _pair_block
+
+
+def _ring_perm(axis: str, size: int):
+    return [(i, (i + 1) % size) for i in range(size)]
+
+
+def exact_knn_sharded(mesh: Mesh, x: jax.Array, k: int, *, axis: str = "data"):
+    """Exact k-NN over points sharded along ``axis``. x: (n, d) global.
+
+    Returns (dist (n, k), idx (n, k) global ids), sharded like x.
+    """
+    P_ = mesh.shape[axis]
+    n, d = x.shape
+    assert n % P_ == 0, (n, P_)
+    n_local = n // P_
+
+    def shard_fn(x_local):
+        p = jax.lax.axis_index(axis)
+        my_ids = p * n_local + jnp.arange(n_local, dtype=jnp.int32)
+        x_local = x_local.astype(jnp.float32)
+        x2_local = jnp.sum(x_local * x_local, axis=1)
+
+        nl_d = jax.lax.pvary(jnp.full((n_local, k), jnp.inf, jnp.float32), (axis,))
+        nl_i = jax.lax.pvary(jnp.full((n_local, k), -1, jnp.int32), (axis,))
+
+        def step(s, carry):
+            nl_d, nl_i, block, block2 = carry
+            owner = (p - s) % P_
+            ids = owner * n_local + jnp.arange(n_local, dtype=jnp.int32)
+            dist = jnp.maximum(
+                x2_local[:, None] + block2[None, :] - 2.0 * x_local @ block.T,
+                0.0,
+            )
+            dist = jnp.where(ids[None, :] == my_ids[:, None], jnp.inf, dist)
+            neg, top = jax.lax.top_k(-dist, k)
+            cand_i = ids[top]
+            nld, nli, _ = _merge_topk(nl_d, nl_i, -neg, cand_i, k)
+            block = jax.lax.ppermute(block, axis, _ring_perm(axis, P_))
+            block2 = jax.lax.ppermute(block2, axis, _ring_perm(axis, P_))
+            return nld, nli, block, block2
+
+        nl_d, nl_i, _, _ = jax.lax.fori_loop(
+            0, P_, step, (nl_d, nl_i, x_local, x2_local)
+        )
+        return nl_d, nl_i
+
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=P(axis, None),
+        out_specs=(P(axis, None), P(axis, None)),
+    )
+    return fn(x)
+
+
+def _merge_topk(nl_d, nl_i, cand_d, cand_i, k):
+    nl = NeighborLists(nl_d, nl_i, jnp.zeros_like(nl_i, dtype=bool))
+    merged, upd = heap.merge(nl, cand_d, cand_i, cand_new=False)
+    return merged.dist, merged.idx, upd
+
+
+def _fetch_features_ring(x_local, needed_ids, axis: str, P_: int, n_local: int):
+    """Gather features for arbitrary global ids via the feature ring.
+    needed_ids: (m,) int32 (clipped >=0); returns (m, d) rows."""
+    m = needed_ids.shape[0]
+    d = x_local.shape[1]
+    p = jax.lax.axis_index(axis)
+    out = jax.lax.pvary(jnp.zeros((m, d), x_local.dtype), (axis,))
+
+    def step(s, carry):
+        out, block = carry
+        owner = (p - s) % P_
+        local = needed_ids - owner * n_local
+        hit = (local >= 0) & (local < n_local)
+        rows = block[jnp.clip(local, 0, n_local - 1)]
+        out = jnp.where(hit[:, None], rows, out)
+        block = jax.lax.ppermute(block, axis, _ring_perm(axis, P_))
+        return out, block
+
+    out, _ = jax.lax.fori_loop(0, P_, step, (out, x_local))
+    return out
+
+
+def fetch_rows_a2a(x_local, ids, *, axis: str, P_: int, n_local: int,
+                   cap: int):
+    """Request-routed feature fetch (§Perf iteration on the ring fetch).
+
+    The ring fetch rewrites the whole (m, d) output buffer P times —
+    O(P*m*d) HBM traffic. Here each shard instead SENDS its needed ids to
+    their owners (one all_to_all of (P, cap) ids), owners gather rows
+    locally, and one reverse all_to_all returns them in the same bucket
+    positions — O(cap*P*d) traffic total, independent of P's effect on
+    passes. Overflow beyond ``cap`` per destination is dropped and
+    reported in the returned mask (sampling noise, like every other
+    bounded buffer in NN-Descent).
+
+    Returns (rows (m, d), ok (m,) bool).
+    """
+    m = ids.shape[0]
+    d = x_local.shape[1]
+    p = jax.lax.axis_index(axis)
+    base = p * n_local
+    valid = ids >= 0
+    dest = jnp.clip(ids // n_local, 0, P_ - 1)
+    dest_k = jnp.where(valid, dest, P_)
+    order = jnp.argsort(dest_k)
+    dest_s = dest_k[order]
+    ids_s = ids[order]
+    first = jnp.searchsorted(dest_s, jnp.arange(P_ + 1), side="left")
+    pos = jnp.arange(m) - first[jnp.clip(dest_s, 0, P_)]
+    req = jnp.full((P_, cap), -1, jnp.int32)
+    req = req.at[dest_s, pos].set(ids_s, mode="drop")
+
+    got = jax.lax.all_to_all(req[:, None, :], axis, split_axis=0,
+                             concat_axis=0, tiled=False)[:, 0, :]
+    # rows requested FROM me (global ids owned here; -1 = empty slot)
+    loc = got - base
+    ok_here = (loc >= 0) & (loc < n_local)
+    rows = x_local[jnp.clip(loc, 0, n_local - 1)]
+    rows = jnp.where(ok_here[..., None], rows, 0.0)      # (P_, cap, d)
+    back = jax.lax.all_to_all(rows[:, None], axis, split_axis=0,
+                              concat_axis=0, tiled=False)[:, 0]
+
+    in_bucket = (dest_s < P_) & (pos >= 0) & (pos < cap)
+    fetched = back[jnp.clip(dest_s, 0, P_ - 1), jnp.clip(pos, 0, cap - 1)]
+    out = jnp.zeros((m, d), x_local.dtype)
+    out = out.at[order].set(jnp.where(in_bucket[:, None], fetched, 0.0))
+    ok = jnp.zeros((m,), bool).at[order].set(in_bucket)
+    return out, ok & (ids >= 0)
+
+
+def nn_descent_sharded_iteration(
+    key: jax.Array,
+    x_local: jax.Array,       # (n_local, d)
+    x2_local: jax.Array,      # (n_local,)
+    nl: NeighborLists,        # local rows, GLOBAL neighbor ids
+    cfg: DescentConfig,
+    *,
+    axis: str,
+    P_: int,
+    fetch: str = "a2a",       # a2a (optimized) | ring (baseline)
+):
+    """One sharded NN-Descent iteration (call under shard_map)."""
+    n_local, k = nl.idx.shape
+    p = jax.lax.axis_index(axis)
+    base = p * n_local
+
+    # ---- selection runs on LOCAL receiver rows; incidences whose receiver
+    # is remote are routed by all_to_all before compaction.
+    local_nl = NeighborLists(nl.dist, nl.idx, nl.new)
+    recv, cand, is_new, valid, is_fwd, slot = selection._incidences(local_nl)
+    # forward incidences: receiver = local row (global id base+row).
+    half = n_local * k
+    recv = jnp.concatenate(
+        [base + recv[:half], recv[half:]]  # second half already global ids
+    )
+    cand = jnp.concatenate([cand[:half], base + cand[half:]])
+
+    # turbosampling accept (reverse degree approximated by local counts
+    # all-reduced — global degree of each node needs its incidences which
+    # are distributed; we segment-sum into the owner's (n_local,) slice)
+    owner_rows = recv - base
+    deg_new_local = jax.ops.segment_sum(
+        (valid & is_new).astype(jnp.int32),
+        jnp.where((owner_rows >= 0) & (owner_rows < n_local), owner_rows, n_local),
+        num_segments=n_local + 1,
+    )[:n_local]
+    # remote-receiver incidences counted on their owner via psum of bincount
+    # over the global id space is O(n) — instead each shard uses k (forward
+    # degree) + its local reverse count as the |N| estimate. Exact global
+    # degree costs one extra all_to_all; the estimate only perturbs the
+    # accept probability (sampling stays unbiased per pool).
+    deg_new = k + deg_new_local
+    k_acc, k_rnd, key = jax.random.split(key, 3)
+    p_new = jnp.minimum(1.0, cfg.rho_k / jnp.maximum(deg_new, 1))
+    u = jax.random.uniform(k_acc, recv.shape)
+    p_edge = p_new[jnp.clip(owner_rows, 0, n_local - 1)]
+    p_edge = jnp.where(
+        (owner_rows >= 0) & (owner_rows < n_local), p_edge, cfg.rho_k / (2.0 * k)
+    )
+    acc_new = valid & is_new & (u < p_edge)
+    acc_old = valid & ~is_new & (u < p_edge)
+
+    # route accepted incidences to receiver owners (fixed buckets)
+    cap = max(2 * cfg.rho_k * max(n_local // max(P_, 1), 1), 8)
+    def route(acc_mask, subkey):
+        payload = jnp.stack([recv, cand], axis=1)
+        return _all_to_all_route(
+            payload, acc_mask, recv // n_local, P_, cap, axis, subkey
+        )
+
+    k_r1, k_r2, key = jax.random.split(key, 3)
+    got_new = route(acc_new, k_r1)        # (P_*cap, 2) rows targeting me
+    got_old = route(acc_old, k_r2)
+
+    def compact(got, c):
+        r = got[:, 0]
+        valid_r = r >= 0
+        rl = jnp.where(valid_r, r - base, -1)
+        rnd = jax.random.uniform(jax.random.fold_in(key, c), r.shape)
+        from repro.core.selection import _compact
+        return _compact(rl, got[:, 1], valid_r, rnd, n_local, c)
+
+    cand_new = compact(got_new, cfg.rho_k)
+    cand_old = compact(got_old, cfg.rho_k)
+
+    # clear sampled forward flags (local slots whose incidence was accepted)
+    sampled = jnp.zeros((n_local * k,), bool)
+    fwd_acc = acc_new[:half] & is_fwd[:half]
+    sampled = sampled.at[jnp.where(fwd_acc, slot[:half], 0)].max(fwd_acc)
+    nl = heap.mark_sampled_old(nl, sampled.reshape(n_local, k))
+
+    # ---- fetch candidate features, evaluate pair distances
+    cn, co = cand_new, cand_old
+    flat = jnp.concatenate([cn.reshape(-1), co.reshape(-1)])
+    if fetch == "a2a":
+        cap_f = max(2 * flat.shape[0] // max(P_, 1), 16)
+        feats, fok = fetch_rows_a2a(
+            x_local, flat, axis=axis, P_=P_, n_local=n_local, cap=cap_f)
+        # candidates whose fetch overflowed the bucket: invalidate
+        okn = fok[: cn.size].reshape(cn.shape)
+        oko = fok[cn.size:].reshape(co.shape)
+        cn = jnp.where(okn, cn, -1)
+        co = jnp.where(oko, co, -1)
+    else:
+        feats = _fetch_features_ring(
+            x_local, jnp.clip(flat, 0, P_ * n_local - 1), axis, P_, n_local
+        )
+    d_feat = feats.shape[1]
+    xg_n = feats[: cn.size].reshape(n_local, -1, d_feat)
+    xg_o = feats[cn.size :].reshape(n_local, -1, d_feat)
+    x2_n = jnp.sum(xg_n * xg_n, axis=-1)
+    x2_o = jnp.sum(xg_o * xg_o, axis=-1)
+    vn, vo = cn >= 0, co >= 0
+
+    d_nn = _pair_block(xg_n, x2_n, xg_n, x2_n)
+    d_no = _pair_block(xg_n, x2_n, xg_o, x2_o)
+
+    cn_b, co_b = cn.shape[1], co.shape[1]
+    iu = jnp.triu_indices(cn_b, k=1)
+    a_nn, b_nn = cn[:, iu[0]], cn[:, iu[1]]
+    dd_nn = d_nn[:, iu[0], iu[1]]
+    ok_nn = vn[:, iu[0]] & vn[:, iu[1]] & (a_nn != b_nn)
+    a_no = jnp.broadcast_to(cn[:, :, None], (n_local, cn_b, co_b)).reshape(n_local, -1)
+    b_no = jnp.broadcast_to(co[:, None, :], (n_local, cn_b, co_b)).reshape(n_local, -1)
+    dd_no = d_no.reshape(n_local, -1)
+    ok_no = (
+        jnp.broadcast_to(vn[:, :, None], (n_local, cn_b, co_b)).reshape(n_local, -1)
+        & jnp.broadcast_to(vo[:, None, :], (n_local, cn_b, co_b)).reshape(n_local, -1)
+        & (a_no != b_no)
+    )
+    a = jnp.concatenate([a_nn, b_nn, a_no, b_no], axis=1).reshape(-1)
+    b = jnp.concatenate([b_nn, a_nn, b_no, a_no], axis=1).reshape(-1)
+    dd = jnp.concatenate([dd_nn, dd_nn, dd_no, dd_no], axis=1).reshape(-1)
+    ok = jnp.concatenate([ok_nn, ok_nn, ok_no, ok_no], axis=1).reshape(-1)
+
+    # ---- route updates to receiver owners, merge locally
+    k_u, key = jax.random.split(key)
+    payload = jnp.stack([a, b, _f32_bits(dd)], axis=1)
+    cap_u = max(4 * cfg.merge_k * max(n_local // max(P_, 1), 1), 8)
+    got = _all_to_all_route(payload, ok, a // n_local, P_, cap_u, axis, k_u)
+    r = got[:, 0]
+    valid_r = r >= 0
+    rl = jnp.where(valid_r, r - base, -1)
+    cd, ci = _compact_pairs(
+        rl, got[:, 1], jnp.where(valid_r, _bits_f32(got[:, 2]), jnp.inf),
+        n_local, cfg.merge_k,
+    )
+    nl, upd = heap.merge(nl, cd, ci, cand_new=True)
+    n_evals = jnp.sum(ok_nn) + jnp.sum(ok_no)
+    total_upd = jax.lax.psum(jnp.sum(upd), axis)
+    total_ev = jax.lax.psum(n_evals, axis)
+    return nl, total_upd, total_ev
+
+
+def _f32_bits(x):
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _bits_f32(x):
+    return jax.lax.bitcast_convert_type(x.astype(jnp.int32), jnp.float32)
+
+
+def _all_to_all_route(payload, mask, dest, P_, cap, axis, key):
+    """Route rows of ``payload`` (m, w) to shard ``dest`` (m,) over ``axis``.
+    Fixed per-destination capacity ``cap``; overflow rows are dropped
+    (sampling noise, same contract as buffer compaction elsewhere).
+    Returns (P_*cap, w) rows received, invalid rows marked by -1 in col 0."""
+    m, w = payload.shape
+    dest = jnp.where(mask, dest, P_)
+    rnd = jax.random.uniform(key, (m,))
+    order = jnp.lexsort((rnd, dest))
+    dest_s = dest[order]
+    pay_s = payload[order]
+    first = jnp.searchsorted(dest_s, jnp.arange(P_ + 1), side="left")
+    pos = jnp.arange(m) - first[jnp.clip(dest_s, 0, P_)]
+    buckets = jnp.full((P_, cap, w), -1, dtype=payload.dtype)
+    buckets = buckets.at[dest_s, pos].set(pay_s, mode="drop")
+    got = jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0, tiled=False)
+    return got.reshape(P_ * cap, w)
+
+
+def make_sharded_iteration_lowerable(mesh: Mesh, *, n: int, d: int, k: int,
+                                     rho: float = 1.0,
+                                     fetch: str = "a2a"):
+    """Lowerable form of one sharded NN-Descent iteration for the dry-run.
+
+    The K-NN build is a pure data-parallel workload, so the production
+    mesh's two axes are flattened into one 'data' axis (all 256/512 chips
+    shard points). Returns (lowered, model_flops) where model_flops is the
+    paper's cost model for the iteration's distance evaluations in the
+    MXU expansion form (2d flops/pair/direction).
+    """
+    import numpy as _np
+    devs = _np.array(mesh.devices).reshape(-1)
+    flat = jax.sharding.Mesh(devs, ("data",))
+    P_ = devs.size
+    assert n % P_ == 0
+    n_local = n // P_
+    cfg = DescentConfig(k=k, rho=rho, reorder=False)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=flat,
+        in_specs=(P(), P("data", None), P("data", None), P("data", None),
+                  P("data", None)),
+        out_specs=((P("data", None), P("data", None), P("data", None)),
+                   P(), P()),
+        check_vma=False,
+    )
+    def iter_fn(key, x_local, d_, i_, n_):
+        x_local = x_local.astype(jnp.float32)
+        x2_local = jnp.sum(x_local * x_local, axis=1)
+        p = jax.lax.axis_index("data")
+        kk = jax.random.fold_in(key, p)
+        nl_local = NeighborLists(d_, i_, n_ > 0)
+        nl2, upd, ev = nn_descent_sharded_iteration(
+            kk, x_local, x2_local, nl_local, cfg, axis="data", P_=P_,
+            fetch=fetch)
+        return (nl2.dist, nl2.idx, nl2.new.astype(jnp.int8)), upd, ev
+
+    sds = jax.ShapeDtypeStruct
+    abstract = (
+        sds((), jax.random.key(0).dtype),
+        sds((n, d), jnp.float32),
+        sds((n, k), jnp.float32),
+        sds((n, k), jnp.int32),
+        sds((n, k), jnp.int8),
+    )
+    lowered = jax.jit(iter_fn).lower(*abstract)
+    rho_k = cfg.rho_k
+    pairs_per_node = rho_k * (rho_k - 1) / 2 + rho_k * rho_k
+    model_flops = n * pairs_per_node * 2.0 * d
+    return lowered, model_flops
+
+
+def build_knn_graph_sharded(
+    mesh: Mesh,
+    x: jax.Array,
+    k: int = 20,
+    *,
+    cfg: DescentConfig | None = None,
+    key: jax.Array | None = None,
+    axis: str = "data",
+):
+    """Driver: sharded NN-Descent. Returns (dist, idx-global, iters)."""
+    cfg = cfg or DescentConfig(k=k, reorder=False)
+    key = jax.random.key(0) if key is None else key
+    P_ = mesh.shape[axis]
+    n, d = x.shape
+    n_local = n // P_
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(axis, None)),
+        out_specs=(P(axis, None), P(axis, None), P()),
+        check_vma=False,
+    )
+    def init_fn(key, x_local):
+        p = jax.lax.axis_index(axis)
+        kk = jax.random.fold_in(key, p)
+        idx = jax.random.randint(kk, (n_local, k), 0, n, dtype=jnp.int32)
+        my = p * n_local + jnp.arange(n_local, dtype=jnp.int32)[:, None]
+        idx = jnp.where(idx == my, (idx + 1) % n, idx)
+        x_local = x_local.astype(jnp.float32)
+        feats = _fetch_features_ring(x_local, idx.reshape(-1), axis, P_, n_local)
+        feats = feats.reshape(n_local, k, -1)
+        dist = jnp.maximum(
+            jnp.sum(x_local * x_local, axis=1)[:, None]
+            + jnp.sum(feats * feats, axis=-1)
+            - 2.0 * jnp.einsum("nd,nkd->nk", x_local, feats),
+            0.0,
+        )
+        order = jnp.argsort(dist, axis=1)
+        return (
+            jnp.take_along_axis(dist, order, axis=1),
+            jnp.take_along_axis(idx, order, axis=1),
+            jnp.zeros((), jnp.int32),
+        )
+
+    dist0, idx0, _ = init_fn(key, x)
+    nl = NeighborLists(dist0, idx0, jnp.ones_like(idx0, dtype=bool))
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(), P(axis, None), P(axis, None), P(axis, None), P(axis, None),
+        ),
+        out_specs=(
+            (P(axis, None), P(axis, None), P(axis, None)), P(), P(),
+        ),
+        check_vma=False,
+    )
+    def iter_fn(key, x_local, d_, i_, n_):
+        x_local = x_local.astype(jnp.float32)
+        x2_local = jnp.sum(x_local * x_local, axis=1)
+        p = jax.lax.axis_index(axis)
+        kk = jax.random.fold_in(key, p)
+        nl_local = NeighborLists(d_, i_, n_ > 0)
+        nl2, upd, ev = nn_descent_sharded_iteration(
+            kk, x_local, x2_local, nl_local, cfg, axis=axis, P_=P_,
+            fetch=getattr(cfg, "fetch", "a2a"),
+        )
+        return (nl2.dist, nl2.idx, nl2.new.astype(jnp.int8)), upd, ev
+
+    total_ev = 0
+    for it in range(cfg.max_iters):
+        key, k_it = jax.random.split(key)
+        (d_, i_, nf), upd, ev = iter_fn(
+            k_it, x, nl.dist, nl.idx, nl.new.astype(jnp.int8)
+        )
+        nl = NeighborLists(d_, i_, nf > 0)
+        total_ev += int(ev)
+        if int(upd) <= cfg.delta * n * k:
+            break
+    return nl.dist, nl.idx, {"iters": it + 1, "dist_evals": total_ev}

@@ -1,0 +1,86 @@
+"""Query-time greedy best-first search over a built K-NN graph.
+
+This is the serving-side consumer of the paper's artifact: given the
+NN-Descent graph, answer nearest-neighbor queries by repeatedly expanding
+the closest unexpanded pool entry and merging its graph neighbors into the
+pool (NSW/NSG-style search restricted to the K-NN graph, fixed shapes:
+bounded pool, static expansion rounds). Used by serve/knn_lm.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+_BIG = 3.0e38
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "beam", "rounds"))
+def graph_search(
+    x: jax.Array,          # (n, d) corpus (feature-padded ok)
+    graph_idx: jax.Array,  # (n, k) neighbor ids
+    queries: jax.Array,    # (q, d)
+    *,
+    k_out: int = 10,
+    beam: int = 32,
+    rounds: int = 24,
+    entry: jax.Array | None = None,   # (e,) entry point ids
+    key: jax.Array | None = None,
+):
+    """Returns (dist (q, k_out), idx (q, k_out)) ascending."""
+    n, k = graph_idx.shape
+    x = x.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1)
+    if entry is None:
+        # one entry per beam slot: a K-NN graph over clustered data has no
+        # inter-cluster edges, so search can only reach clusters that hold
+        # an entry point — spread the whole beam across the corpus
+        key = jax.random.key(0) if key is None else key
+        entry = jax.random.randint(key, (beam,), 0, n)
+
+    def q_dist(q, ids):
+        rows = x[ids]
+        return jnp.maximum(
+            x2[ids] - 2.0 * rows @ q + jnp.sum(q * q), 0.0
+        )
+
+    def one_query(q):
+        pool_i = jnp.full((beam,), -1, dtype=jnp.int32)
+        pool_d = jnp.full((beam,), _BIG, dtype=jnp.float32)
+        pool_e = jnp.zeros((beam,), dtype=bool)   # expanded?
+        e = entry.shape[0]
+        pool_i = pool_i.at[:e].set(entry.astype(jnp.int32))
+        pool_d = pool_d.at[:e].set(q_dist(q, entry))
+
+        def round_fn(_, state):
+            pool_d, pool_i, pool_e = state
+            # best unexpanded entry
+            score = jnp.where(pool_e | (pool_i < 0), _BIG, pool_d)
+            b = jnp.argmin(score)
+            node = pool_i[b]
+            can = score[b] < _BIG
+            pool_e = pool_e.at[b].set(True)
+            nbrs = graph_idx[jnp.clip(node, 0, n - 1)]       # (k,)
+            nb_ok = (nbrs >= 0) & can
+            nd = jnp.where(nb_ok, q_dist(q, jnp.clip(nbrs, 0, n - 1)), _BIG)
+            # merge pool + neighbors, dedup by id, keep best `beam`
+            all_i = jnp.concatenate([pool_i, jnp.where(nb_ok, nbrs, -1)])
+            all_d = jnp.concatenate([pool_d, nd])
+            all_e = jnp.concatenate([pool_e, jnp.zeros((k,), bool)])
+            # dedup: mark later duplicates invalid (stable: pool first)
+            m = all_i.shape[0]
+            eq = all_i[:, None] == all_i[None, :]
+            earlier = jnp.tril(jnp.ones((m, m), bool), k=-1)
+            dup = (eq & earlier).any(-1) & (all_i >= 0)
+            all_d = jnp.where(dup | (all_i < 0), _BIG, all_d)
+            order = jnp.argsort(all_d)[:beam]
+            return all_d[order], all_i[order], all_e[order]
+
+        pool_d, pool_i, pool_e = jax.lax.fori_loop(
+            0, rounds, round_fn, (pool_d, pool_i, pool_e)
+        )
+        return pool_d[:k_out], pool_i[:k_out]
+
+    return jax.vmap(one_query)(queries.astype(jnp.float32))

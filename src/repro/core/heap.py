@@ -1,0 +1,130 @@
+"""Bounded, sorted neighbor lists — the vectorized form of NN-Descent's
+per-node "heap" (paper §3.1 removes real heaps; so do we, for the same
+reason on different hardware: heaps are pointer-chasing and cache-hostile
+on CPU, and dynamically-shaped and scatter-hostile on TPU).
+
+Representation: per node, k slots of (distance ascending, id), with
+(inf, -1) for empty slots, plus a "new" flag per slot for NN-Descent's
+incremental search.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class NeighborLists(NamedTuple):
+    dist: jax.Array   # (n, k) f32, ascending, inf = empty
+    idx: jax.Array    # (n, k) i32, -1 = empty
+    new: jax.Array    # (n, k) bool — not yet used in a join (incremental search)
+
+
+def init_random(key: jax.Array, n: int, k: int) -> NeighborLists:
+    """Uniform random initialization (paper §2), distances unevaluated (inf
+    would break the merge ordering, so we store +big and mark all new;
+    the first iteration's joins immediately replace them)."""
+    idx = jax.random.randint(key, (n, k), 0, n, dtype=jnp.int32)
+    # avoid self-loops: bump collisions by 1 (mod n)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    idx = jnp.where(idx == rows, (idx + 1) % n, idx)
+    dist = jnp.full((n, k), jnp.float32(3.0e38))
+    new = jnp.ones((n, k), dtype=bool)
+    return NeighborLists(dist, idx, new)
+
+
+def init_random_with_dists(
+    key: jax.Array, x: jax.Array, k: int, *, backend: str = "auto"
+) -> NeighborLists:
+    """Random init with true distances evaluated (chunked)."""
+    n = x.shape[0]
+    nl = init_random(key, n, k)
+    d = _gather_distances(x, nl.idx, backend=backend)
+    order = jnp.argsort(d, axis=1)
+    return NeighborLists(
+        jnp.take_along_axis(d, order, axis=1),
+        jnp.take_along_axis(nl.idx, order, axis=1),
+        jnp.ones((n, k), dtype=bool),
+    )
+
+
+def _gather_distances(
+    x: jax.Array, idx: jax.Array, *, backend: str = "auto"
+) -> jax.Array:
+    """d(x[i], x[idx[i, j]]) for all i, j — norm-expansion form."""
+    xf = x.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=1)
+    nb = xf[idx]                                     # (n, k, d)
+    ab = jnp.einsum("nd,nkd->nk", xf, nb)
+    out = x2[:, None] + x2[idx] - 2.0 * ab
+    return jnp.maximum(out, 0.0)
+
+
+def merge(
+    nl: NeighborLists,
+    cand_dist: jax.Array,
+    cand_idx: jax.Array,
+    cand_new: bool = True,
+    *,
+    backend: str = "auto",
+) -> tuple[NeighborLists, jax.Array]:
+    """Merge candidate (dist, id) pairs into the lists. Returns
+    (updated lists, per-node accepted count). Accepted slots get the
+    ``new`` flag; surviving slots keep theirs."""
+    n, k = nl.dist.shape
+    all_dist = jnp.concatenate([nl.dist, cand_dist], axis=1)
+    all_idx = jnp.concatenate([nl.idx, cand_idx], axis=1)
+    all_flag = jnp.concatenate(
+        [nl.new, jnp.full(cand_idx.shape, cand_new)], axis=1
+    )
+    # invalidate duplicates (candidate already present / repeated candidate)
+    c = cand_idx.shape[1]
+    dup_graph = (cand_idx[:, :, None] == nl.idx[:, None, :]).any(-1)
+    eq = cand_idx[:, :, None] == cand_idx[:, None, :]
+    earlier = jnp.tril(jnp.ones((c, c), dtype=bool), k=-1)[None]
+    dup = dup_graph | (eq & earlier).any(-1) | (cand_idx < 0)
+    all_dist = all_dist.at[:, k:].set(jnp.where(dup, jnp.inf, cand_dist))
+
+    order = jnp.argsort(all_dist, axis=1, stable=True)
+    new_dist = jnp.take_along_axis(all_dist, order[:, :k], axis=1)
+    new_idx = jnp.take_along_axis(all_idx, order[:, :k], axis=1)
+    new_flag = jnp.take_along_axis(all_flag, order[:, :k], axis=1)
+    accepted = (order[:, :k] >= k) & jnp.isfinite(new_dist)
+    updated = jnp.sum(accepted, axis=1).astype(jnp.int32)
+    return NeighborLists(new_dist, new_idx, new_flag), updated
+
+
+def merge_kernel(
+    nl: NeighborLists,
+    cand_dist: jax.Array,
+    cand_idx: jax.Array,
+    *,
+    backend: str = "auto",
+) -> tuple[NeighborLists, jax.Array]:
+    """Kernel-backed merge (flags recomputed as 'accepted == new')."""
+    new_dist, new_idx, updated = ops.knn_merge(
+        nl.dist, nl.idx, cand_dist, cand_idx, backend=backend
+    )
+    # a slot is new iff it was not already present in the old list
+    was_old = (new_idx[:, :, None] == nl.idx[:, None, :]).any(-1)
+    keep_flag = jnp.where(
+        was_old,
+        # carry the old flag for surviving slots
+        _lookup_flags(nl, new_idx),
+        True,
+    )
+    return NeighborLists(new_dist, new_idx, keep_flag & (new_idx >= 0)), updated
+
+
+def _lookup_flags(nl: NeighborLists, ids: jax.Array) -> jax.Array:
+    hit = ids[:, :, None] == nl.idx[:, None, :]
+    return (hit & nl.new[:, None, :]).any(-1)
+
+
+def mark_sampled_old(nl: NeighborLists, sampled_mask: jax.Array) -> NeighborLists:
+    """Clear the 'new' flag of forward slots that were sampled this round
+    (NN-Descent incremental search: a pair is joined at most once)."""
+    return nl._replace(new=nl.new & ~sampled_mask)

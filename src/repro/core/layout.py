@@ -1,0 +1,43 @@
+"""Memory-layout helpers (paper §3.3 "mem-align", TPU form).
+
+The paper pads/aligns points to 256-bit AVX2 boundaries. The TPU analog is
+(8, 128) VREG tiling and 128-lane MXU alignment: we pad the feature axis to
+a multiple of 128 and the point axis to a multiple of 8 so every gather and
+matmul tile is layout-native. Zero padding is exact for squared-l2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+LANE = 128
+SUBLANE = 8
+
+
+def ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_features(x: jax.Array, lane: int = LANE) -> jax.Array:
+    """Pad (n, d) -> (n, ceil(d/lane)*lane) with zeros (exact for sq-l2)."""
+    n, d = x.shape
+    dp = ceil_to(d, lane)
+    if dp == d:
+        return x
+    return jnp.pad(x, ((0, 0), (0, dp - d)))
+
+
+def pad_points(x: jax.Array, mult: int = SUBLANE) -> tuple[jax.Array, int]:
+    """Pad point axis to a multiple; returns (padded, original_n).
+
+    Padded rows are set to +large coordinates so they are never anyone's
+    nearest neighbor while keeping distances finite (no inf propagation
+    through the MXU path).
+    """
+    n, d = x.shape
+    np_ = ceil_to(n, mult)
+    if np_ == n:
+        return x, n
+    fill = jnp.full((np_ - n, d), 1e6, dtype=x.dtype)
+    return jnp.concatenate([x, fill], axis=0), n

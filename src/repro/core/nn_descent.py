@@ -1,0 +1,216 @@
+"""NN-Descent (Dong et al., WWW'11) — fixed-shape JAX implementation with
+the paper's optimizations (turbosampling selection, blocked distance
+evaluation, greedy memory reordering).
+
+One iteration (jitted, static shapes):
+  1. selection (core/selection.py): bounded new/old candidate buffers
+  2. local joins: all new x new and new x old candidate pairs get their
+     squared-l2 distance via the norm-expansion (MXU) form with cached
+     squared norms — the batched counterpart of kernels/l2_blocked.py
+  3. update routing: each evaluated pair is a candidate for BOTH endpoints;
+     the flattened (receiver, candidate, dist) list is compacted into
+     per-node merge buffers by a (receiver, dist) sort — keeping the best
+     C_m per node — and merged into the bounded neighbor lists
+  4. convergence: stop when accepted updates < delta * n * k
+
+The driver runs iterations from Python so the greedy reorder (paper §3.2)
+can permute the point array between iterations (the permutation changes
+array contents, not shapes, so the jitted iteration is reused).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heap, selection
+from repro.core.heap import NeighborLists
+from repro.core.layout import pad_features
+from repro.core.reorder import apply_permutation, greedy_reorder
+
+
+@dataclasses.dataclass(frozen=True)
+class DescentConfig:
+    k: int = 20
+    rho: float = 0.5           # sample rate: rho*k candidates per pool
+    max_iters: int = 12
+    delta: float = 0.001       # stop when updates < delta*n*k (paper §2)
+    merge_size: int = 0        # merge buffer per node (0 = 3*k)
+    selection: str = "turbo"   # turbo | heap | naive  (paper's 3 tiers)
+    reorder: bool = True       # paper §3.2 greedy reordering
+    reorder_after: int = 1     # run reorder after this iteration (1 = paper)
+    backend: str = "auto"      # kernel dispatch (auto|pallas|interpret|ref)
+    block_k: int = 512         # feature-axis block for norm expansion
+    fetch: str = "a2a"         # distributed feature fetch: a2a | ring
+
+    @property
+    def rho_k(self) -> int:
+        return max(1, int(round(self.rho * self.k)))
+
+    @property
+    def merge_k(self) -> int:
+        return self.merge_size or 3 * self.k
+
+
+@dataclasses.dataclass
+class DescentStats:
+    iters: int = 0
+    dist_evals: int = 0
+    updates: tuple = ()
+    reordered: bool = False
+
+    def flops(self, d: int) -> int:
+        """Paper §2 cost model: d subs + d mults + (d-1) adds per eval."""
+        return self.dist_evals * (3 * d - 1)
+
+
+_SELECT: dict[str, Callable] = {
+    "turbo": selection.selection_turbo,
+    "heap": selection.selection_heap,
+    "naive": selection.selection_naive,
+}
+
+
+def _pair_block(xg: jax.Array, x2g: jax.Array, yg: jax.Array, y2g: jax.Array):
+    """Batched norm-expansion distances: (n,a,d)x(n,b,d) -> (n,a,b)."""
+    ab = jnp.einsum(
+        "nad,nbd->nab", xg, yg, preferred_element_type=jnp.float32
+    )
+    out = x2g[:, :, None] + y2g[:, None, :] - 2.0 * ab
+    return jnp.maximum(out, 0.0)
+
+
+def _compact_pairs(recv, cand, dist, n: int, c: int):
+    """Group flattened (receiver, candidate, dist) updates into per-node
+    (n, c) buffers keeping the c best (smallest distance) per receiver."""
+    valid = recv >= 0
+    key_recv = jnp.where(valid, recv, n)
+    order = jnp.lexsort((dist, key_recv))
+    recv_s = key_recv[order]
+    cand_s = cand[order]
+    dist_s = dist[order]
+    first = jnp.searchsorted(recv_s, jnp.arange(n + 1), side="left")
+    pos = jnp.arange(recv_s.shape[0]) - first[jnp.clip(recv_s, 0, n)]
+    out_i = jnp.full((n, c), -1, dtype=jnp.int32)
+    out_d = jnp.full((n, c), jnp.inf, dtype=jnp.float32)
+    out_i = out_i.at[recv_s, pos].set(cand_s, mode="drop")
+    out_d = out_d.at[recv_s, pos].set(dist_s, mode="drop")
+    return out_d, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def nn_descent_iteration(
+    key: jax.Array,
+    x: jax.Array,          # (n, d) — feature-padded
+    x2: jax.Array,         # (n,) cached squared norms (beyond-paper reuse)
+    nl: NeighborLists,
+    cfg: DescentConfig,
+):
+    n, k = nl.idx.shape
+    cands = _SELECT[cfg.selection](key, nl, cfg.rho_k)
+    nl = heap.mark_sampled_old(nl, cands.sampled_fwd)
+
+    cn = cands.new_idx          # (n, Cn)
+    co = cands.old_idx          # (n, Co)
+    vn = cn >= 0
+    vo = co >= 0
+    xg_n = x[jnp.where(vn, cn, 0)]
+    xg_o = x[jnp.where(vo, co, 0)]
+    x2_n = jnp.where(vn, x2[jnp.where(vn, cn, 0)], 0.0)
+    x2_o = jnp.where(vo, x2[jnp.where(vo, co, 0)], 0.0)
+
+    d_nn = _pair_block(xg_n, x2_n, xg_n, x2_n)   # (n, Cn, Cn)
+    d_no = _pair_block(xg_n, x2_n, xg_o, x2_o)   # (n, Cn, Co)
+
+    cn_b = cn.shape[1]
+    co_b = co.shape[1]
+    iu = jnp.triu_indices(cn_b, k=1)
+    # --- new x new (unordered pairs i<j, both directions)
+    a_nn = cn[:, iu[0]]
+    b_nn = cn[:, iu[1]]
+    dd_nn = d_nn[:, iu[0], iu[1]]
+    ok_nn = vn[:, iu[0]] & vn[:, iu[1]] & (a_nn != b_nn)
+    # --- new x old (all pairs, both directions)
+    a_no = jnp.broadcast_to(cn[:, :, None], (n, cn_b, co_b)).reshape(n, -1)
+    b_no = jnp.broadcast_to(co[:, None, :], (n, cn_b, co_b)).reshape(n, -1)
+    dd_no = d_no.reshape(n, -1)
+    ok_no = (
+        jnp.broadcast_to(vn[:, :, None], (n, cn_b, co_b)).reshape(n, -1)
+        & jnp.broadcast_to(vo[:, None, :], (n, cn_b, co_b)).reshape(n, -1)
+        & (a_no != b_no)
+    )
+
+    a = jnp.concatenate([a_nn, b_nn, a_no, b_no], axis=1).reshape(-1)
+    b = jnp.concatenate([b_nn, a_nn, b_no, a_no], axis=1).reshape(-1)
+    dd = jnp.concatenate([dd_nn, dd_nn, dd_no, dd_no], axis=1).reshape(-1)
+    ok = jnp.concatenate([ok_nn, ok_nn, ok_no, ok_no], axis=1).reshape(-1)
+
+    # receiver-side prefilter: only pairs beating the receiver's current
+    # k-th distance can change the graph (saves the sort+merge cost)
+    kth = nl.dist[:, -1]
+    ok &= dd < kth[jnp.where(ok, a, 0)]
+    recv = jnp.where(ok, a, -1)
+
+    cand_d, cand_i = _compact_pairs(recv, b, dd, n, cfg.merge_k)
+    nl, upd = heap.merge(nl, cand_d, cand_i, cand_new=True)
+
+    n_evals = jnp.sum(ok_nn) + jnp.sum(ok_no)   # unordered evaluations
+    return nl, jnp.sum(upd), n_evals
+
+
+def build_knn_graph(
+    x: jax.Array,
+    k: int = 20,
+    *,
+    cfg: DescentConfig | None = None,
+    key: jax.Array | None = None,
+    callback: Callable | None = None,
+):
+    """Build an approximate K-NN graph of x (n, d), squared-l2 metric.
+
+    Returns (dist (n,k) f32 ascending, idx (n,k) i32 in ORIGINAL ids,
+    stats). Deterministic given ``key``.
+    """
+    cfg = cfg or DescentConfig(k=k)
+    if cfg.k != k:
+        cfg = dataclasses.replace(cfg, k=k)
+    key = jax.random.key(0) if key is None else key
+    n = x.shape[0]
+    xp = pad_features(x.astype(jnp.float32))
+    x2 = jnp.sum(xp * xp, axis=1)
+
+    k_init, key = jax.random.split(key)
+    nl = heap.init_random_with_dists(k_init, xp, cfg.k)
+    stats = DescentStats(dist_evals=n * cfg.k)
+    # running permutation: perm[new_pos] = original id
+    perm = jnp.arange(n, dtype=jnp.int32)
+
+    updates = []
+    for it in range(cfg.max_iters):
+        key, k_it = jax.random.split(key)
+        nl, upd, ev = nn_descent_iteration(k_it, xp, x2, nl, cfg)
+        upd = int(upd)
+        stats.dist_evals += int(ev)
+        updates.append(upd)
+        stats.iters = it + 1
+        if callback is not None:
+            callback(it, upd, nl)
+        if cfg.reorder and it + 1 == cfg.reorder_after:
+            sigma, sigma_inv = greedy_reorder(nl)
+            xp, nl = apply_permutation(xp, nl, sigma, sigma_inv)
+            x2 = x2[sigma_inv]
+            perm = perm[sigma_inv]
+            stats.reordered = True
+        if upd <= cfg.delta * n * cfg.k:
+            break
+    stats.updates = tuple(updates)
+
+    # map back to original ids: row r describes original node perm[r]
+    dist = jnp.zeros_like(nl.dist).at[perm].set(nl.dist)
+    idx = jnp.full_like(nl.idx, -1).at[perm].set(
+        jnp.where(nl.idx >= 0, perm[jnp.clip(nl.idx, 0, n - 1)], -1)
+    )
+    return dist, idx, stats

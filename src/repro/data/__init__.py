@@ -1,0 +1,11 @@
+from repro.data.pipeline import DataConfig, SyntheticLMSource, TokenPipeline, pack_documents
+from repro.data.ordering import mean_pool_embeddings, semantic_order
+
+__all__ = [
+    "DataConfig",
+    "SyntheticLMSource",
+    "TokenPipeline",
+    "mean_pool_embeddings",
+    "pack_documents",
+    "semantic_order",
+]

@@ -1,0 +1,17 @@
+# The paper's compute hot-spots as Pallas TPU kernels:
+#   l2_blocked      — §3.3 blocked distance evaluations (MXU tiling)
+#   knn_merge       — §2 bounded neighbor-list update
+#   flash_attention — LM-stack attention hotspot (blocked online softmax)
+# ops.py = jit'd dispatch wrappers, ref.py = pure-jnp oracles.
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.knn_merge import knn_merge_blocked
+from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "knn_merge_blocked",
+    "pairwise_sq_l2_blocked",
+]

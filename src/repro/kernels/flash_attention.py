@@ -1,0 +1,138 @@
+"""Blocked (flash-style) attention kernel — the LM stack's compute hotspot.
+
+Standard online-softmax tiling: the grid is (batch*heads, q blocks, kv
+blocks) with the kv axis innermost; running max/denominator and the output
+accumulator live in VMEM scratch and are rescaled per kv block. Supports
+causal masking, sliding windows (gemma2 local layers), logit softcapping
+(gemma2), GQA (kv-head folding happens in the index maps, so kv tiles are
+fetched once per q-head group member — the VMEM pipeline dedups the loads),
+and a q position offset for decode.
+
+This kernel is the TPU target; the model stack's default path on CPU is the
+numerically identical chunked-scan implementation in models/attention.py
+(same cost structure, pure HLO), and tests assert both against ref.attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_TQ = 256
+DEFAULT_TK = 512
+_NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int | None,
+    softcap: float | None, q_offset: int, tq: int, tk: int,
+):
+    jq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (TQ, Dh)
+    k = k_ref[0].astype(jnp.float32)            # (TK, Dh)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (TQ, TK)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos = q_offset + jq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    kpos = jk * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_ref[...]                          # (TQ, 1)
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(jk == pl.num_programs(2) - 1)
+    def _final():
+        l = l_ref[...]
+        o_ref[0] = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "q_offset", "tq", "tk", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,              # (B, Lq, H, Dh)
+    k: jax.Array,              # (B, Lk, Hkv, Dh)
+    v: jax.Array,              # (B, Lk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    tq: int = DEFAULT_TQ,
+    tk: int = DEFAULT_TK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Lq, H, Dh = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    tq = min(tq, Lq)
+    tk = min(tk, Lk)
+    if Lq % tq or Lk % tk:
+        raise ValueError(f"Lq={Lq} % tq={tq} or Lk={Lk} % tk={tk} != 0")
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Lq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Lk, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Lk, Dh)
+
+    def kv_index(bh, jq_, jk_):
+        # fold the q head onto its kv head: bh = b*H + h -> b*Hkv + h//rep
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // rep, jk_, 0)
+
+    kern = functools.partial(
+        _flash_kernel, scale=1.0 / (Dh ** 0.5), causal=causal,
+        window=window, softcap=softcap, q_offset=q_offset, tq=tq, tk=tk,
+    )
+    of = pl.pallas_call(
+        kern,
+        grid=(B * H, Lq // tq, Lk // tk),
+        in_specs=[
+            pl.BlockSpec((1, tq, Dh), lambda bh, jq_, jk_: (bh, jq_, 0)),
+            pl.BlockSpec((1, tk, Dh), kv_index),
+            pl.BlockSpec((1, tk, Dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, tq, Dh), lambda bh, jq_, jk_: (bh, jq_, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lq, Dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return of.reshape(B, H, Lq, Dh).transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Bounded neighbor-list merge kernel (paper §2 "calculate and update").
+
+NN-Descent keeps, per node, a sorted bounded list of its k current nearest
+neighbors. Each iteration produces a batch of candidate (id, distance)
+pairs per node which must be merged into that list with deduplication.
+
+The paper does this with scalar sorted-array insertion; the TPU form is a
+row-blocked kernel: TM rows are processed per grid step, and the merge is a
+k-step vectorized selection (each step extracts the row-wise minimum of the
+remaining pool of current-neighbors + candidates). k is small (20 in all
+paper experiments) so the unrolled k x (k + c) compare network stays in
+VREGs — the analog of the paper keeping its 25 accumulators in registers.
+
+Outputs the merged sorted lists and the per-row accepted-candidate count
+(the convergence counter c in the NN-Descent stopping rule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TM = 256
+_BIG = float(jnp.finfo(jnp.float32).max)
+
+
+def _merge_kernel(cd_ref, ci_ref, qd_ref, qi_ref, od_ref, oi_ref, upd_ref, *, k: int):
+    cur_d = cd_ref[...]          # (TM, K) ascending
+    cur_i = ci_ref[...]          # (TM, K)
+    cand_d = qd_ref[...]         # (TM, C)
+    cand_i = qi_ref[...]         # (TM, C)
+
+    # --- dedup: candidate already in list, duplicate candidate, or invalid
+    dup = cand_i < 0
+    for j in range(k):
+        dup |= cand_i == cur_i[:, j][:, None]
+    c = cand_d.shape[1]
+    eq = cand_i[:, :, None] == cand_i[:, None, :]
+    earlier = jnp.tril(jnp.ones((c, c), dtype=bool), k=-1)[None]
+    dup |= (eq & earlier).any(-1)
+    cand_d = jnp.where(dup, _BIG, cand_d)
+
+    # --- k-step vectorized min-extraction merge (iota+select one-hot form:
+    # no gathers/fancy indexing, so every step stays VPU-native)
+    pool_d = jnp.concatenate([jnp.where(jnp.isinf(cur_d), _BIG, cur_d), cand_d], axis=1)
+    pool_i = jnp.concatenate([cur_i, cand_i], axis=1)
+    is_cand = jnp.concatenate(
+        [jnp.zeros(cur_d.shape, bool), jnp.ones(cand_d.shape, bool)], axis=1
+    )
+    lane = jax.lax.broadcasted_iota(jnp.int32, pool_d.shape, 1)
+    out_d = []
+    out_i = []
+    n_upd = jnp.zeros((cur_d.shape[0],), jnp.int32)
+    for _t in range(k):
+        amin = jnp.argmin(pool_d, axis=1)                      # (TM,)
+        onehot = lane == amin[:, None]
+        dmin = jnp.min(pool_d, axis=1)
+        imin = jnp.sum(jnp.where(onehot, pool_i, 0), axis=1)
+        took_cand = jnp.any(onehot & is_cand, axis=1) & (dmin < _BIG)
+        n_upd += took_cand.astype(jnp.int32)
+        out_d.append(jnp.where(dmin < _BIG, dmin, jnp.inf))
+        out_i.append(jnp.where(dmin < _BIG, imin, -1))
+        pool_d = jnp.where(onehot, _BIG, pool_d)
+    od_ref[...] = jnp.stack(out_d, axis=1)
+    oi_ref[...] = jnp.stack(out_i, axis=1)
+    upd_ref[...] = n_upd[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def knn_merge_blocked(
+    cur_dist: jax.Array,   # (n, k) ascending, +inf = empty slot
+    cur_idx: jax.Array,    # (n, k) int32, -1 = empty
+    cand_dist: jax.Array,  # (n, c) f32
+    cand_idx: jax.Array,   # (n, c) int32, -1 = invalid
+    *,
+    tm: int = DEFAULT_TM,
+    interpret: bool = False,
+):
+    n, k = cur_dist.shape
+    c = cand_dist.shape[1]
+    npad = ((n + tm - 1) // tm) * tm
+    pad = npad - n
+    cur_dist = jnp.pad(cur_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    cur_idx = jnp.pad(cur_idx, ((0, pad), (0, 0)), constant_values=-1)
+    cand_dist = jnp.pad(cand_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    cand_idx = jnp.pad(cand_idx, ((0, pad), (0, 0)), constant_values=-1)
+
+    kern = functools.partial(_merge_kernel, k=k)
+    od, oi, upd = pl.pallas_call(
+        kern,
+        grid=(npad // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, c), lambda i: (i, 0)),
+            pl.BlockSpec((tm, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, k), jnp.float32),
+            jax.ShapeDtypeStruct((npad, k), jnp.int32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cur_dist, cur_idx, cand_dist, cand_idx)
+    return od[:n], oi[:n], upd[:n, 0]

@@ -1,0 +1,95 @@
+"""Public jit'd wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas kernels run compiled (interpret=False); everywhere else
+(this container is CPU) the same kernel bodies execute under interpret=True
+when explicitly requested, and by default we dispatch to the pure-jnp
+oracles in ref.py, which are numerically identical and compile to efficient
+HLO. Tests exercise the interpret=True path against the oracles across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.knn_merge import knn_merge_blocked
+from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_sq_l2(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    backend: str = "auto",   # auto | pallas | interpret | ref
+    tm: int = 128,
+    tn: int = 128,
+    tk: int = 512,
+) -> jax.Array:
+    """Pairwise squared-l2 distances, (M, D) x (N, D) -> (M, N) f32."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return pairwise_sq_l2_blocked(a, b, tm=tm, tn=tn, tk=tk)
+    if backend == "interpret":
+        return pairwise_sq_l2_blocked(a, b, tm=tm, tn=tn, tk=tk, interpret=True)
+    return ref.pairwise_sq_l2(a, b)
+
+
+def knn_merge(
+    cur_dist: jax.Array,
+    cur_idx: jax.Array,
+    cand_dist: jax.Array,
+    cand_idx: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Merge candidates into sorted bounded k-NN lists (dedup by id)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_merge_blocked(cur_dist, cur_idx, cand_dist, cand_idx)
+    if backend == "interpret":
+        return knn_merge_blocked(
+            cur_dist, cur_idx, cand_dist, cand_idx, interpret=True
+        )
+    return ref.knn_merge(cur_dist, cur_idx, cand_dist, cand_idx)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    backend: str = "auto",
+) -> jax.Array:
+    """Blocked attention. The model stack calls models.attention (chunked
+    scan) for large shapes; this wrapper is the kernel-level entry point."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset,
+        )
+    if backend == "interpret":
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, interpret=True,
+            tq=min(128, q.shape[1]), tk=min(128, k.shape[1]),
+        )
+    return ref.attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset,
+    )

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations the kernels are validated
+against (tests sweep shapes/dtypes and ``assert_allclose`` kernel vs ref).
+They are also the CPU fallback used when running on a non-TPU backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Pairwise squared-l2 distance (paper §3.3, "blocked")
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_l2_diff(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Direct diff-square-sum form — the paper's AVX FMA ladder.
+
+    a: (M, D), b: (N, D) -> (M, N) float32. Numerically the most faithful
+    form (no cancellation); O(M*N*D) loads without blocking.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    diff = a[:, None, :] - b[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pairwise_sq_l2(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Norm-expansion form: ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b^T.
+
+    This is the MXU-friendly form the Pallas kernel implements. fp32
+    accumulation, clamped at zero (cancellation guard).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=-1)
+    b2 = jnp.sum(b * b, axis=-1)
+    ab = a @ b.T
+    out = a2[:, None] + b2[None, :] - 2.0 * ab
+    return jnp.maximum(out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Bounded top-k neighbor-list merge (paper §2 "calculate and update")
+# ---------------------------------------------------------------------------
+
+def knn_merge(
+    cur_dist: jax.Array,   # (n, k) ascending
+    cur_idx: jax.Array,    # (n, k)
+    cand_dist: jax.Array,  # (n, c)
+    cand_idx: jax.Array,   # (n, c)  (-1 = invalid slot)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge candidates into sorted k-NN lists, deduplicating by id.
+
+    Returns (new_dist, new_idx, updated) where ``updated`` is the per-row
+    count of accepted candidates (the NN-Descent convergence counter).
+    """
+    n, k = cur_dist.shape
+    # Invalidate candidates that already sit in the row's neighbor list or
+    # that duplicate an earlier candidate in the same row.
+    dup_graph = (cand_idx[:, :, None] == cur_idx[:, None, :]).any(-1)
+    c = cand_idx.shape[1]
+    dup_self = jnp.zeros_like(dup_graph)
+    eq = cand_idx[:, :, None] == cand_idx[:, None, :]
+    earlier = jnp.tril(jnp.ones((c, c), dtype=bool), k=-1)[None]
+    dup_self = (eq & earlier).any(-1)
+    invalid = dup_graph | dup_self | (cand_idx < 0)
+    cand_dist = jnp.where(invalid, jnp.inf, cand_dist)
+
+    all_dist = jnp.concatenate([cur_dist, cand_dist], axis=1)
+    all_idx = jnp.concatenate([cur_idx, cand_idx], axis=1)
+    order = jnp.argsort(all_dist, axis=1, stable=True)
+    new_dist = jnp.take_along_axis(all_dist, order[:, :k], axis=1)
+    new_idx = jnp.take_along_axis(all_idx, order[:, :k], axis=1)
+    # a candidate was accepted iff it landed in the first k slots
+    accepted = order[:, :k] >= k
+    updated = jnp.sum(accepted & jnp.isfinite(new_dist), axis=1)
+    return new_dist, new_idx, updated
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (blocked attention for the LM stack)
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jax.Array,              # (B, Lq, H, Dh)
+    k: jax.Array,              # (B, Lk, Hkv, Dh)
+    v: jax.Array,              # (B, Lk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference multi-head attention with GQA, sliding window, softcap.
+
+    q_offset: absolute position of q[0] (for decode: q_offset = cache_len).
+    """
+    B, Lq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Lq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Lq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

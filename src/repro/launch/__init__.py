@@ -1,0 +1,19 @@
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+    make_test_mesh,
+)
+from repro.launch.roofline import Roofline, model_flops_step, parse_collectives
+
+__all__ = [
+    "HBM_BW",
+    "ICI_BW_PER_LINK",
+    "PEAK_FLOPS_BF16",
+    "Roofline",
+    "make_production_mesh",
+    "make_test_mesh",
+    "model_flops_step",
+    "parse_collectives",
+]

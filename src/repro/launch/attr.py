@@ -1,0 +1,138 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Byte-attribution over compiled HLO: which op sites (x loop multipliers)
+# dominate the memory term. The §Perf hypothesis-forming tool.
+#   PYTHONPATH=src python -m repro.launch.attr --cell knn --variant a2a
+
+import argparse
+import json
+from collections import defaultdict
+
+from repro.launch import hlo_cost as H
+
+
+def attribute(text: str, top: int = 25):
+    comps = H.parse_module(text)
+    # multipliers per computation
+    mult = defaultdict(float)
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops:
+            for _, callee in H._called_comps(op):
+                referenced.add(callee)
+    entry = next((n for n in comps if n not in referenced
+                  and n.startswith("main")), None)
+    if entry is None:
+        entry = next(n for n in comps if n not in referenced)
+
+    def walk(name, m):
+        mult[name] += m
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "while":
+                trip = H._trip_count(op)
+                for key, callee in H._called_comps(op):
+                    walk(callee, m * (trip if key == "body" else trip + 1))
+            elif op.kind == "conditional":
+                br = [cc for _, cc in H._called_comps(op)]
+                for cc in br:
+                    walk(cc, m / max(len(br), 1))
+            elif op.kind == "fusion":
+                pass          # costed at call site
+            else:
+                for _, callee in H._called_comps(op):
+                    walk(callee, m)
+    walk(entry, 1.0)
+
+    memo: dict = {}
+
+    def comp_bytes(name):
+        """bytes of one execution of computation `name` (for fusion
+        internals), memoized."""
+        if name in memo:
+            return memo[name]
+        memo[name] = 0.0
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0
+        t = 0.0
+        for op in comp.ops:
+            t += site_bytes(op, comp)
+        memo[name] = t
+        return t
+
+    def site_bytes(op, comp):
+        if op.kind == "fusion":
+            call_site = H._op_bytes(op, comp)
+            internal = 0.0
+            dus = None
+            for _, callee in H._called_comps(op):
+                internal += comp_bytes(callee)
+                cc = comps.get(callee)
+                if cc is not None and dus is None:
+                    dus = H._root_dus_update_bytes(cc)
+            out_b = H._shape_bytes(op.out_shape)
+            if dus is not None:
+                return max(call_site - 2 * out_b, 0) + 2 * dus
+            if internal > 0:
+                return max(min(call_site, internal), out_b)
+            return call_site
+        if op.kind in ("while", "conditional"):
+            return 0.0       # attributed through children
+        return H._op_bytes(op, comp)
+
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for op in comp.ops:
+            b = site_bytes(op, comp) * m
+            if b > 0:
+                meta = ""
+                i = op.attrs.find('op_name="')
+                if i >= 0:
+                    meta = op.attrs[i + 9: i + 120].split('"')[0]
+                rows.append((b, op.kind, name, op.name, m, meta))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    from repro.launch.perf import VARIANTS, lower_knn_variant, lower_train_variant
+    # re-lower, keep the hlo text
+    import repro.launch.dryrun as dr
+    captured = {}
+    orig = dr._finish
+
+    def capture(lowered, mesh, kind, mf):
+        compiled = lowered.compile()
+        captured["text"] = compiled.as_text()
+        return {"kind": kind, "memory": {}, "roofline": {},
+                "collectives": {}}
+
+    dr._finish = capture
+    import repro.launch.perf as perf
+    perf._finish = capture
+    try:
+        perf.VARIANTS[args.cell][args.variant]()
+    finally:
+        dr._finish = orig
+        perf._finish = orig
+    rows = attribute(captured["text"], args.top)
+    tot = sum(r[0] for r in rows)
+    print(f"top-{args.top} byte sites (sum {tot:.3e}):")
+    for b, kind, comp, op, m, meta in rows:
+        print(f"{b:10.3e}  {kind:22s} x{m:<8.0f} {meta[:80]}")
+
+
+if __name__ == "__main__":
+    main()

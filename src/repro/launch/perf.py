@@ -1,0 +1,180 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# §Perf hillclimb driver: lower named VARIANTS of the three chosen cells,
+# extract roofline terms, and write results/perf/<cell>__<variant>.json.
+# The EXPERIMENTS.md §Perf log records hypothesis -> change -> before ->
+# after for each variant, in order.
+#
+#   PYTHONPATH=src python -m repro.launch.perf --cell knn --variant ring
+#   PYTHONPATH=src python -m repro.launch.perf --cell mamba --all
+#
+# Cells:
+#   knn    = knn-build x knn_1m_256   (paper-representative)
+#   mamba  = mamba2-130m x train_4k   (worst roofline fraction)
+#   moe    = deepseek-v2-lite x train_4k (most collective-bound)
+
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, batch_specs, get_config, input_specs
+from repro.launch.dryrun import _finish, _train_cfg
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops_step
+from repro.models import abstract_tree, active_param_count, model_schema, sharding_tree
+from repro.models.sharding import activation_mesh
+from repro.train import TrainConfig, make_train_step
+from repro.train import optimizer as opt_mod
+
+
+def lower_train_variant(arch: str, shape: str, cfg_overrides: dict,
+                        microbatches: int = 4):
+    cfg = _train_cfg(get_config(arch))
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    mesh = make_production_mesh()
+    s = SHAPES[shape]
+    schema = model_schema(cfg)
+    params_abs = abstract_tree(schema)
+    params_sp = sharding_tree(schema, mesh)
+    opt_abs = opt_mod.abstract_init(params_abs)
+    opt_sp = opt_mod.AdamState(
+        jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        params_sp, params_sp)
+    batch_abs = input_specs(cfg, shape)
+    batch_sp = batch_specs(cfg, shape, mesh)
+    step = make_train_step(cfg, TrainConfig(microbatches=microbatches))
+    with activation_mesh(mesh):
+        lowered = jax.jit(
+            step, in_shardings=(params_sp, opt_sp, batch_sp),
+            out_shardings=(params_sp, opt_sp, None),
+            donate_argnums=(0, 1),
+        ).lower(params_abs, opt_abs, batch_abs)
+        rec = _finish(lowered, mesh, "train", model_flops_step(
+            "train", cfg, s.seq_len, s.global_batch,
+            active_param_count(cfg)))
+    rec["microbatches"] = microbatches
+    return rec
+
+
+def lower_knn_variant(fetch: str, n=1 << 20, d=256, k=20):
+    from repro.core.distributed import make_sharded_iteration_lowerable
+    mesh = make_production_mesh()
+    lowered, mf = make_sharded_iteration_lowerable(
+        mesh, n=n, d=d, k=k, fetch=fetch)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+
+    # CPU artifact correction: the CPU backend decomposes each lax.
+    # all_to_all into P per-destination slice fusions, each charged the
+    # full buffer by the byte model — on TPU an all-to-all is ONE fused
+    # collective. Quantify those sites and report a corrected memory
+    # term alongside the raw one (documented in EXPERIMENTS §Perf).
+    from repro.launch.attr import attribute
+    rows = attribute(text, top=10**6)
+    artifact = sum(b for b, kind, comp, op, m, meta in rows
+                   if kind == "fusion" and meta.endswith("all_to_all"))
+    import repro.launch.dryrun as dr
+    rec = dr._finish(lowered, mesh, "knn", mf)
+    if isinstance(rec.get("roofline"), dict):
+        raw = rec["roofline"]["hbm_bytes_per_chip"]
+        corrected = max(raw - artifact, 0.0)
+        rec["roofline"]["a2a_artifact_bytes"] = artifact
+        rec["roofline"]["t_memory_corrected_s"] = corrected / 819e9
+    return rec
+
+
+VARIANTS = {
+    "knn": {
+        "ring": lambda: lower_knn_variant("ring"),
+        "a2a": lambda: lower_knn_variant("a2a"),
+    },
+    "mamba": {
+        "baseline": lambda: lower_train_variant(
+            "mamba2-130m", "train_4k", {}),
+        "bf16_intra": lambda: lower_train_variant(
+            "mamba2-130m", "train_4k", {"ssm_intra_dtype": "bf16"}),
+        "chunk128": lambda: lower_train_variant(
+            "mamba2-130m", "train_4k", {"ssm_chunk": 128}),
+        "bf16_chunk128": lambda: lower_train_variant(
+            "mamba2-130m", "train_4k",
+            {"ssm_intra_dtype": "bf16", "ssm_chunk": 128}),
+        "bf16str_chunk128": lambda: lower_train_variant(
+            "mamba2-130m", "train_4k",
+            {"ssm_intra_dtype": "bf16", "ssm_chunk": 128}),
+        "mb8_bf16_c128": lambda: lower_train_variant(
+            "mamba2-130m", "train_4k",
+            {"ssm_intra_dtype": "bf16", "ssm_chunk": 128},
+            microbatches=8),
+    },
+    "moe": {
+        "baseline": lambda: lower_train_variant(
+            "deepseek-v2-lite-16b", "train_4k",
+            {"attn_head_constraint": False}),
+        "headshard": lambda: lower_train_variant(
+            "deepseek-v2-lite-16b", "train_4k",
+            {"attn_head_constraint": True}),
+        "headshard_mb2": lambda: lower_train_variant(
+            "deepseek-v2-lite-16b", "train_4k",
+            {"attn_head_constraint": True}, microbatches=2),
+        "headshard_tri": lambda: lower_train_variant(
+            "deepseek-v2-lite-16b", "train_4k",
+            {"attn_head_constraint": True, "triangle_schedule": True}),
+        # triangle only engages when cq == ckv (chunk grid must be square)
+        "headshard_tri512": lambda: lower_train_variant(
+            "deepseek-v2-lite-16b", "train_4k",
+            {"attn_head_constraint": True, "triangle_schedule": True,
+             "attn_chunk_kv": 512}),
+    },
+    "gemma": {
+        "baseline": lambda: lower_train_variant(
+            "gemma2-27b", "train_4k", {"attn_head_constraint": False}),
+        "headshard": lambda: lower_train_variant(
+            "gemma2-27b", "train_4k", {"attn_head_constraint": True}),
+        "headshard_tri": lambda: lower_train_variant(
+            "gemma2-27b", "train_4k",
+            {"attn_head_constraint": True, "triangle_schedule": True,
+             "attn_chunk_kv": 512}),
+        "headshard_mb2": lambda: lower_train_variant(
+            "gemma2-27b", "train_4k",
+            {"attn_head_constraint": True}, microbatches=2),
+    },
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--variant")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    os.makedirs("results/perf", exist_ok=True)
+    todo = (sorted(VARIANTS[args.cell]) if args.all
+            else [args.variant])
+    for v in todo:
+        path = f"results/perf/{args.cell}__{v}.json"
+        if os.path.exists(path):
+            print(f"skip {v} (exists)")
+            continue
+        t0 = time.time()
+        rec = VARIANTS[args.cell][v]()
+        rec.update({"cell": args.cell, "variant": v,
+                    "compile_s": round(time.time() - t0, 1)})
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        r = rec["roofline"]
+        print(f"[{args.cell}:{v}] bneck={r['bottleneck']} "
+              f"t_c={r['t_compute_s']:.3e} t_m={r['t_memory_s']:.3e} "
+              f"t_coll={r['t_collective_s']:.3e} "
+              f"rl_frac={r['roofline_fraction']:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

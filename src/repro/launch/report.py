@@ -1,0 +1,99 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
+§Roofline markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(outdir: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | status | chips | resident GiB | "
+           "no-liveness upper GiB | fits 16G (res/upper) | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "ok":
+            m = r["memory"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r['chips']} | {m['resident_bytes']/2**30:.2f} | "
+                f"{m['upper_bytes']/2**30:.2f} | "
+                f"{'yes' if m['fits_16g_resident'] else 'NO'}/"
+                f"{'yes' if m['fits_16g'] else 'no'} | {r['compile_s']} |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']}: {r.get('reason', r.get('returncode'))} "
+                f"| - | - | - | - | - |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | t_compute s | t_memory s | t_coll s | "
+           "bottleneck | MODEL_FLOPS | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_e(rl['t_compute_s'])} | "
+            f"{fmt_e(rl['t_memory_s'])} | {fmt_e(rl['t_collective_s'])} | "
+            f"{rl['bottleneck']} | {fmt_e(rl['model_flops'])} | "
+            f"{rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def collectives_summary(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | collective bytes/chip | DCN bytes | "
+           "top kinds |",
+           "|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            continue
+        c = r["collectives"]
+        kinds = sorted(c["bytes"].items(), key=lambda kv: -kv[1])[:2]
+        ks = ", ".join(f"{k} {fmt_e(v)}" for k, v in kinds)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_e(c['total_bytes'])} | {fmt_e(c.get('dcn_bytes', 0))} | "
+            f"{ks} |")
+    return "\n".join(out)
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(outdir)
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skip"]
+    err = [r for r in rows if r["status"] not in ("ok", "skip")]
+    print(f"## Dry-run summary: {len(ok)} compiled, {len(skip)} documented "
+          f"skips, {len(err)} errors\n")
+    print("### §Dry-run\n")
+    print(dryrun_table(rows))
+    print("\n### §Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(rows, "single"))
+    print("\n### Multi-pod deltas (512 chips)\n")
+    print(roofline_table(rows, "multi"))
+    print("\n### Collective traffic\n")
+    print(collectives_summary(ok))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds (§Roofline):
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = sum over collective ops of operand_bytes / (chips * 50GB/s)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis — we parse the optimized HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Mesh awareness: each collective's bytes are divided by
+the number of participating groups (replica_groups) so the term reflects
+per-link traffic of ONE group member, matching the per-chip denominators.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_shape_bytes(sh: str) -> int:
+    """'f32[128,256]' -> bytes; tuples handled by caller."""
+    m = _SHAPE_RE.match(sh.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * b
+
+
+def _line_output_bytes(line: str) -> int:
+    """Sum the byte size of an HLO op's OUTPUT shape (handles tuples)."""
+    # '%name = f32[8,128]{1,0} all-gather(...)' or '(f32[..], f32[..]) all-to-all'
+    m = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s+[\w-]+", line)
+    if not m:
+        return 0
+    shp = m.group(1)
+    if shp.startswith("("):
+        return sum(_parse_shape_bytes(s) for s in shp[1:-1].split(",")
+                   if "[" in s)
+    return _parse_shape_bytes(shp.split("{")[0])
+
+
+def _n_groups(line: str) -> int:
+    """Number of replica groups (1 group of N devices -> traffic counted
+    once; G independent groups run in parallel on disjoint links)."""
+    m = re.search(r"replica_groups=\{(.*?)\}\s", line)
+    if not m:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if m:
+            return int(m.group(1))
+        return 1
+    body = m.group(1)
+    return max(body.count("{"), 1)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    total_bytes: float          # per-participant traffic proxy
+
+    def as_dict(self):
+        return {"counts": self.counts, "bytes": self.bytes_by_kind,
+                "total_bytes": self.total_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = {}
+    bytes_by: dict = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("//") or "=" not in ls:
+            continue
+        for kind in _COLLECTIVES:
+            # match op name immediately after the output shape
+            if re.search(rf"[\s\)]{kind}(-start|-done)?\(", ls) or \
+               re.search(rf"=\s*\S+\s+{kind}(-start)?\(", ls):
+                if f"{kind}-done" in ls:
+                    break               # counted at -start
+                out_b = _line_output_bytes(ls)
+                groups = _n_groups(ls)
+                per_part = out_b / max(groups, 1)
+                counts[kind] = counts.get(kind, 0) + 1
+                bytes_by[kind] = bytes_by.get(kind, 0.0) + per_part
+                total += per_part
+                break
+    return CollectiveStats(counts, bytes_by, total)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/flop inputs are PER-CHIP (XLA's SPMD cost_analysis reports
+    the per-device partitioned module — verified empirically; the
+    spec formula global_FLOPs/(chips*peak) is identical since
+    global = per_chip * chips). model_flops is GLOBAL (6*N*D)."""
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    coll_bytes: float            # per-chip collective operand bytes
+    chips: int
+    model_flops: float = 0.0     # global useful flops
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # per-participant collective bytes; ~4 usable ICI links per chip
+        return self.coll_bytes / (4 * ICI_BW_PER_LINK)
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline lower bound on step time (max of the three terms,
+        assuming perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste)."""
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound implied by the three terms: useful
+        flops per second at the roofline step time over peak."""
+        if not self.model_flops:
+            return 0.0
+        t = self.step_time
+        return self.model_flops / (t * self.chips * PEAK_FLOPS_BF16)
+
+    def as_dict(self):
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: str, chips: int,
+                           model_flops: float = 0.0) -> Roofline:
+    """Loop-aware terms via launch.hlo_cost (cost_analysis counts while
+    bodies once — useless for scan-based models; see hlo_cost docstring).
+    The raw cost_analysis numbers are kept by the caller for reference."""
+    from repro.launch import hlo_cost
+    c = hlo_cost.analyze(hlo_text)
+    return Roofline(flops=c.flops, hbm_bytes=c.bytes,
+                    coll_bytes=c.coll_bytes, chips=chips,
+                    model_flops=model_flops)
+
+
+def model_flops_train(cfg, n_tokens: int, active_params: int) -> float:
+    """6*N*D (fwd 2ND + bwd 4ND)."""
+    return 6.0 * active_params * n_tokens
+
+
+def model_flops_step(kind: str, cfg, seq: int, batch: int,
+                     active_params: int) -> float:
+    if kind == "train":
+        return 6.0 * active_params * seq * batch
+    if kind == "prefill":
+        return 2.0 * active_params * seq * batch
+    return 2.0 * active_params * batch      # decode: one token per slot

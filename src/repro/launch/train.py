@@ -1,0 +1,100 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt --resume auto
+
+On this CPU container only --smoke configs are runnable; the full-config
+path is exercised by the dry-run (launch/dryrun.py). The launcher wires
+together: config -> schema -> (mesh+shardings if >1 device) -> data
+pipeline -> train loop with checkpointing + fault policy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig, TokenPipeline
+from repro.models import init_tree, model_schema, param_count
+from repro.train import OptimizerConfig, TrainConfig, TrainLoop, make_train_step
+from repro.train import optimizer as opt_mod
+from repro.train.checkpoint import Checkpointer, config_hash
+from repro.train.fault import FaultPolicy, StragglerWatchdog
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default=None, choices=[None, "auto"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.arch} params={param_count(cfg):,}")
+
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                    vocab=cfg.vocab)
+    pipe = TokenPipeline(dc)
+
+    params = init_tree(jax.random.key(0), model_schema(cfg))
+    opt_state = opt_mod.init(params)
+
+    tc = TrainConfig(
+        microbatches=args.microbatches,
+        opt=OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                            total_steps=args.steps),
+    )
+    step_fn = jax.jit(make_train_step(cfg, tc))
+
+    ck = None
+    fault = None
+    start_step = 0
+    if args.ckpt_dir:
+        ck = Checkpointer(args.ckpt_dir, every=args.ckpt_every,
+                          cfg_hash=config_hash(cfg))
+        fault = FaultPolicy(ck)
+        if args.resume == "auto" and ck.latest_step() is not None:
+            start_step, tree = ck.load(
+                like={"params": params, "opt_state": opt_state})
+            params, opt_state = tree["params"], tree["opt_state"]
+            print(f"resumed from step {start_step}")
+
+    dog = StragglerWatchdog()
+
+    def log(m):
+        print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
+                          for k, v in m.items()}))
+
+    loop = TrainLoop(cfg, tc, step_fn, checkpointer=ck, fault=fault,
+                     log_every=args.log_every)
+
+    def batches():
+        n = 0
+        for b in pipe:
+            if n >= args.steps - start_step:
+                return
+            dog.step_start()
+            yield b
+            n += 1
+
+    params, opt_state, hist = loop.run(
+        params, opt_state, batches(), start_step=start_step, callback=log)
+    print(f"done: {len(hist)} logs, final loss "
+          f"{hist[-1]['loss'] if hist else float('nan'):.4f}")
+    return params, opt_state, hist
+
+
+if __name__ == "__main__":
+    main()

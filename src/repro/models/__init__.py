@@ -1,0 +1,32 @@
+"""Model stack: layer primitives, attention (GQA/MLA/local-global), MoE,
+Mamba-2 SSD, per-family transformer stacks, and the top-level LM — all
+pure functions over ParamDef schemas (params.py), shardable via the
+logical-axis rules (sharding.py).
+"""
+from repro.models.model import (
+    active_param_count,
+    forward,
+    loss_fn,
+    model_schema,
+    param_count,
+)
+from repro.models.params import (
+    ParamDef,
+    abstract_tree,
+    init_tree,
+    sharding_tree,
+    spec_tree,
+)
+
+__all__ = [
+    "ParamDef",
+    "abstract_tree",
+    "active_param_count",
+    "forward",
+    "init_tree",
+    "loss_fn",
+    "model_schema",
+    "param_count",
+    "sharding_tree",
+    "spec_tree",
+]

@@ -1,0 +1,502 @@
+"""Attention for every assigned family: GQA (llama/qwen/starcoder2/yi),
+local+global alternation with logit softcap (gemma2), MLA latent-KV
+(deepseek-v2), encoder bidirectional (hubert), plus decode paths with
+batched KV caches (per-slot positions for continuous batching).
+
+Train/prefill path = chunked flash attention in pure jnp (lax.scan over q
+chunks, inner scan over kv chunks, online softmax) — the numerically
+identical HLO counterpart of kernels/flash_attention.py, which is the TPU
+target. Memory is O(cq*ckv) per step regardless of sequence length.
+
+Sliding-window layers use BANDED kv slicing: a q chunk only reads the
+(window + cq) keys it can see, so both memory AND flops scale with the
+window, not the sequence (gemma2 local layers; this is also what makes
+long-context cells affordable).
+
+Causal full-attention layers optionally use the triangular chunk schedule
+(skip jk > jq) — ``triangle=True`` — halving flash flops vs the rectangular
+masked sweep. Rectangular is the paper-faithful-baseline default; triangle
+is a §Perf optimization (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, apply_rope, dense_schema, rmsnorm, rmsnorm_schema, softcap as _softcap
+from repro.models.sharding import shard_act
+
+_NEG = -2.0e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash core (pure jnp; TPU target = kernels/flash_attention.py)
+# ---------------------------------------------------------------------------
+
+def _flash_block(q, k, v, m, l, acc, qpos, kpos, *, causal, window,
+                 softcap_v, scale, encoder):
+    """One (q_chunk x kv_chunk) online-softmax update.
+
+    q: (B, cq, H, Dq)  k: (B, ck, Hkv, Dq)  v: (B, ck, Hkv, Dv)
+    m/l: (B, H, cq, 1); acc: (B, H, cq, Dv). MLA has Dv != Dq.
+    qpos (cq,), kpos (ck,) absolute positions.
+    """
+    B, cq, H, Dh = q.shape
+    Dv = v.shape[-1]
+    ck, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, cq, Hkv, rep, Dh)
+    logits = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, H, cq, ck) * scale
+    if softcap_v is not None:
+        logits = softcap_v * jnp.tanh(logits / softcap_v)
+    mask = jnp.ones((cq, ck), dtype=bool)
+    if not encoder and causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    # kv validity (padding rows have kpos < 0)
+    mask &= (kpos >= 0)[None, :]
+    logits = jnp.where(mask[None, None], logits, _NEG)
+
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m, m_cur)
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask[None, None], p, 0.0)
+    l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum(
+        "bgrqk,bkgd->bqgrd",
+        p.reshape(B, Hkv, rep, cq, ck),
+        v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, cq, H, Dv).transpose(0, 2, 1, 3)
+    acc_new = acc * alpha + pv
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(
+    q: jax.Array,              # (B, Lq, H, Dh)
+    k: jax.Array,              # (B, Lk, Hkv, Dh)
+    v: jax.Array,              # (B, Lk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    cq: int = 512,
+    ckv: int = 1024,
+    encoder: bool = False,
+    triangle: bool = False,
+) -> jax.Array:
+    B, Lq, H, Dh = q.shape
+    Dv = v.shape[-1]
+    Lk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    cq = min(cq, Lq)
+    ckv = min(ckv, Lk)
+    # pad sequences to chunk multiples (kpos<0 marks padding)
+    pq, pk = (-Lq) % cq, (-Lk) % ckv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Lq + pq) // cq, (Lk + pk) // ckv
+    kpos_all = jnp.where(jnp.arange(Lk + pk) < Lk, jnp.arange(Lk + pk), -1)
+
+    kc = k.reshape(B, nk, ckv, *k.shape[2:])
+    vc = v.reshape(B, nk, ckv, *v.shape[2:])
+    kposc = kpos_all.reshape(nk, ckv)
+
+    banded = window is not None and not encoder
+    if banded:
+        # q chunk jq sees keys in [end - window - cq + 1, end]; slice a
+        # static (window+cq) band, rounded up to ckv multiples
+        band = ((window + cq + ckv - 1) // ckv + 1) * ckv
+
+    def per_q_chunk(jq):
+        qj = jax.lax.dynamic_slice_in_dim(q, jq * cq, cq, axis=1)
+        qpos = q_offset + jq * cq + jnp.arange(cq)
+        m0 = jnp.full((B, H, cq, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, cq, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, Dv), jnp.float32)
+
+        if banded:
+            start = jnp.clip(
+                (q_offset + jq * cq + cq - 1 - window) // ckv * ckv,
+                0, max(nk * ckv - band, 0),
+            )
+            kb = jax.lax.dynamic_slice_in_dim(k, start, min(band, nk * ckv), 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, min(band, nk * ckv), 1)
+            kp = jax.lax.dynamic_slice_in_dim(
+                kpos_all, start, min(band, nk * ckv), 0
+            )
+            nb = kb.shape[1] // ckv
+
+            def inner(carry, jk):
+                m, l, acc = carry
+                ks = jax.lax.dynamic_slice_in_dim(kb, jk * ckv, ckv, 1)
+                vs = jax.lax.dynamic_slice_in_dim(vb, jk * ckv, ckv, 1)
+                kp_ = jax.lax.dynamic_slice_in_dim(kp, jk * ckv, ckv, 0)
+                m, l, acc = _flash_block(
+                    qj, ks, vs, m, l, acc, qpos, kp_, causal=causal,
+                    window=window, softcap_v=softcap, scale=scale,
+                    encoder=encoder,
+                )
+                return (m, l, acc), None
+
+            # flash-bwd memory model: recompute block probs in the
+            # backward instead of saving (B,H,cq,ckv) tensors per step
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(inner), (m0, l0, a0), jnp.arange(nb)
+            )
+        else:
+            nk_eff = nk
+            if triangle and causal and not encoder and q_offset == 0 \
+                    and Lq == Lk and cq == ckv:
+                # triangular schedule: q chunk jq only visits jk <= jq
+                def inner(carry, jk):
+                    m, l, acc = carry
+                    def do(args):
+                        m, l, acc = args
+                        return _flash_block(
+                            qj, kc[:, jk], vc[:, jk], m, l, acc, qpos,
+                            kposc[jk], causal=causal, window=window,
+                            softcap_v=softcap, scale=scale, encoder=encoder,
+                        )
+                    m, l, acc = jax.lax.cond(
+                        jk <= jq, do, lambda a: a, (m, l, acc)
+                    )
+                    return (m, l, acc), None
+            else:
+                def inner(carry, jk):
+                    m, l, acc = carry
+                    m, l, acc = _flash_block(
+                        qj, kc[:, jk], vc[:, jk], m, l, acc, qpos,
+                        kposc[jk], causal=causal, window=window,
+                        softcap_v=softcap, scale=scale, encoder=encoder,
+                    )
+                    return (m, l, acc), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(inner), (m0, l0, a0), jnp.arange(nk_eff)
+            )
+
+        out = jnp.where(l > 0, acc / jnp.where(l > 0, l, 1.0), 0.0)
+        return out.transpose(0, 2, 1, 3)        # (B, cq, H, Dh)
+
+    chunks = jax.lax.map(per_q_chunk, jnp.arange(nq))   # (nq, B, cq, H, Dv)
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, H, Dv)
+    return out[:, :Lq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,              # (B, 1, H, Dh)
+    k_cache: jax.Array,        # (B, S, Hkv, Dh)
+    v_cache: jax.Array,        # (B, S, Hkv, Dh)
+    kpos: jax.Array,           # (B, S) absolute position per slot, -1 empty
+    pos: jax.Array,            # (B,) position of the new token
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a position-tagged KV cache.
+
+    The cache may be a ring buffer (local-window layers: S = window); the
+    per-slot absolute positions make masking independent of the physical
+    slot order, so ring and linear caches share this one code path. The
+    cache's S axis may be mesh-sharded (kv_seq -> data for long-context
+    decode); the softmax over S then reduces across shards under pjit.
+    """
+    B, _, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, 1, Hkv, rep, Dh)
+    # NOTE: no .astype on the cache operands — bf16 x bf16 -> f32 via
+    # preferred_element_type is MXU-native; pre-converting materializes a
+    # full f32 copy of the cache (2.5x decode HBM footprint)
+    logits = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg.astype(k_cache.dtype), k_cache,
+        preferred_element_type=jnp.float32,
+    ).reshape(B, H, 1, S) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = (kpos >= 0) & (kpos <= pos[:, None])
+    if window is not None:
+        mask &= kpos > (pos[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bgrqk,bkgd->bqgrd",
+        p.reshape(B, Hkv, rep, 1, S).astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    ).reshape(B, 1, H * Dh)
+    return out.astype(q.dtype).reshape(B, 1, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (yi, codeqwen, starcoder2, gemma2, zamba2-shared, ...)
+# ---------------------------------------------------------------------------
+
+def gqa_schema(cfg) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.param_dtype
+    s = {
+        "wq": ParamDef((d, H, Dh), ("d_model", "heads", None), dtype=dt),
+        "wk": ParamDef((d, Hkv, Dh), ("d_model", "kv_heads", None), dtype=dt),
+        "wv": ParamDef((d, Hkv, Dh), ("d_model", "kv_heads", None), dtype=dt),
+        "wo": ParamDef((H, Dh, d), ("heads", None, "d_model"), dtype=dt),
+    }
+    if cfg.attn_bias:
+        s["bq"] = ParamDef((H, Dh), ("heads", None), "zeros", dtype=dt)
+        s["bk"] = ParamDef((Hkv, Dh), ("kv_heads", None), "zeros", dtype=dt)
+        s["bv"] = ParamDef((Hkv, Dh), ("kv_heads", None), "zeros", dtype=dt)
+    if cfg.attn_out_bias:
+        s["bo"] = ParamDef((d,), ("d_model",), "zeros", dtype=dt)
+    return s
+
+
+def _qkv(p, x, cfg):
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _out(p, o, x_dtype):
+    y = jnp.einsum("blhk,hkd->bld", o.astype(x_dtype), p["wo"].astype(x_dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(x_dtype)
+    return y
+
+
+def gqa_attention(
+    p: dict,
+    x: jax.Array,              # (B, L, d)
+    cfg,
+    *,
+    window: int | None = None,
+    positions: jax.Array | None = None,
+    encoder: bool = False,
+    triangle: bool = False,
+    return_kv: bool = False,
+):
+    """Train/prefill attention (full sequence). return_kv -> also give the
+    rope-applied (k, v) so serve/decode.py can seed its cache."""
+    B, L, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = positions if positions is not None else jnp.arange(L)
+    if cfg.rope:
+        q = apply_rope(q, pos, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, theta=cfg.rope_theta)
+    if cfg.attn_head_constraint:
+        # §Perf: pin heads->model BEFORE the chunk loops. Without this,
+        # q/k/v inherit the seq->model block-boundary sharding and every
+        # chunk-loop dynamic-slice over seq emits a collective (measured:
+        # tens of thousands of small all-gathers per step).
+        q = shard_act(q, ("batch", None, "heads", None))
+        k = shard_act(k, ("batch", None, "kv_heads", None))
+        v = shard_act(v, ("batch", None, "kv_heads", None))
+    o = chunked_attention(
+        q, k, v, causal=not encoder, window=window,
+        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+        cq=cfg.attn_chunk_q, ckv=cfg.attn_chunk_kv, encoder=encoder,
+        triangle=triangle,
+    )
+    out = _out(p, o, x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(
+    p: dict,
+    x: jax.Array,              # (B, 1, d)
+    cache: dict,               # {"k","v": (B,S,Hkv,Dh), "kpos": (B,S)}
+    lengths: jax.Array,        # (B,) length BEFORE this token (= its pos)
+    cfg,
+    *,
+    window: int | None = None,
+) -> tuple[jax.Array, dict]:
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope:
+        q = apply_rope(q, lengths[:, None], theta=cfg.rope_theta)
+        k = apply_rope(k, lengths[:, None], theta=cfg.rope_theta)
+    bidx = jnp.arange(B)
+    slot = lengths % S                  # ring write (S = window for local)
+    kc = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    kp = cache["kpos"].at[bidx, slot].set(lengths)
+    o = decode_attention(
+        q, kc, vc, kp, lengths, window=window,
+        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+    )
+    return _out(p, o, x.dtype), {"k": kc, "v": vc, "kpos": kp}
+
+
+def gqa_cache_schema(cfg, batch: int, max_len: int,
+                     window: int | None = None) -> dict:
+    dt = cfg.cache_dtype
+    S = min(window, max_len) if window is not None else max_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.d_head)
+    ax = ("batch", "kv_seq", "kv_heads", None)
+    return {"k": ParamDef(shape, ax, "zeros", dtype=dt),
+            "v": ParamDef(shape, ax, "zeros", dtype=dt),
+            "kpos": ParamDef((batch, S), ("batch", "kv_seq"), "neg",
+                             dtype=jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA — deepseek-v2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def mla_schema(cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    dt = cfg.param_dtype
+    return {
+        # q: full-rank projection (v2-lite has q_lora_rank = None)
+        "wq": ParamDef((d, H, dn + dr), ("d_model", "heads", None), dtype=dt),
+        # kv: joint down-projection to latent + shared rope key
+        "wkv_a": ParamDef((d, r + dr), ("d_model", None), dtype=dt),
+        "kv_norm": rmsnorm_schema(r, dt)["scale"],
+        # up-projection latent -> per-head nope-key and value
+        "wkv_b": ParamDef((r, H, dn + dv), (None, "heads", None), dtype=dt),
+        "wo": ParamDef((H, dv, d), ("heads", None, "d_model"), dtype=dt),
+    }
+
+
+def _mla_qkv(p, x, cfg, pos):
+    """Expanded (train/prefill) form: per-head K/V materialized."""
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, theta=cfg.rope_theta)
+
+    kv = x @ p["wkv_a"].astype(x.dtype)                  # (B, L, r+dr)
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, kv[..., :r])
+    k_rope = apply_rope(
+        kv[..., r:][:, :, None, :], pos, theta=cfg.rope_theta
+    )                                                     # (B, L, 1, dr)
+    kvu = jnp.einsum("blr,rhk->blhk", c_kv, p["wkv_b"].astype(x.dtype))
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], dr))], axis=-1
+    )
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return qf, k, v, c_kv, kv[..., r:]
+
+
+def mla_attention(p: dict, x: jax.Array, cfg, *,
+                  positions: jax.Array | None = None,
+                  triangle: bool = False, return_latent: bool = False):
+    B, L, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(L)
+    q, k, v, c_kv, _ = _mla_qkv(p, x, cfg, pos)
+    if cfg.attn_head_constraint:
+        q = shard_act(q, ("batch", None, "heads", None))
+        k = shard_act(k, ("batch", None, "heads", None))
+        v = shard_act(v, ("batch", None, "heads", None))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    o = chunked_attention(
+        q, k, v, causal=True, scale=scale,
+        cq=cfg.attn_chunk_q, ckv=cfg.attn_chunk_kv, triangle=triangle,
+    )
+    out = jnp.einsum("blhk,hkd->bld", o, p["wo"].astype(x.dtype))
+    if return_latent:
+        # rope-applied shared key (B, L, dr) — cached alongside the latent
+        dn = cfg.qk_nope_dim
+        k_rope = k[..., 0, dn:]     # identical across heads (broadcast)
+        return out, (c_kv, k_rope)
+    return out
+
+
+def mla_decode(
+    p: dict,
+    x: jax.Array,              # (B, 1, d)
+    cache: dict,               # {"ckv": (B,S,r), "krope": (B,S,dr)}
+    lengths: jax.Array,
+    cfg,
+) -> tuple[jax.Array, dict]:
+    """Weight-absorbed decode: the cache stores ONLY the latent (r) and the
+    shared rope key (dr) per token — the paper-exact KV-memory win of MLA.
+
+    score(h) = q_nope(h) @ W_UK(h)^T @ c_kv^T  +  q_rope(h) @ k_rope^T
+    out(h)   = softmax @ c_kv @ W_UV(h)
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pos = lengths[:, None]
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, theta=cfg.rope_theta)
+
+    kv = x @ p["wkv_a"].astype(x.dtype)
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, kv[..., :r])   # (B, 1, r)
+    k_rope = apply_rope(
+        kv[..., r:][:, :, None, :], pos, theta=cfg.rope_theta
+    )[:, :, 0, :]                                          # (B, 1, dr)
+
+    bidx = jnp.arange(B)
+    ckv_c = cache["ckv"].at[bidx, lengths].set(
+        c_kv[:, 0].astype(cache["ckv"].dtype))
+    kr_c = cache["krope"].at[bidx, lengths].set(
+        k_rope[:, 0].astype(cache["krope"].dtype))
+    kp_c = cache["kpos"].at[bidx, lengths].set(lengths)
+
+    w_uk = p["wkv_b"].astype(x.dtype)[..., :dn]            # (r, H, dn)
+    # absorb: q' = q_nope @ W_UK^T  -> latent space
+    q_lat = jnp.einsum("blhk,rhk->blhr", q_nope, w_uk)     # (B, 1, H, r)
+    s_lat = jnp.einsum(
+        "blhr,bsr->bhls", q_lat.astype(ckv_c.dtype), ckv_c,
+        preferred_element_type=jnp.float32,
+    )
+    s_rope = jnp.einsum(
+        "blhk,bsk->bhls", q_rope.astype(kr_c.dtype), kr_c,
+        preferred_element_type=jnp.float32,
+    )
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (s_lat + s_rope) * scale                      # (B, H, 1, S)
+    mask = (kp_c >= 0) & (kp_c <= lengths[:, None])
+    logits = jnp.where(mask[:, None, None, :], logits, _NEG)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum(
+        "bhls,bsr->blhr", pr.astype(ckv_c.dtype), ckv_c,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)                                      # (B, 1, H, r)
+    w_uv = p["wkv_b"].astype(x.dtype)[..., dn:]            # (r, H, dv)
+    o = jnp.einsum("blhr,rhv->blhv", o_lat, w_uv)
+    y = jnp.einsum("blhv,hvd->bld", o, p["wo"].astype(x.dtype))
+    return y, {"ckv": ckv_c, "krope": kr_c, "kpos": kp_c}
+
+
+def mla_cache_schema(cfg, batch: int, max_len: int) -> dict:
+    dt = cfg.cache_dtype
+    return {
+        "ckv": ParamDef((batch, max_len, cfg.kv_lora_rank),
+                        ("batch", "kv_seq", None), "zeros", dtype=dt),
+        "krope": ParamDef((batch, max_len, cfg.qk_rope_dim),
+                          ("batch", "kv_seq", None), "zeros", dtype=dt),
+        "kpos": ParamDef((batch, max_len), ("batch", "kv_seq"), "neg",
+                         dtype=jnp.int32),
+    }

@@ -1,0 +1,167 @@
+"""Layer primitives shared by every architecture family.
+
+Each primitive comes as a (schema builder, apply function) pair; schema
+builders return nested dicts of ParamDef (see params.py), apply functions
+consume the materialized (or abstract) params with the same structure.
+
+Activations are computed in ``cfg.act_dtype`` (bf16 at scale) with fp32
+for norms/softmax/logits; parameters are stored in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_schema(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": ParamDef((d,), ("d_model",), "ones", dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, *, eps: float = 1e-6,
+            scale_plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = p["scale"].astype(jnp.float32)
+    if scale_plus_one:           # gemma convention: weight stored as (w-1)
+        w = w + 1.0
+    return (y * w).astype(x.dtype)
+
+
+def layernorm_schema(d: int, dtype=jnp.float32) -> dict:
+    return {
+        "scale": ParamDef((d,), ("d_model",), "ones", dtype=dtype),
+        "bias": ParamDef((d,), ("d_model",), "zeros", dtype=dtype),
+    }
+
+
+def layernorm(p: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 10_000.0) -> jax.Array:
+    """Inverse frequencies (d_head/2,) f32."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (..., L, H, Dh); positions: broadcastable to (..., L) int32.
+
+    Half-split convention (llama/qwen/gemma): rotate [x1, x2] halves.
+    """
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)                       # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., L, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., L, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_schema(d_in: int, d_out: int, logical: tuple,
+                 *, bias: bool = False, dtype=jnp.float32,
+                 init: str = "normal", scale: float | None = None) -> dict:
+    s = {"w": ParamDef((d_in, d_out), logical, init, scale, dtype)}
+    if bias:
+        s["b"] = ParamDef((d_out,), (logical[-1],), "zeros", dtype=dtype)
+    return s
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed_schema(vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": ParamDef((vocab, d), ("vocab", "d_model"), "embed",
+                              0.02, dtype)}
+
+
+def embed(p: dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Project to vocab logits in fp32 (numerics: loss in fp32 always)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"],
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP (GLU family) — llama/qwen/gemma style gate+up / down
+# ---------------------------------------------------------------------------
+
+def glu_schema(d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "gate": ParamDef((d, d_ff), ("d_model", "d_ff"), dtype=dtype),
+        "up": ParamDef((d, d_ff), ("d_model", "d_ff"), dtype=dtype),
+        "down": ParamDef((d_ff, d), ("d_ff", "d_model"), dtype=dtype),
+    }
+
+
+def glu(p: dict, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    g = x @ p["gate"].astype(x.dtype)
+    u = x @ p["up"].astype(x.dtype)
+    if act == "silu":
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    elif act == "gelu":
+        a = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    return (a * u) @ p["down"].astype(x.dtype)
+
+
+def mlp_schema(d: int, d_ff: int, *, bias: bool = False,
+               dtype=jnp.float32) -> dict:
+    """Plain 2-layer MLP (starcoder2, hubert)."""
+    return {
+        "up": dense_schema(d, d_ff, ("d_model", "d_ff"), bias=bias, dtype=dtype),
+        "down": dense_schema(d_ff, d, ("d_ff", "d_model"), bias=bias, dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, *, act: str = "gelu") -> jax.Array:
+    h = dense(p["up"], x)
+    if act == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    xf = x.astype(jnp.float32)
+    return (cap * jnp.tanh(xf / cap)).astype(x.dtype)

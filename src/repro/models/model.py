@@ -1,0 +1,159 @@
+"""Top-level LM: embedding (+ modality frontend stubs), layer stack,
+final norm, output head, loss. All pure functions over schema-matched
+param trees (see params.py) — the same code path materialized for smoke
+tests and abstract for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.layers import ParamDef, dense, dense_schema, embed_schema, softcap
+from repro.models.params import count_params
+from repro.models.sharding import shard_act
+from repro.models.transformer import apply_norm, norm_schema
+
+
+def model_schema(cfg) -> dict:
+    dt = cfg.param_dtype
+    s: dict = {
+        "embed": embed_schema(cfg.vocab, cfg.d_model, dt),
+        "stack": transformer.stack_schema_for(cfg),
+        "final_norm": norm_schema(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = {
+            "w": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "d_model"),
+                          dtype=dt)
+        }
+    if cfg.frontend == "audio":
+        s["frontend"] = dense_schema(
+            cfg.frontend_dim, cfg.d_model, ("frontend", "d_model"),
+            bias=True, dtype=dt)
+    elif cfg.frontend == "vision":
+        # 2-layer MLP projector (internvl mlp1)
+        s["frontend"] = {
+            "fc1": dense_schema(cfg.frontend_dim, cfg.d_model,
+                                ("frontend", "d_model"), bias=True, dtype=dt),
+            "fc2": dense_schema(cfg.d_model, cfg.d_model,
+                                ("d_model", None), bias=True, dtype=dt),
+        }
+    return s
+
+
+def embed_inputs(params: dict, batch: dict, cfg) -> jax.Array:
+    """Token / frame / patch embedding -> (B, L', d) activations."""
+    dt = cfg.act_dtype
+    if cfg.frontend == "audio":
+        x = dense(params["frontend"], batch["frames"].astype(dt))
+        return x
+    table = params["embed"]["table"]
+    x = table.astype(dt)[batch["tokens"]]
+    if cfg.embed_scale is not None:
+        x = x * jnp.asarray(cfg.embed_scale, dt)
+    if cfg.embedding_multiplier != 1.0:
+        x = x * jnp.asarray(cfg.embedding_multiplier, dt)
+    if cfg.frontend == "vision" and "patches" in batch:
+        p = dense(params["frontend"]["fc1"], batch["patches"].astype(dt))
+        p = jax.nn.gelu(p.astype(jnp.float32), approximate=True).astype(dt)
+        p = dense(params["frontend"]["fc2"], p)
+        x = jnp.concatenate([p, x], axis=1)      # patches prefix the text
+    return x
+
+
+def output_logits(params: dict, x: jax.Array, cfg) -> jax.Array:
+    x = apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"]
+    else:
+        w = params["lm_head"]["w"]
+    logits = jnp.einsum("...d,vd->...v", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if logits.ndim == 3:
+        # (B, L, V) sharded batch x vocab — the 1M-token x 256k-vocab train
+        # logits would be 1TB replicated; sharded they are ~4GB/chip.
+        logits = shard_act(logits, ("batch", None, "vocab"))
+    if cfg.logits_scaling != 1.0:
+        logits = logits / cfg.logits_scaling
+    logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def forward(params: dict, batch: dict, cfg) -> jax.Array:
+    """Full-sequence forward -> fp32 logits (B, L', vocab)."""
+    x = embed_inputs(params, batch, cfg)
+    x = transformer.run_stack(params["stack"], x, cfg)
+    return output_logits(params, x, cfg)
+
+
+def _xent_terms(params, x, labels, cfg):
+    """CE pieces for (B, Lc, d) states: (nll_sum, n_tokens, n_correct)."""
+    logits = output_logits(params, x, cfg)
+    mask = labels >= 0
+    tgt = jnp.clip(labels, 0, cfg.vocab - 1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.sum((logz - gold) * mask)
+    correct = jnp.sum((jnp.argmax(logits, -1) == tgt) & mask)
+    return nll, jnp.sum(mask), correct
+
+
+def loss_fn(params: dict, batch: dict, cfg) -> tuple[jax.Array, dict]:
+    """Next-token (or masked-unit, for the encoder) cross entropy.
+
+    labels < 0 are masked (vlm patch positions, padding). When the
+    sequence exceeds ``cfg.loss_chunk``, CE is computed by a rematerialized
+    scan over sequence chunks so the (B, L, vocab) logits tensor never
+    materializes — at gemma2 scale that tensor is 1M x 256k x 4B = 1 TB;
+    chunked, the live slice is loss_chunk/L of it and the backward
+    recomputes each chunk's logits from the (tiny) final hidden states.
+    """
+    x = embed_inputs(params, batch, cfg)
+    x = transformer.run_stack(params["stack"], x, cfg)
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = x[:, cfg.n_patches:, :]              # text positions only
+    labels = batch["labels"]
+    B, L, _ = x.shape
+
+    ck = cfg.loss_chunk
+    if ck and L > ck and L % ck == 0:
+        xc = x.reshape(B, L // ck, ck, -1).swapaxes(0, 1)
+        lc = labels.reshape(B, L // ck, ck).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk(carry, xl):
+            xcb, lcb = xl
+            nll, n, corr = _xent_terms(params, xcb, lcb, cfg)
+            a, b, c = carry
+            return (a + nll, b + n, c + corr), None
+
+        (nll, n_tok, correct), _ = jax.lax.scan(
+            chunk, (jnp.float32(0), jnp.int32(0), jnp.int32(0)), (xc, lc))
+    else:
+        nll, n_tok, correct = _xent_terms(params, x, labels, cfg)
+
+    denom = jnp.maximum(n_tok, 1)
+    loss = nll / denom
+    metrics = {
+        "loss": loss,
+        "tokens": n_tok,
+        "accuracy": correct / denom,
+    }
+    return loss, metrics
+
+
+def param_count(cfg) -> int:
+    return count_params(model_schema(cfg))
+
+
+def active_param_count(cfg) -> int:
+    """Active-per-token params (MoE: shared + top_k routed only) — the
+    N_active of the roofline MODEL_FLOPS = 6*N_active*D."""
+    if not cfg.n_experts:
+        return param_count(cfg)
+    total = param_count(cfg)
+    expert_p = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = (cfg.n_experts - cfg.moe_top_k) * expert_p * (
+        cfg.n_layers - cfg.first_k_dense)
+    return total - inactive

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts layer (deepseek-v2-lite, granite-moe).
+
+Token-choice top-k routing realized in a fully dense, pjit-shardable form:
+
+  1. router logits (T, E); per-token top-k mask and gate weights.
+  2. per-expert candidate scores (E, T): the token's gate if it selected the
+     expert, else -inf.
+  3. ``lax.top_k`` over tokens gives each expert its C-token batch
+     (score-priority capacity policy — tokens beyond capacity are dropped,
+     highest-gate first; C = ceil(T*k/E) * capacity_factor).
+  4. gather -> (E, C, D), batched expert GLU -> scatter-add back weighted.
+
+Sharding: expert weight tensors carry the ``experts`` logical axis (EP over
+the ``model`` mesh axis when E divides it — deepseek 64 experts / 16-way
+model axis = 4 experts per chip); the (E, C, D) dispatch activations shard
+(experts->model, cap->data), so the gather from the token-sharded (T, D)
+activations IS the MoE all-to-all (XLA emits the collective). When E does
+not divide the axis (granite: 40 experts, 16-way), EP is skipped by the
+divisibility fallback and experts shard over d_ff/TP inside each expert
+instead (DESIGN.md §6).
+
+deepseek-v2 extras: shared experts (always-on GLU on the side), optional
+routed scaling, sigmoid-vs-softmax scoring, first-k dense layers (handled
+by the transformer stack, not here).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+from repro.models.sharding import shard_act
+
+
+def moe_schema(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    s = {
+        "router": ParamDef((d, e), ("d_model", "experts"), dtype=dt,
+                           scale=0.02),
+        "gate": ParamDef((e, d, f), ("experts", "d_model", "d_ff"), dtype=dt),
+        "up": ParamDef((e, d, f), ("experts", "d_model", "d_ff"), dtype=dt),
+        "down": ParamDef((e, f, d), ("experts", "d_ff", "d_model"), dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        s["shared"] = {
+            "gate": ParamDef((d, fs), ("d_model", "d_ff"), dtype=dt),
+            "up": ParamDef((d, fs), ("d_model", "d_ff"), dtype=dt),
+            "down": ParamDef((fs, d), ("d_ff", "d_model"), dtype=dt),
+        }
+    return s
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    c = math.ceil(n_tokens * cfg.moe_top_k / cfg.n_experts
+                  * cfg.moe_capacity_factor)
+    c = max(int(-(-c // 128) * 128), 128)      # round up to 128 (MXU lanes)
+    return min(c, n_tokens)                    # never exceed the token count
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """x: (B, L, D) -> (B, L, D)."""
+    B, L, D = x.shape
+    T = B * L
+    E, K = cfg.n_experts, cfg.moe_top_k
+    C = moe_capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (T, E)
+    if cfg.moe_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+
+    top_val, top_idx = jax.lax.top_k(scores, K)            # (T, K)
+    if cfg.moe_norm_topk:
+        top_val = top_val / jnp.maximum(
+            jnp.sum(top_val, axis=-1, keepdims=True), 1e-20)
+    top_val = top_val * cfg.moe_routed_scale
+
+    # selected-gate matrix (T, E): gate weight where chosen, else 0
+    sel = jnp.zeros((T, E), jnp.float32)
+    sel = sel.at[jnp.arange(T)[:, None], top_idx].max(top_val)
+
+    # per-expert top-C tokens by gate score (score-priority capacity)
+    score_e = jnp.where(sel > 0, sel, -jnp.inf).T           # (E, T)
+    top_c_val, top_c_idx = jax.lax.top_k(score_e, C)        # (E, C)
+    slot_ok = jnp.isfinite(top_c_val)                       # expert had <C picks
+
+    xe = xf[top_c_idx]                                      # (E, C, D) gather
+    # EP placement: experts -> model (when divisible), capacity -> data.
+    # The gather from token-sharded xf into this layout IS the MoE
+    # dispatch all-to-all; the scatter-add back is the return leg.
+    xe = shard_act(xe, ("experts", "expert_cap", None))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["up"].astype(x.dtype))
+    a = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", a, p["down"].astype(x.dtype))
+    ye = shard_act(ye, ("experts", "expert_cap", None))
+    ye = ye * jnp.where(slot_ok, top_c_val, 0.0)[..., None].astype(x.dtype)
+
+    out = jnp.zeros((T, D), x.dtype)
+    out = out.at[jnp.where(slot_ok, top_c_idx, T)].add(
+        ye, mode="drop"
+    )
+
+    if "shared" in p:
+        g = xf @ p["shared"]["gate"].astype(x.dtype)
+        u = xf @ p["shared"]["up"].astype(x.dtype)
+        out = out + (
+            jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        ) @ p["shared"]["down"].astype(x.dtype)
+    return out.reshape(B, L, D)
+
+
+def aux_load_balance_loss(logits: jax.Array, top_idx: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balance auxiliary (f_i * P_i); optional in train."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    frac = jnp.zeros((E,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    frac = frac / jnp.maximum(frac.sum(), 1.0)
+    return E * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -1,0 +1,117 @@
+"""Parameter schema system.
+
+A model is declared once as a nested dict of ``ParamDef`` leaves (shape +
+logical sharding axes + initializer). From that single schema we derive:
+
+  * ``init_tree``      — materialized parameters (smoke tests, examples)
+  * ``abstract_tree``  — ShapeDtypeStruct stand-ins (dry-run: lower/compile
+                         a 27B model on CPU without allocating a byte)
+  * ``sharding_tree``  — NamedSharding per leaf from the logical rules
+  * ``count_params``   — exact parameter count (roofline MODEL_FLOPS term)
+
+This keeps the model code, the dry-run, and the sharding rules from ever
+drifting apart — the schema IS the single source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.sharding import ShardingRules, logical_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """One parameter: shape, logical axes (same arity), init spec."""
+    shape: tuple
+    logical: tuple
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float | None = None  # stddev; None = 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(shape: tuple) -> int:
+    # convention: last axis is the output axis for 2D+; fan_in = product of
+    # the rest (matches the matmul contractions used in layers.py)
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return max(int(np.prod(shape[:-1])), 1)
+
+
+def init_leaf(key: jax.Array, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "neg":
+        return jnp.full(d.shape, -1, d.dtype)
+    if d.init == "embed":
+        s = d.scale if d.scale is not None else 1.0
+        return (s * jax.random.normal(key, d.shape)).astype(d.dtype)
+    s = d.scale if d.scale is not None else 1.0 / math.sqrt(_fan_in(d.shape))
+    return (s * jax.random.normal(key, d.shape)).astype(d.dtype)
+
+
+def init_tree(key: jax.Array, schema) -> dict:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(schema) -> dict:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), schema, is_leaf=_is_def
+    )
+
+
+def sharding_tree(
+    schema, mesh: Mesh, rules: ShardingRules | None = None
+) -> dict:
+    return jax.tree.map(
+        lambda d: logical_sharding(d.logical, mesh, dims=d.shape, rules=rules),
+        schema,
+        is_leaf=_is_def,
+    )
+
+
+def spec_tree(schema, mesh: Mesh, rules: ShardingRules | None = None) -> dict:
+    """PartitionSpec tree (for pjit in_shardings)."""
+    return jax.tree.map(
+        lambda s: s.spec, sharding_tree(schema, mesh, rules),
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )
+
+
+def count_params(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=_is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def bytes_params(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=_is_def)
+    return sum(
+        int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves
+    )
+
+
+def cast_tree(params, dtype) -> dict:
+    """Cast floating leaves (activations dtype for fwd) — keeps int leaves."""
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, params)

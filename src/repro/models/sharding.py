@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation axis in the model stack is annotated with a
+LOGICAL name; this module maps logical names onto physical mesh axes for
+the production meshes defined in launch/mesh.py:
+
+    single-pod:  (data=16, model=16)
+    multi-pod:   (pod=2, data=16, model=16)
+
+Rules (DESIGN.md §6):
+    batch                 -> ('pod', 'data')   (DP over pods and data axis)
+    vocab/heads/d_ff/...  -> 'model'           (TP)
+    d_model on params     -> 'data'            (FSDP: ZeRO-3 style)
+    kv_seq (decode cache) -> 'data'            (long-context sequence shard)
+    experts               -> 'model'           (EP when divisible)
+
+A rule maps a logical axis to a priority list of mesh axes; the first axis
+present in the mesh AND dividing the dimension size is chosen (so e.g. a
+14-head attention simply falls back to unsharded heads instead of failing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> candidate mesh axes, in priority order. A tuple entry
+# means "all of these together" (e.g. batch over pod AND data).
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"),),
+    "batch_nopod": (("data",),),
+    "seq": (),                      # activations: sequence unsharded (train)
+    "seq_act": (("model",),),       # SEQUENCE PARALLEL: block-boundary
+                                    # activations shard seq -> model (the
+                                    # Megatron-SP trick, via constraints)
+    "kv_seq": (("data",), ("model",)),   # decode KV cache sequence axis;
+                                    # falls to model when data is taken by
+                                    # batch and kv_heads can't use model
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "d_ff": (("model",),),
+    "d_model": (("data",),),        # params only (FSDP axis)
+    "d_model_act": (),              # activations: d_model replicated
+    "experts": (("model",),),
+    "expert_cap": (("data", "model"), ("data",)),  # MoE capacity axis:
+                                    # both axes when EP is unavailable
+    "ssm_state": (),
+    "ssm_heads": (("model",),),
+    "conv_k": (),
+    "frontend": (),
+    "lora": (),
+    "stack": (),                    # scan-stacked layer axis: never sharded
+    None: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple = tuple(DEFAULT_RULES.items())
+
+    def as_dict(self) -> dict:
+        return dict(self.rules)
+
+
+def _pick_axes(
+    logical: str | None,
+    dim: int | None,
+    mesh: Mesh,
+    rules: dict[str, tuple],
+    used: set | None = None,
+) -> tuple[str, ...] | None:
+    """Choose mesh axes for one logical axis (None = replicate). A
+    candidate is skipped when any of its axes is already ``used`` by an
+    earlier logical axis of the same value — so priority lists fall
+    through (e.g. kv_seq: data taken by batch -> model)."""
+    for cand in rules.get(logical, ()):
+        axes = cand if isinstance(cand, tuple) else (cand,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            continue
+        if used is not None and any(a in used for a in axes):
+            continue
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if dim is None or dim % total == 0:
+            return axes
+    return None
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    mesh: Mesh,
+    *,
+    dims: Sequence[int] | None = None,
+    rules: ShardingRules | None = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for ``mesh``.
+
+    ``dims`` (optional) enables divisibility fallback: a logical axis whose
+    size does not divide by its mesh-axis product is replicated instead.
+    A mesh axis is used at most once (first logical axis wins).
+    """
+    rd = (rules or ShardingRules()).as_dict()
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        dim = None if dims is None else dims[i]
+        axes = _pick_axes(name, dim, mesh, rd, used)
+        if axes is None:
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def logical_sharding(
+    logical_axes: Sequence[str | None],
+    mesh: Mesh,
+    *,
+    dims: Sequence[int] | None = None,
+    rules: ShardingRules | None = None,
+) -> NamedSharding:
+    return NamedSharding(
+        mesh, logical_to_spec(logical_axes, mesh, dims=dims, rules=rules)
+    )
+
+
+def tree_logical_to_sharding(schema_axes, schema_shapes, mesh, rules=None):
+    """Map a pytree of logical-axes tuples (+ matching shapes tree) to a
+    pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda ax, shp: logical_sharding(ax, mesh, dims=shp, rules=rules),
+        schema_axes,
+        schema_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (sequence parallelism, sharded logits,
+# MoE dispatch placement). The model code annotates activations with
+# LOGICAL axes via ``shard_act``; a driver (dryrun/train/serve launcher)
+# installs the mesh with ``activation_mesh(mesh)``. Outside that context
+# shard_act is a no-op, so smoke tests and CPU runs see plain jnp.
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_ACT = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh, rules: ShardingRules | None = None):
+    prev = getattr(_ACT, "ctx", None)
+    _ACT.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ACT.ctx = prev
+
+
+def shard_act(x: jax.Array, logical: Sequence[str | None]) -> jax.Array:
+    ctx = getattr(_ACT, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    sh = logical_sharding(logical, mesh, dims=x.shape, rules=rules)
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,244 @@
+"""Mamba-2 / SSD blocks (mamba2-130m, zamba2 hybrid).
+
+State-space duality (SSD, arXiv:2405.21060) chunked algorithm: the sequence
+is split into chunks of Q tokens; within a chunk the token-mixing is the
+quadratic masked-decay form (an MXU matmul, exactly the "blocked" compute
+shape TPUs want), and across chunks a (B, H, P, N) state is carried by a
+``lax.scan`` — intra-chunk quadratic + inter-chunk linear recurrence is the
+whole duality. One scan does both (the per-chunk state pass feeds the next
+chunk's inter term), so activation memory is O(chunk) not O(L).
+
+Per head h with decay a_t = dt_t * A_h (A_h < 0):
+    h_t = exp(a_t) h_{t-1} + dt_t * B_t x_t^T,   y_t = C_t h_t + D_h x_t
+
+Projections are split (wz/wx/wB/wC/wdt) rather than fused so each gets a
+clean TP sharding axis (heads for wx, replicated for the small B/C/dt);
+the depthwise conv is causal with a (kernel-1)-token cache at decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, rmsnorm
+
+
+def mamba_schema(cfg) -> dict:
+    d = cfg.d_model
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    kern = cfg.ssm_conv_kernel
+    conv_dim = H * P + 2 * G * N
+    dt = cfg.param_dtype
+    return {
+        "wz": ParamDef((d, H, P), ("d_model", "ssm_heads", None), dtype=dt),
+        "wx": ParamDef((d, H, P), ("d_model", "ssm_heads", None), dtype=dt),
+        "wB": ParamDef((d, G, N), ("d_model", None, None), dtype=dt),
+        "wC": ParamDef((d, G, N), ("d_model", None, None), dtype=dt),
+        "wdt": ParamDef((d, H), ("d_model", "ssm_heads"), dtype=dt),
+        "conv_w": ParamDef((kern, conv_dim), ("conv_k", None), dtype=dt,
+                           scale=0.3),
+        "conv_b": ParamDef((conv_dim,), (None,), "zeros", dtype=dt),
+        "A_log": ParamDef((H,), ("ssm_heads",), "ones", dtype=jnp.float32),
+        "D": ParamDef((H,), ("ssm_heads",), "ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), "zeros", dtype=jnp.float32),
+        "norm": ParamDef((H * P,), ("d_ff",), "ones", dtype=dt),
+        "out": ParamDef((H, P, d), ("ssm_heads", None, "d_model"), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (K, C); left-pad K-1."""
+    K = w.shape[0]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,     # (B, L, H) f32, positive
+    A: jax.Array,      # (H,) f32, negative
+    Bm: jax.Array,     # (B, L, G, N)
+    Cm: jax.Array,     # (B, L, G, N)
+    *,
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, H, P, N) initial state
+    return_state: bool = False,
+    intra_dtype=jnp.float32,       # §Perf: bf16 halves intra-chunk traffic
+):
+    B_, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (L + pad) // chunk
+    Q = chunk
+
+    def chunked(t):   # (B, L', ...) -> (nc, B, Q, ...)
+        return t.reshape(B_, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunked(x), chunked(dt.astype(jnp.float32)),
+          chunked(Bm), chunked(Cm))
+    h_init = (jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+
+    def step(h_prev, inp):
+        x_c, dt_c, B_c, C_c = inp        # (B,Q,H,P) (B,Q,H) (B,Q,G,N)
+        a_c = dt_c * A                    # (B, Q, H) negative
+        cum = jnp.cumsum(a_c, axis=1)     # inclusive
+        cum_t = cum.transpose(0, 2, 1)    # (B, H, Q)
+        a_sum = cum_t[:, :, -1]           # (B, H)
+
+        # head-expanded B/C (groups broadcast over heads within group)
+        B_h = jnp.repeat(B_c, hpg, axis=2)           # (B, Q, H, N)
+        C_h = jnp.repeat(C_c, hpg, axis=2)
+
+        # ---- intra-chunk (quadratic, masked decay) — the MXU part.
+        # intra_dtype=bf16 keeps the (B,H,Q,Q) streams in bf16 end to end
+        # (halves the dominant backward traffic); the final y accumulation
+        # stays f32.
+        CB = jnp.einsum("bqhn,bkhn->bhqk", C_h.astype(intra_dtype),
+                        B_h.astype(intra_dtype),
+                        preferred_element_type=intra_dtype)
+        # mask the ARGUMENT, not the exp: upper-triangle diffs are
+        # positive and exp overflows; inf * 0 would NaN the backward
+        darg = cum_t[:, :, :, None] - cum_t[:, :, None, :]
+        Ldec = jnp.exp(jnp.where(tri[None, None], darg, -1e30))
+        scores = CB * Ldec.astype(intra_dtype)
+        scores = scores * dt_c.transpose(0, 2, 1)[:, :, None, :].astype(
+            intra_dtype)                                           # dt_j
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", scores,
+                             x_c.astype(intra_dtype),
+                             preferred_element_type=jnp.float32)
+
+        # ---- inter-chunk (contribution of carried state)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", C_h.astype(jnp.float32),
+                             h_prev) * jnp.exp(cum)[..., None]
+
+        # ---- state update for next chunk
+        decay_end = jnp.exp(a_sum[:, None, :] - cum)  # (B, Q, H)
+        wB = B_h.astype(jnp.float32) * (dt_c * decay_end)[..., None]
+        state_c = jnp.einsum("bqhn,bqhp->bhpn", wB, x_c.astype(jnp.float32))
+        h_new = jnp.exp(a_sum)[:, :, None, None] * h_prev + state_c
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    # flash-style memory model: the (B,H,Q,Q) intra-chunk tensors are
+    # recomputed in the backward instead of being saved per chunk
+    h_last, ys = jax.lax.scan(jax.checkpoint(step), h_init, xs)
+    y = ys.swapaxes(0, 1).reshape(B_, nc * Q, H, P)[:, :L]
+    if return_state:
+        return y, h_last
+    return y
+
+
+def mamba_block(p: dict, x: jax.Array, cfg, *, return_cache: bool = False):
+    """Full Mamba-2 block fwd (train/prefill). x: (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    z = jnp.einsum("bld,dhp->blhp", x, p["wz"].astype(x.dtype))
+    xin = jnp.einsum("bld,dhp->blhp", x, p["wx"].astype(x.dtype))
+    Bm = jnp.einsum("bld,dgn->blgn", x, p["wB"].astype(x.dtype))
+    Cm = jnp.einsum("bld,dgn->blgn", x, p["wC"].astype(x.dtype))
+    dt_raw = jnp.einsum("bld,dh->blh", x, p["wdt"].astype(x.dtype))
+
+    conv_in = jnp.concatenate(
+        [xin.reshape(B, L, H * P), Bm.reshape(B, L, G * N),
+         Cm.reshape(B, L, G * N)], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xc = conv_out[..., : H * P].reshape(B, L, H, P)
+    Bc = conv_out[..., H * P : H * P + G * N].reshape(B, L, G, N)
+    Cc = conv_out[..., H * P + G * N :].reshape(B, L, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    intra = jnp.bfloat16 if cfg.ssm_intra_dtype == "bf16" else jnp.float32
+    y, h_last = ssd_scan(xc, dt, A, Bc, Cc, chunk=cfg.ssm_chunk,
+                         return_state=True, intra_dtype=intra)
+    y = y + xc * p["D"].astype(x.dtype)[None, None, :, None]
+
+    # gated RMSNorm then out-projection
+    g = y.reshape(B, L, H * P) * jax.nn.silu(
+        z.reshape(B, L, H * P).astype(jnp.float32)).astype(x.dtype)
+    g = rmsnorm({"scale": p["norm"]}, g)
+    out = jnp.einsum("blhp,hpd->bld", g.reshape(B, L, H, P),
+                     p["out"].astype(x.dtype))
+    if return_cache:
+        K = cfg.ssm_conv_kernel
+        conv_tail = conv_in[:, L - (K - 1):] if L >= K - 1 else jnp.pad(
+            conv_in, ((0, 0), (K - 1 - L, 0), (0, 0)))
+        return out, {"conv": conv_tail, "state": h_last}
+    return out
+
+
+def mamba_cache_schema(cfg, batch: int) -> dict:
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = H * P + 2 * G * N
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv_kernel - 1, conv_dim),
+                         ("batch", None, None), "zeros", dtype=cfg.cache_dtype),
+        "state": ParamDef((batch, H, P, N),
+                          ("batch", "ssm_heads", None, "ssm_state"),
+                          "zeros", dtype=jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token recurrent step. x: (B, 1, d)."""
+    B = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    z = jnp.einsum("bld,dhp->blhp", x, p["wz"].astype(x.dtype))
+    xin = jnp.einsum("bld,dhp->blhp", x, p["wx"].astype(x.dtype))
+    Bm = jnp.einsum("bld,dgn->blgn", x, p["wB"].astype(x.dtype))
+    Cm = jnp.einsum("bld,dgn->blgn", x, p["wC"].astype(x.dtype))
+    dt_raw = jnp.einsum("bld,dh->blh", x, p["wdt"].astype(x.dtype))
+
+    conv_in = jnp.concatenate(
+        [xin.reshape(B, 1, H * P), Bm.reshape(B, 1, G * N),
+         Cm.reshape(B, 1, G * N)], axis=-1)
+    # roll the conv cache (kernel-1 past tokens)
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), conv_in], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    xc = conv_out[..., : H * P].reshape(B, H, P)
+    Bc = conv_out[..., H * P : H * P + G * N].reshape(B, G, N)
+    Cc = conv_out[..., H * P + G * N :].reshape(B, G, N)
+    hpg = H // G
+    B_h = jnp.repeat(Bc, hpg, axis=1)                  # (B, H, N)
+    C_h = jnp.repeat(Cc, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                            # (B, H)
+    h = cache["state"]                                 # (B, H, P, N) f32
+    upd = (dt[..., None, None] * xc.astype(jnp.float32)[..., None]
+           * B_h.astype(jnp.float32)[:, :, None, :])
+    h_new = decay[..., None, None] * h + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, C_h.astype(jnp.float32))
+    y = y.astype(x.dtype) + xc * p["D"].astype(x.dtype)[None, :, None]
+
+    g = y.reshape(B, 1, H * P) * jax.nn.silu(
+        z.reshape(B, 1, H * P).astype(jnp.float32)).astype(x.dtype)
+    g = rmsnorm({"scale": p["norm"]}, g)
+    out = jnp.einsum("blhp,hpd->bld", g.reshape(B, 1, H, P),
+                     p["out"].astype(x.dtype))
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "state": h_new}

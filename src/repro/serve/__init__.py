@@ -1,0 +1,24 @@
+from repro.serve.decode import (
+    abstract_cache,
+    cache_schema,
+    cache_shardings,
+    init_cache,
+    prefill,
+    serve_step,
+)
+from repro.serve.knn_lm import KNNDatastore, interpolate, knn_logits
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+__all__ = [
+    "ContinuousBatcher",
+    "KNNDatastore",
+    "Request",
+    "abstract_cache",
+    "cache_schema",
+    "cache_shardings",
+    "init_cache",
+    "interpolate",
+    "knn_logits",
+    "prefill",
+    "serve_step",
+]

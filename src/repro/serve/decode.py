@@ -1,0 +1,371 @@
+"""Serving: prefill + single-token decode with per-family batched caches.
+
+Cache trees mirror the parameter stack structure (scan-stacked over
+layers), so decode steps scan over (layer_params, layer_cache) pairs and
+HLO size stays depth-independent. Cache kinds:
+
+  * GQA linear cache  (B, max_len, Hkv, Dh) + kpos tags
+  * GQA ring cache    (B, window,  Hkv, Dh) — local-window layers store
+    only ``window`` entries (gemma2 local, starcoder2): long_500k decode
+    memory is window-bounded on those layers.
+  * MLA latent cache  (B, max_len, kv_lora + rope) — deepseek-v2's
+    KV-compression contribution, with weight-absorbed decode.
+  * SSM cache         conv tail (B, K-1, conv_dim) + state (B, H, P, N):
+    O(1) in sequence length — why the ssm/hybrid archs own long_500k.
+
+``serve_step`` is the function the decode_32k / long_500k dry-run cells
+lower: (params, cache, tokens (B,1), lengths (B,)) -> (logits, cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.model import embed_inputs, output_logits
+from repro.models.params import ParamDef, abstract_tree, init_tree, sharding_tree
+from repro.models.transformer import (
+    apply_ffn,
+    apply_norm,
+    attn_block,
+    mamba_block,
+    shared_block,
+    stack_schema,
+)
+
+
+# ---------------------------------------------------------------------------
+# cache schemas (mirror transformer.stack_schema_for)
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg, batch: int, max_len: int) -> dict:
+    if cfg.family == "ssm":
+        return {"layers": stack_schema(
+            ssm_mod.mamba_cache_schema(cfg, batch), cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_seg = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers - n_seg * cfg.attn_every
+        s = {
+            "segments": stack_schema(stack_schema(
+                ssm_mod.mamba_cache_schema(cfg, batch), cfg.attn_every),
+                n_seg),
+            "shared": stack_schema(
+                attn.gqa_cache_schema(cfg, batch, max_len), n_seg),
+        }
+        if rem:
+            s["tail"] = stack_schema(
+                ssm_mod.mamba_cache_schema(cfg, batch), rem)
+        return s
+    one = (attn.mla_cache_schema(cfg, batch, max_len) if cfg.use_mla
+           else None)
+    if cfg.family == "moe" or cfg.n_experts:
+        k = cfg.first_k_dense
+        mk = one or attn.gqa_cache_schema(cfg, batch, max_len)
+        s = {"layers": stack_schema(mk, cfg.n_layers - k)}
+        if k:
+            s["dense_layers"] = stack_schema(mk, k)
+        return s
+    if cfg.layer_pattern == "local_global":
+        pair = {
+            "local": attn.gqa_cache_schema(cfg, batch, max_len,
+                                           window=cfg.window),
+            "global": attn.gqa_cache_schema(cfg, batch, max_len),
+        }
+        return {"pairs": stack_schema(pair, cfg.n_layers // 2)}
+    window = cfg.window if cfg.layer_pattern == "local" else None
+    return {"layers": stack_schema(
+        attn.gqa_cache_schema(cfg, batch, max_len, window=window),
+        cfg.n_layers)}
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    return init_tree(jax.random.key(0), cache_schema(cfg, batch, max_len))
+
+
+def abstract_cache(cfg, batch: int, max_len: int) -> dict:
+    return abstract_tree(cache_schema(cfg, batch, max_len))
+
+
+def cache_shardings(cfg, batch: int, max_len: int, mesh, rules=None):
+    return sharding_tree(cache_schema(cfg, batch, max_len), mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# block decode steps
+# ---------------------------------------------------------------------------
+
+def _attn_block_decode(p, x, c, lengths, cfg, *, window=None, ffn="dense"):
+    h = apply_norm(p["norm1"], x, cfg)
+    if cfg.use_mla:
+        a, c2 = attn.mla_decode(p["attn"], h, c, lengths, cfg)
+    else:
+        a, c2 = attn.gqa_decode(p["attn"], h, c, lengths, cfg, window=window)
+    if cfg.post_norms:
+        a = apply_norm(p["norm_post_attn"], a, cfg)
+    x = x + cfg.residual_multiplier * a
+    h = apply_norm(p["norm2"], x, cfg)
+    if ffn == "moe":
+        m = moe_mod.moe_ffn(p["ffn"], h, cfg)
+    else:
+        m = apply_ffn(p["ffn"], h, cfg)
+    if cfg.post_norms:
+        m = apply_norm(p["norm_post_ffn"], m, cfg)
+    return x + cfg.residual_multiplier * m, c2
+
+
+def _mamba_block_decode(p, x, c, cfg):
+    h = apply_norm(p["norm"], x, cfg)
+    y, c2 = ssm_mod.mamba_decode(p["mixer"], h, c, cfg)
+    return x + cfg.residual_multiplier * y, c2
+
+
+def _shared_block_decode(p, x, c, lengths, cfg, inv):
+    la = p["lora_a"][inv]
+    lb = p["lora_b"][inv]
+    x = x + (x @ la.astype(x.dtype)) @ lb.astype(x.dtype)
+    return _attn_block_decode(p["block"], x, c, lengths, cfg)
+
+
+# ---------------------------------------------------------------------------
+# serve_step: one token for every slot
+# ---------------------------------------------------------------------------
+
+def serve_step(params, cache, tokens, lengths, cfg):
+    """(B,1) tokens at positions ``lengths`` -> (logits (B, vocab), cache)."""
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    stack = params["stack"]
+
+    if cfg.family == "ssm":
+        def body(h, pc):
+            lp, lc = pc
+            h, lc2 = _mamba_block_decode(lp, h, lc, cfg)
+            return h, lc2
+        x, new_layers = jax.lax.scan(body, x, (stack["layers"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif cfg.family == "hybrid":
+        def body(carry, pc):
+            h, inv = carry
+            seg_p, seg_c, sh_c = pc
+
+            def inner(hh, pc2):
+                lp, lc = pc2
+                hh, lc2 = _mamba_block_decode(lp, hh, lc, cfg)
+                return hh, lc2
+            h, seg_c2 = jax.lax.scan(inner, h, (seg_p, seg_c))
+            la = stack["shared"]["lora_a"][inv]
+            lb = stack["shared"]["lora_b"][inv]
+            h = h + (h @ la.astype(h.dtype)) @ lb.astype(h.dtype)
+            h, sh_c2 = _attn_block_decode(
+                stack["shared"]["block"], h, sh_c, lengths, cfg)
+            return (h, inv + 1), (seg_c2, sh_c2)
+        (x, _), (new_seg, new_sh) = jax.lax.scan(
+            body, (x, jnp.int32(0)),
+            (stack["segments"], cache["segments"], cache["shared"]))
+        new_cache = {"segments": new_seg, "shared": new_sh}
+        if "tail" in stack:
+            def body_t(h, pc):
+                lp, lc = pc
+                h, lc2 = _mamba_block_decode(lp, h, lc, cfg)
+                return h, lc2
+            x, new_tail = jax.lax.scan(body_t, x,
+                                       (stack["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+
+    elif cfg.family == "moe" or cfg.n_experts:
+        new_cache = {}
+        if "dense_layers" in stack:
+            def body_d(h, pc):
+                lp, lc = pc
+                h, lc2 = _attn_block_decode(lp, h, lc, lengths, cfg,
+                                            ffn="dense")
+                return h, lc2
+            x, nd = jax.lax.scan(body_d, x, (stack["dense_layers"],
+                                             cache["dense_layers"]))
+            new_cache["dense_layers"] = nd
+
+        def body(h, pc):
+            lp, lc = pc
+            h, lc2 = _attn_block_decode(lp, h, lc, lengths, cfg, ffn="moe")
+            return h, lc2
+        x, nl = jax.lax.scan(body, x, (stack["layers"], cache["layers"]))
+        new_cache["layers"] = nl
+
+    elif cfg.layer_pattern == "local_global":
+        def body(h, pc):
+            lp, lc = pc
+            h, c_l = _attn_block_decode(lp["local"], h, lc["local"],
+                                        lengths, cfg, window=cfg.window)
+            h, c_g = _attn_block_decode(lp["global"], h, lc["global"],
+                                        lengths, cfg)
+            return h, {"local": c_l, "global": c_g}
+        x, new_pairs = jax.lax.scan(body, x, (stack["pairs"],
+                                              cache["pairs"]))
+        new_cache = {"pairs": new_pairs}
+
+    else:
+        window = cfg.window if cfg.layer_pattern == "local" else None
+
+        def body(h, pc):
+            lp, lc = pc
+            h, lc2 = _attn_block_decode(lp, h, lc, lengths, cfg,
+                                        window=window)
+            return h, lc2
+        x, new_layers = jax.lax.scan(body, x, (stack["layers"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    logits = output_logits(params, x, cfg)[:, 0]       # (B, vocab)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that seeds the cache
+# ---------------------------------------------------------------------------
+
+def _seed_gqa(cfg, k, v, max_len, window):
+    """Build a {k, v, kpos} cache from prefill (B, L, Hkv, Dh) tensors."""
+    B, L = k.shape[0], k.shape[1]
+    S = min(window, max_len) if window is not None else max_len
+    dt = cfg.cache_dtype
+    if S >= L:
+        kc = jnp.pad(k.astype(dt), ((0, 0), (0, S - L), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(dt), ((0, 0), (0, S - L), (0, 0), (0, 0)))
+        kp = jnp.broadcast_to(
+            jnp.where(jnp.arange(S) < L, jnp.arange(S), -1), (B, S))
+    else:
+        # ring: keep the last S positions, placed at their slot pos % S
+        kt, vt = k[:, L - S:], v[:, L - S:]
+        pos = jnp.arange(L - S, L)
+        slot = pos % S
+        kc = jnp.zeros((B, S, *k.shape[2:]), dt).at[:, slot].set(
+            kt.astype(dt))
+        vc = jnp.zeros((B, S, *v.shape[2:]), dt).at[:, slot].set(
+            vt.astype(dt))
+        kp = jnp.zeros((B, S), jnp.int32).at[:, slot].set(
+            jnp.broadcast_to(pos, (B, S)))
+    return {"k": kc, "v": vc, "kpos": kp.astype(jnp.int32)}
+
+
+def _seed_mla(cfg, ckv, krope, max_len):
+    B, L = ckv.shape[0], ckv.shape[1]
+    dt = cfg.cache_dtype
+    ck = jnp.pad(ckv.astype(dt), ((0, 0), (0, max_len - L), (0, 0)))
+    kr = jnp.pad(krope.astype(dt), ((0, 0), (0, max_len - L), (0, 0)))
+    kp = jnp.broadcast_to(
+        jnp.where(jnp.arange(max_len) < L, jnp.arange(max_len), -1),
+        (B, max_len))
+    return {"ckv": ck, "krope": kr, "kpos": kp.astype(jnp.int32)}
+
+
+def _attn_block_prefill(p, x, cfg, max_len, *, window=None, ffn="dense"):
+    h = apply_norm(p["norm1"], x, cfg)
+    if cfg.use_mla:
+        a, (ckv, krope) = attn.mla_attention(p["attn"], h, cfg,
+                                             return_latent=True)
+        c = _seed_mla(cfg, ckv, krope, max_len)
+    else:
+        a, (k, v) = attn.gqa_attention(p["attn"], h, cfg, window=window,
+                                       return_kv=True)
+        c = _seed_gqa(cfg, k, v, max_len, window)
+    if cfg.post_norms:
+        a = apply_norm(p["norm_post_attn"], a, cfg)
+    x = x + cfg.residual_multiplier * a
+    h = apply_norm(p["norm2"], x, cfg)
+    m = moe_mod.moe_ffn(p["ffn"], h, cfg) if ffn == "moe" \
+        else apply_ffn(p["ffn"], h, cfg)
+    if cfg.post_norms:
+        m = apply_norm(p["norm_post_ffn"], m, cfg)
+    return x + cfg.residual_multiplier * m, c
+
+
+def _mamba_block_prefill(p, x, cfg):
+    h = apply_norm(p["norm"], x, cfg)
+    y, c = ssm_mod.mamba_block(p["mixer"], h, cfg, return_cache=True)
+    return x + cfg.residual_multiplier * y, c
+
+
+def prefill(params, batch, cfg, max_len: int, *, last_only: bool = False):
+    """Full-sequence prefill. Returns (logits, cache, lengths); logits are
+    (B, L, V), or (B, V) for the new-token sampling position when
+    ``last_only`` (serving never materializes the (B, 32k, V) tensor)."""
+    x = embed_inputs(params, batch, cfg)
+    L = x.shape[1]
+    B = x.shape[0]
+    stack = params["stack"]
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            h, c = _mamba_block_prefill(lp, h, cfg)
+            return h, c
+        x, layers = jax.lax.scan(body, x, stack["layers"])
+        cache = {"layers": layers}
+
+    elif cfg.family == "hybrid":
+        def body(carry, seg):
+            h, inv = carry
+            lp, _ = seg
+
+            def inner(hh, lpp):
+                return _mamba_block_prefill(lpp, hh, cfg)
+            h, seg_c = jax.lax.scan(inner, h, lp)
+            la = stack["shared"]["lora_a"][inv]
+            lb = stack["shared"]["lora_b"][inv]
+            h = h + (h @ la.astype(h.dtype)) @ lb.astype(h.dtype)
+            h, sh_c = _attn_block_prefill(stack["shared"]["block"], h, cfg,
+                                          max_len)
+            return (h, inv + 1), (seg_c, sh_c)
+        n_seg = cfg.n_layers // cfg.attn_every
+        (x, _), (seg_c, sh_c) = jax.lax.scan(
+            body, (x, jnp.int32(0)),
+            (stack["segments"], jnp.arange(n_seg)))
+        cache = {"segments": seg_c, "shared": sh_c}
+        if "tail" in stack:
+            def body_t(h, lp):
+                return _mamba_block_prefill(lp, h, cfg)
+            x, tail_c = jax.lax.scan(body_t, x, stack["tail"])
+            cache["tail"] = tail_c
+
+    elif cfg.family == "moe" or cfg.n_experts:
+        cache = {}
+        if "dense_layers" in stack:
+            def body_d(h, lp):
+                return _attn_block_prefill(lp, h, cfg, max_len,
+                                           ffn="dense_first")
+            x, cd = jax.lax.scan(body_d, x, stack["dense_layers"])
+            cache["dense_layers"] = cd
+
+        def body(h, lp):
+            return _attn_block_prefill(lp, h, cfg, max_len, ffn="moe")
+        x, cl = jax.lax.scan(body, x, stack["layers"])
+        cache["layers"] = cl
+
+    elif cfg.layer_pattern == "local_global":
+        def body(h, lp):
+            h, c_l = _attn_block_prefill(lp["local"], h, cfg, max_len,
+                                         window=cfg.window)
+            h, c_g = _attn_block_prefill(lp["global"], h, cfg, max_len)
+            return h, {"local": c_l, "global": c_g}
+        x, pairs = jax.lax.scan(body, x, stack["pairs"])
+        cache = {"pairs": pairs}
+
+    else:
+        window = cfg.window if cfg.layer_pattern == "local" else None
+
+        def body(h, lp):
+            return _attn_block_prefill(lp, h, cfg, max_len, window=window)
+        x, layers = jax.lax.scan(body, x, stack["layers"])
+        cache = {"layers": layers}
+
+    if last_only:
+        logits = output_logits(params, x[:, -1:], cfg)[:, 0]
+    else:
+        logits = output_logits(params, x, cfg)
+    lengths = jnp.full((B,), L, jnp.int32)
+    return logits, cache, lengths

@@ -1,0 +1,76 @@
+"""kNN-LM serving — the paper's K-NN graph as a first-class serving
+component (DESIGN.md §3).
+
+Datastore build: run the LM over a corpus, record (hidden state ->
+next token) pairs, then build the K-NN GRAPH over the keys with the
+paper's NN-Descent (core/). At decode time the query hidden state is
+answered by greedy graph search (core/graph_search.py) over that graph —
+NOT brute force — and the retrieved neighbors' continuation tokens form a
+distance-weighted distribution that is interpolated with the LM logits:
+
+    p(y) = (1 - lam) * p_LM(y) + lam * p_kNN(y)
+    p_kNN(y) ∝ sum_{(k_i, v_i): v_i = y} exp(-d(q, k_i) / T)
+
+The graph build cost is where the paper's optimizations (turbosampling,
+blocked distances, reordering) pay off at datastore scale; the reorder
+permutation ALSO improves search-time locality (neighbors of a graph node
+sit in adjacent datastore rows after σ).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DescentConfig, build_knn_graph, graph_search
+
+
+@dataclasses.dataclass
+class KNNDatastore:
+    keys: jax.Array         # (n, d) hidden states (reordered by sigma)
+    values: jax.Array       # (n,) next-token ids  (reordered alike)
+    graph_idx: jax.Array    # (n, k) K-NN graph in the reordered id space
+    build_stats: dict
+
+    @classmethod
+    def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
+              cfg: DescentConfig | None = None,
+              key: jax.Array | None = None):
+        cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
+        dist, idx, st = build_knn_graph(keys, k=k, cfg=cfg, key=key)
+        return cls(
+            keys=keys.astype(jnp.float32),
+            values=values,
+            graph_idx=idx,
+            build_stats={"iters": st.iters, "dist_evals": st.dist_evals,
+                         "reordered": st.reordered},
+        )
+
+
+def knn_logits(
+    ds: KNNDatastore,
+    queries: jax.Array,      # (q, d) hidden states
+    vocab: int,
+    *,
+    k: int = 8,
+    temperature: float = 10.0,
+    beam: int = 32,
+    rounds: int = 24,
+) -> jax.Array:
+    """Graph-search retrieval -> (q, vocab) log-probabilities."""
+    dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
+                             k_out=k, beam=beam, rounds=rounds)
+    w = jax.nn.softmax(-dist / temperature, axis=-1)        # (q, k)
+    vals = ds.values[jnp.clip(idx, 0, ds.values.shape[0] - 1)]
+    probs = jnp.zeros((queries.shape[0], vocab))
+    probs = probs.at[jnp.arange(queries.shape[0])[:, None], vals].add(w)
+    return jnp.log(jnp.maximum(probs, 1e-20))
+
+
+def interpolate(lm_logits: jax.Array, knn_logp: jax.Array,
+                lam: float = 0.25) -> jax.Array:
+    """log[(1-lam) p_LM + lam p_kNN]."""
+    lm_logp = jax.nn.log_softmax(lm_logits.astype(jnp.float32), axis=-1)
+    return jnp.logaddexp(
+        lm_logp + jnp.log1p(-lam), knn_logp + jnp.log(lam))

@@ -1,0 +1,104 @@
+"""Continuous batching: a fixed pool of decode slots; requests join as
+slots free up, every ``serve_step`` advances ALL active slots one token.
+
+The decode step itself is shape-static (B = n_slots always); inactive
+slots carry a dummy token and their outputs are ignored — the standard
+TPU-friendly realization of continuous batching (no recompilation as
+requests come and go).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotState:
+    active: bool = False
+    rid: int = -1
+    remaining: int = 0
+
+
+class ContinuousBatcher:
+    """Drives serve_step over a slot pool.
+
+    prefill_fn(tokens (1, L)) -> (last_logits (1, V), cache_for_one, L)
+    step_fn(cache, tokens (B,1), lengths (B,)) -> (logits (B, V), cache)
+    write_slot(cache, slot_idx, one_cache, length) -> cache
+    """
+
+    def __init__(self, n_slots: int, step_fn: Callable,
+                 prefill_fn: Callable, write_slot: Callable,
+                 sampler: Callable | None = None):
+        self.n_slots = n_slots
+        self.step_fn = step_fn
+        self.prefill_fn = prefill_fn
+        self.write_slot = write_slot
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.slots = [SlotState() for _ in range(n_slots)]
+        self.queue: list[Request] = []
+        self.live: dict[int, Request] = {}
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self.steps = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self, cache):
+        for i, s in enumerate(self.slots):
+            if s.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, one_cache, plen = self.prefill_fn(
+                req.prompt[None, :])
+            cache = self.write_slot(cache, i, one_cache, plen)
+            first = int(self.sampler(logits[0]))
+            req.out.append(first)
+            self.tokens[i, 0] = first
+            self.lengths[i] = plen
+            self.slots[i] = SlotState(True, req.rid, req.max_new - 1)
+            self.live[req.rid] = req
+        return cache
+
+    def step(self, cache):
+        """One decode step for every active slot; returns new cache."""
+        cache = self._admit(cache)
+        if not any(s.active for s in self.slots):
+            return cache, False
+        logits, cache = self.step_fn(
+            cache, jnp.asarray(self.tokens), jnp.asarray(self.lengths))
+        nxt = np.asarray(self.sampler(logits))
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            self.lengths[i] += 1
+            tok = int(nxt[i])
+            self.tokens[i, 0] = tok
+            req = self.live[s.rid]
+            req.out.append(tok)
+            s.remaining -= 1
+            if s.remaining <= 0:
+                req.done = True
+                del self.live[s.rid]
+                self.slots[i] = SlotState()
+        self.steps += 1
+        return cache, True
+
+    def run(self, cache, *, max_steps: int = 10_000):
+        while (self.queue or self.live) and self.steps < max_steps:
+            cache, _ = self.step(cache)
+        return cache

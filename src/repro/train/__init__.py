@@ -1,0 +1,10 @@
+from repro.train.loop import TrainConfig, TrainLoop, make_train_step
+from repro.train.optimizer import AdamState, OptimizerConfig
+
+__all__ = [
+    "AdamState",
+    "OptimizerConfig",
+    "TrainConfig",
+    "TrainLoop",
+    "make_train_step",
+]

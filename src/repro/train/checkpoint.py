@@ -1,0 +1,224 @@
+"""Sharded checkpointing: per-host npz shards + manifest, atomic rename,
+async background writes, automatic resume.
+
+Layout (step 1200, 2 hosts):
+    ckpt_dir/
+      step_00001200/
+        manifest.json            # step, config hash, leaf index, done flag
+        host_00000.npz           # this host's addressable shard data
+        host_00001.npz
+      latest -> step_00001200    # symlink, updated after manifest commit
+
+Crash safety: writes go to ``step_X.tmp`` and are renamed into place only
+after every file is flushed; a partial directory is never visible under
+its final name, and ``latest_step`` ignores unrenamed temp dirs. Async
+mode hands the (host-local, already-device-fetched) arrays to a writer
+thread so the train loop never blocks on disk.
+
+Shard-count agnosticism: leaves are saved as the host's addressable
+shards + their index coordinates; ``load`` reassembles the GLOBAL array
+then reshards to whatever mesh the restarting job has — elastic restarts
+with a different device count (train/fault.py) load the same checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def config_hash(cfg) -> str:
+    return hashlib.sha1(repr(cfg).encode()).hexdigest()[:12]
+
+
+@dataclasses.dataclass
+class Checkpointer:
+    directory: str
+    every: int = 100
+    keep: int = 3
+    async_write: bool = True
+    cfg_hash: str = ""
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------------ save
+    def maybe_save(self, step: int, params, opt_state) -> bool:
+        if self.every and step % self.every == 0:
+            self.save(step, params, opt_state)
+            return True
+        return False
+
+    def save(self, step: int, params, opt_state, *, wait: bool = False):
+        self.wait()                     # one outstanding write at a time
+        if self._error:
+            raise self._error
+        tree = {"params": params, "opt_state": opt_state}
+        # fetch addressable data on the caller thread (device buffers are
+        # not thread-safe to donate); numpy copies go to the writer.
+        host_data = {}
+        for name, leaf in _leaf_paths(tree):
+            if isinstance(leaf, jax.Array) and len(leaf.sharding.device_set) > 1:
+                shards = [
+                    (s.index, np.asarray(s.data))
+                    for s in leaf.addressable_shards
+                ]
+                host_data[name] = ("sharded", leaf.shape, str(leaf.dtype),
+                                   shards)
+            else:
+                host_data[name] = ("full", None, None, np.asarray(leaf))
+
+        def write():
+            tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            payload = {}
+            index = {}
+            for name, (kind, shape, dtype, data) in host_data.items():
+                if kind == "full":
+                    payload[name] = data
+                    index[name] = {"kind": "full"}
+                else:
+                    for i, (idx, arr) in enumerate(data):
+                        payload[f"{name}@@{i}"] = arr
+                    index[name] = {
+                        "kind": "sharded",
+                        "shape": list(shape),
+                        "dtype": dtype,
+                        "slices": [
+                            [[sl.start, sl.stop] for sl in idx]
+                            for idx, _ in data
+                        ],
+                    }
+            host = jax.process_index()
+            np.savez(os.path.join(tmp, f"host_{host:05d}.npz"), **payload)
+            manifest = {
+                "step": step,
+                "cfg_hash": self.cfg_hash,
+                "n_hosts": jax.process_count(),
+                "index": index,
+                "time": time.time(),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp, final)        # atomic commit
+            link = os.path.join(self.directory, "latest")
+            tmp_link = link + ".tmp"
+            try:
+                if os.path.lexists(tmp_link):
+                    os.unlink(tmp_link)
+                os.symlink(os.path.basename(final), tmp_link)
+                os.replace(tmp_link, link)
+            except OSError:
+                pass
+            self._gc()
+
+        if self.async_write and not wait:
+            def run():
+                try:
+                    write()
+                except Exception as e:        # surfaced on next save/wait
+                    self._error = e
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(self._list_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            import shutil
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"),
+                ignore_errors=True)
+
+    # ------------------------------------------------------------------ load
+    def _list_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                man = os.path.join(self.directory, d, "manifest.json")
+                if os.path.exists(man):
+                    out.append(int(d.split("_")[1]))
+        return out
+
+    def latest_step(self) -> int | None:
+        steps = self._list_steps()
+        return max(steps) if steps else None
+
+    def load(self, step: int | None = None, *, like=None, shardings=None):
+        """Load {'params','opt_state'}; ``like`` (a pytree of arrays or
+        ShapeDtypeStructs) provides the structure; ``shardings`` (same
+        structure) places leaves on the current mesh (elastic reshard)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        buf: dict[str, np.ndarray] = {}
+        for fn in sorted(os.listdir(d)):
+            if fn.endswith(".npz"):
+                with np.load(os.path.join(d, fn)) as z:
+                    for k in z.files:
+                        buf[k] = z[k]
+        full: dict[str, np.ndarray] = {}
+        for name, info in manifest["index"].items():
+            if info["kind"] == "full":
+                full[name] = buf[name]
+            else:
+                arr = np.zeros(info["shape"], dtype=info["dtype"])
+                i = 0
+                while f"{name}@@{i}" in buf:
+                    sl = tuple(
+                        slice(a, b) for a, b in info["slices"][i])
+                    arr[sl] = buf[f"{name}@@{i}"]
+                    i += 1
+                full[name] = arr
+
+        if like is None:
+            return step, full
+        tree = {"params": like[0], "opt_state": like[1]} \
+            if isinstance(like, tuple) else like
+        names = [n for n, _ in _leaf_paths(tree)]
+        leaves = [full[n] for n in names]
+        if shardings is not None:
+            sh_tree = {"params": shardings[0], "opt_state": shardings[1]} \
+                if isinstance(shardings, tuple) else shardings
+            sh = [s for _, s in _leaf_paths(sh_tree)]
+            leaves = [jax.device_put(l, s) for l, s in zip(leaves, sh)]
+        else:
+            leaves = [jnp.asarray(l) for l in leaves]
+        _, treedef = jax.tree_util.tree_flatten(tree)
+        out = jax.tree_util.tree_unflatten(treedef, leaves)
+        return step, out

@@ -1,0 +1,105 @@
+"""Fault tolerance policy layer: NaN rollback, restart budget, straggler
+watchdog, elastic re-meshing.
+
+The pure train step already refuses to apply a non-finite update
+(loop.py nan_guard); this layer handles the *persistent* failure modes a
+1000-node fleet sees:
+
+  * ``FaultPolicy`` — counts consecutive skipped steps; after
+    ``max_consecutive_skips`` it rolls params/opt back to the last good
+    checkpoint and advances the data stream past the poisonous batch.
+    After ``max_restarts`` total rollbacks it raises (page the operator).
+  * ``StragglerWatchdog`` — EWMA of step wall-time; steps slower than
+    ``threshold x`` the EWMA are logged/counted (on real fleets this feeds
+    the scheduler's hot-spare swap; here it exposes the hook + metrics,
+    and the test suite exercises it with injected delays).
+  * ``elastic_mesh`` — given the devices that are ACTUALLY alive, builds
+    the largest (data, model) mesh preserving the model axis, so losing a
+    slice re-forms a smaller data axis; checkpoint.load reshards into it
+    (shard-count-agnostic layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    checkpointer: Any                 # train.checkpoint.Checkpointer
+    max_consecutive_skips: int = 3
+    max_restarts: int = 10
+    last_good_step: int = 0
+    _consecutive: int = 0
+    _restarts: int = 0
+
+    def after_step(self, step: int, params, opt_state, metrics):
+        """Returns (params, opt_state, rolled_back: bool)."""
+        skipped = bool(metrics.get("skipped", 0))
+        if not skipped:
+            self._consecutive = 0
+            self.last_good_step = step + 1
+            return params, opt_state, False
+        self._consecutive += 1
+        if self._consecutive < self.max_consecutive_skips:
+            return params, opt_state, False
+        # persistent failure: roll back
+        self._restarts += 1
+        self._consecutive = 0
+        if self._restarts > self.max_restarts:
+            raise RuntimeError(
+                f"training unstable: {self._restarts} rollbacks "
+                f"(step {step}); refusing to continue")
+        ck_step = self.checkpointer.latest_step()
+        if ck_step is None:
+            raise RuntimeError("NaN streak before any checkpoint exists")
+        self.checkpointer.wait()
+        _, tree = self.checkpointer.load(
+            ck_step, like={"params": params, "opt_state": opt_state})
+        self.last_good_step = ck_step
+        return tree["params"], tree["opt_state"], True
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 2.0            # x EWMA
+    alpha: float = 0.1
+    ewma: float | None = None
+    stragglers: int = 0
+    events: list = dataclasses.field(default_factory=list)
+    _t_last: float | None = None
+
+    def step_start(self):
+        self._t_last = time.time()
+
+    def step_end(self, step: int) -> bool:
+        dt = time.time() - self._t_last
+        slow = False
+        if self.ewma is not None and dt > self.threshold * self.ewma:
+            self.stragglers += 1
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma})
+            slow = True
+            # a straggler should not poison the baseline
+            self.ewma = self.ewma * (1 - self.alpha / 4) + dt * self.alpha / 4
+        else:
+            self.ewma = dt if self.ewma is None else (
+                self.ewma * (1 - self.alpha) + dt * self.alpha)
+        return slow
+
+
+def elastic_mesh(devices=None, *, model_axis: int = 16,
+                 axis_names=("data", "model")):
+    """Largest (data, model) mesh from the live device set, preserving the
+    model axis (param layout survives); data axis shrinks to fit."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    model = min(model_axis, n)
+    while n % model:
+        model -= 1
+    data = n // model
+    arr = np.array(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(arr, axis_names)

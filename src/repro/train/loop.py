@@ -1,0 +1,127 @@
+"""Training step + loop.
+
+``make_train_step`` builds the pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function that launch/dryrun.py lowers on the
+production mesh and launch/train.py jits for real runs:
+
+  * microbatch gradient accumulation via ``lax.scan`` (activation memory
+    / global-batch decoupling) — accumulate in fp32;
+  * remat policy comes from the model config (scan-body checkpoint);
+  * global-norm clip + AdamW (optimizer.py);
+  * NaN-guard: non-finite loss/grad-norm produce a ``skipped`` flag and an
+    identity update instead of poisoning the params (fault.py's rollback
+    handles repeated failures).
+
+The Python-side ``TrainLoop`` adds checkpointing, fault recovery and
+throughput accounting around the pure step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import loss_fn
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import AdamState, OptimizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    nan_guard: bool = True
+    opt: OptimizerConfig = OptimizerConfig()
+
+
+def make_train_step(cfg, tc: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (p, s, metrics)."""
+
+    def compute_grads(params, batch):
+        if tc.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+            return grads, metrics
+
+        m = tc.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            assert b % m == 0, (b, m)
+            return x.reshape(m, b // m, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, mb, cfg), has_aux=True)(params)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / m, acc, grads)
+            return (acc, loss_acc + loss / m), metrics
+
+        (grads, loss), ms = jax.lax.scan(body, (zero, 0.0), mbs)
+        metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def train_step(params, opt_state: AdamState, batch):
+        grads, metrics = compute_grads(params, batch)
+        new_params, new_state, om = opt_mod.apply(
+            tc.opt, params, opt_state, grads)
+        metrics.update(om)
+
+        if tc.nan_guard:
+            ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(om["grad_norm"])
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_state = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_state, opt_state)
+            metrics["skipped"] = (~ok).astype(jnp.int32)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    """Python-side driver: checkpoint cadence, fault policy, throughput."""
+    cfg: Any
+    tc: TrainConfig
+    step_fn: Callable
+    checkpointer: Any = None       # train.checkpoint.Checkpointer
+    fault: Any = None              # train.fault.FaultPolicy
+    log_every: int = 10
+
+    def run(self, params, opt_state, batches, *, start_step: int = 0,
+            callback: Callable | None = None):
+        history = []
+        step = start_step
+        t0 = time.time()
+        for batch in batches:
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch)
+            if self.fault is not None:
+                params, opt_state, rolled = self.fault.after_step(
+                    step, params, opt_state, metrics)
+                if rolled:
+                    step = self.fault.last_good_step
+                    continue
+            step += 1
+            if self.checkpointer is not None:
+                self.checkpointer.maybe_save(step, params, opt_state)
+            if step % self.log_every == 0 or not history:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["steps_per_s"] = (
+                    (step - start_step) / max(time.time() - t0, 1e-9))
+                history.append(m)
+                if callback:
+                    callback(m)
+        if self.checkpointer is not None:
+            self.checkpointer.save(step, params, opt_state, wait=True)
+        return params, opt_state, history

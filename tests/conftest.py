@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests that need multiple
+host devices live in test_distributed.py / test_sharding.py which run in
+a forked subprocess via the `forked_devices` helper; everything else sees
+the real single CPU device (per the dry-run isolation requirement)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 900) -> str:
+    """Run ``code`` in a fresh interpreter with n forced host devices.
+    Returns stdout; raises on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}")
+    return r.stdout

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heap, selection
+from repro.core.heap import NeighborLists
+from repro.core.reorder import greedy_reorder
+from repro.kernels import ref
+from repro.train.compression import dequantize_int8, quantize_int8
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(2, 40), k=st.integers(1, 8), c=st.integers(1, 10),
+    seed=st.integers(0, 2**16),
+)
+@_settings
+def test_merge_invariants(n, k, c, seed):
+    """Merged lists are sorted, dedup'd, and the update count equals the
+    number of NEW ids that entered the list."""
+    rng = np.random.RandomState(seed)
+    cur_d = np.sort(rng.rand(n, k).astype(np.float32), axis=1)
+    cur_i = np.zeros((n, k), np.int32)
+    for r in range(n):
+        cur_i[r] = rng.choice(10 * n, size=k, replace=False)
+    cand_d = rng.rand(n, c).astype(np.float32)
+    cand_i = rng.randint(-1, 10 * n, size=(n, c)).astype(np.int32)
+    nl = NeighborLists(jnp.asarray(cur_d), jnp.asarray(cur_i),
+                       jnp.zeros((n, k), bool))
+    out, upd = heap.merge(nl, jnp.asarray(cand_d), jnp.asarray(cand_i))
+    d = np.asarray(out.dist)
+    i = np.asarray(out.idx)
+    # sorted
+    assert (np.diff(d, axis=1) >= 0).all()
+    # dedup within each row (ignore empty)
+    for r in range(n):
+        ids = i[r][i[r] >= 0]
+        assert len(set(ids.tolist())) == len(ids)
+    # update count == #new ids present that were not in the old list
+    for r in range(n):
+        newcomers = set(i[r][i[r] >= 0].tolist()) - set(cur_i[r].tolist())
+        assert int(upd[r]) == len(newcomers)
+
+
+@given(n=st.integers(2, 64), k=st.integers(1, 6), seed=st.integers(0, 999))
+@_settings
+def test_greedy_reorder_always_permutation(n, k, seed):
+    """Algorithm 1 must output a valid permutation + exact inverse for ANY
+    graph (including self-loops / duplicate neighbor ids)."""
+    rng = np.random.RandomState(seed)
+    idx = rng.randint(-1, n, size=(n, k)).astype(np.int32)
+    dist = np.sort(rng.rand(n, k).astype(np.float32), axis=1)
+    nl = NeighborLists(jnp.asarray(dist), jnp.asarray(idx),
+                       jnp.zeros((n, k), bool))
+    sigma, sigma_inv = jax.jit(greedy_reorder)(nl)
+    s = np.asarray(sigma)
+    si = np.asarray(sigma_inv)
+    assert sorted(s.tolist()) == list(range(n))
+    assert (s[si] == np.arange(n)).all()
+
+
+@given(
+    m=st.integers(1, 24), nn=st.integers(1, 24), d=st.integers(1, 40),
+    seed=st.integers(0, 999),
+)
+@_settings
+def test_norm_expansion_equals_diff_form(m, nn, d, seed):
+    """||a-b||^2 expansion == diff-square-sum (paper's FMA ladder) within
+    fp32 tolerance, and never negative."""
+    rng = np.random.RandomState(seed)
+    a = rng.randn(m, d).astype(np.float32)
+    b = rng.randn(nn, d).astype(np.float32)
+    got = ref.pairwise_sq_l2(jnp.asarray(a), jnp.asarray(b))
+    want = ref.pairwise_sq_l2_diff(jnp.asarray(a), jnp.asarray(b))
+    assert float(jnp.min(got)) >= 0.0
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(4, 32), k=st.integers(2, 6), rho_k=st.integers(1, 8),
+    seed=st.integers(0, 999),
+)
+@_settings
+def test_selection_buffers_valid(n, k, rho_k, seed):
+    """Turbosampling candidate buffers: ids in range, no candidate for a
+    node is the node itself via forward edges... and buffer occupancy is
+    bounded by rho_k."""
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    nl = heap.init_random(k1, n, k)
+    cands = selection.selection_turbo(k2, nl, rho_k)
+    for buf in (cands.new_idx, cands.old_idx):
+        b = np.asarray(buf)
+        assert b.shape == (n, rho_k)
+        assert ((b >= -1) & (b < n)).all()
+
+
+@given(seed=st.integers(0, 999), scale=st.floats(1e-3, 1e3),
+       nelem=st.integers(1, 2000))
+@_settings
+def test_int8_error_feedback_bounded(seed, scale, nelem):
+    """Quantization residual is bounded by half a quant step per block."""
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(nelem) * scale).astype(np.float32)
+    q, s, meta = quantize_int8(jnp.asarray(x), block=256)
+    recon = dequantize_int8(q, s, meta)
+    err = np.abs(np.asarray(recon) - x)
+    step = np.repeat(np.asarray(s)[:, 0], 256)[:nelem]
+    assert (err <= step * 0.5 + 1e-7).all()
+
+
+@given(seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_sampling_probability_expectation(seed):
+    """Paper §3.1: per-edge accept with prob rho_k/|N| gives E[#sampled] ~
+    rho_k when |N| >= rho_k (the heap-free equivalence argument)."""
+    key = jax.random.key(seed)
+    n, k, rho_k = 256, 12, 6
+    k1, k2 = jax.random.split(key)
+    nl = heap.init_random(k1, n, k)
+    cands = selection.selection_turbo(k2, nl, rho_k)
+    occ = float(jnp.mean(jnp.sum(cands.new_idx >= 0, axis=1)))
+    # forward+reverse degree ~ 2k = 24 >= rho_k, so E[accepted] ~= rho_k
+    # per node, clipped by the buffer to <= rho_k
+    assert occ > rho_k * 0.55, occ

@@ -1,0 +1,176 @@
+"""Serving: prefill/decode equivalence per arch, ring caches, continuous
+batching, kNN-LM retrieval."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import forward, init_tree, model_schema
+from repro.serve import (
+    ContinuousBatcher,
+    KNNDatastore,
+    Request,
+    init_cache,
+    interpolate,
+    knn_logits,
+    prefill,
+    serve_step,
+)
+
+DECODE_ARCHS = [a for a in list_archs()
+                if not get_smoke_config(a).encoder_only]
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, cache_dtype=jnp.float32,
+                               act_dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    """prefill(L-1) + decode(1) logits == full forward's last position."""
+    cfg = _f32(get_smoke_config(arch))
+    params = init_tree(jax.random.key(0), model_schema(cfg))
+    B, L, S = 2, 33, 64
+    toks = jax.random.randint(jax.random.key(1), (B, L), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.n_patches, cfg.frontend_dim))
+    full = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :-1]
+    _, cache, lengths = jax.jit(
+        lambda p, b: prefill(p, b, cfg, S))(params, pre)
+    got, _ = jax.jit(
+        lambda p, c, t, l: serve_step(p, c, t, l, cfg))(
+        params, cache, toks[:, -1:], lengths)
+    ref = full[:, -1]
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(got - ref))) / scale < 2e-2
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_multi_token_decode_consistency(arch):
+    """Decoding 4 tokens step-by-step == forward on the extended seq."""
+    cfg = _f32(get_smoke_config(arch))
+    params = init_tree(jax.random.key(0), model_schema(cfg))
+    B, L0, T, S = 1, 17, 4, 64
+    toks = jax.random.randint(jax.random.key(2), (B, L0 + T), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.n_patches, cfg.frontend_dim))
+    full = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :L0]
+    _, cache, lengths = jax.jit(
+        lambda p, b: prefill(p, b, cfg, S))(params, pre)
+    step = jax.jit(lambda p, c, t, l: serve_step(p, c, t, l, cfg))
+    outs = []
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, L0 + t:L0 + t + 1], lengths)
+        lengths = lengths + 1
+        outs.append(lg)
+    got = jnp.stack(outs, axis=1)           # (B, T, V)
+    off = cfg.n_patches if cfg.frontend == "vision" else 0
+    ref = full[:, off + L0:off + L0 + T]
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(got - ref))) / scale < 3e-2
+
+
+def test_ring_cache_window_equivalence():
+    """A windowed arch decoding past the window must match the full
+    forward — exercises the ring-buffer cache (starcoder2 family)."""
+    cfg = _f32(get_smoke_config("starcoder2-3b"))
+    assert cfg.window is not None
+    params = init_tree(jax.random.key(0), model_schema(cfg))
+    B = 1
+    L_total = cfg.window + 24          # decode well past the window
+    S = cfg.window                     # ring cache = window slots exactly
+    toks = jax.random.randint(jax.random.key(4), (B, L_total), 0, cfg.vocab)
+    full = jax.jit(lambda p, b: forward(p, b, cfg))(
+        params, {"tokens": toks})
+    L0 = 16
+    _, cache, lengths = jax.jit(
+        lambda p, b: prefill(p, b, cfg, S))(params, {"tokens": toks[:, :L0]})
+    step = jax.jit(lambda p, c, t, l: serve_step(p, c, t, l, cfg))
+    last = None
+    for t in range(L0, L_total):
+        last, cache = step(params, cache, toks[:, t:t + 1], lengths)
+        lengths = lengths + 1
+    ref = full[:, -1]
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(last - ref))) / scale < 3e-2
+
+
+def test_mla_cache_is_latent_sized():
+    """deepseek-v2's decode cache must store the compressed latent, not
+    per-head K/V — the arch's KV-memory contribution."""
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    from repro.serve.decode import cache_schema
+    from repro.models.params import ParamDef
+    sch = cache_schema(cfg, batch=4, max_len=32)
+    leaves = jax.tree.leaves(sch, is_leaf=lambda x: isinstance(x, ParamDef))
+    per_tok = sum(
+        np.prod(d.shape) / (4 * 32) * jnp.dtype(d.dtype).itemsize
+        for d in leaves)
+    full_kv = (cfg.n_layers * cfg.n_kv_heads * (cfg.qk_nope_dim
+               + cfg.qk_rope_dim + cfg.v_head_dim) * 2)
+    latent = cfg.n_layers * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    assert per_tok < full_kv * 2 / 3
+    assert per_tok < latent * 3
+
+
+def test_continuous_batcher():
+    cfg = _f32(get_smoke_config("yi-6b"))
+    params = init_tree(jax.random.key(0), model_schema(cfg))
+    B, S = 3, 64
+    step_jit = jax.jit(lambda p, c, t, l: serve_step(p, c, t, l, cfg))
+    prefill_jit = jax.jit(
+        lambda p, b: prefill(p, b, cfg, S, last_only=True))
+
+    def step_fn(cache, tokens, lengths):
+        lg, cache = step_jit(params, cache, tokens, lengths)
+        return lg, cache
+
+    def prefill_fn(prompt):
+        lg, c1, _ = prefill_jit(params, {"tokens": jnp.asarray(prompt)})
+        return lg, c1, prompt.shape[1]
+
+    def write_slot(cache, i, one, length):
+        return jax.tree.map(lambda big, o: big.at[:, i].set(o[:, 0]),
+                            cache, one)
+
+    bat = ContinuousBatcher(B, step_fn, prefill_fn, write_slot)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=r, prompt=rng.randint(
+        0, cfg.vocab, size=8).astype(np.int32), max_new=5)
+        for r in range(5)]
+    for r in reqs:
+        bat.submit(r)
+    cache = init_cache(cfg, B, S)
+    bat.run(cache)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 5 for r in reqs)
+
+
+def test_knn_lm_retrieval_shifts_distribution():
+    """kNN interpolation must move mass toward retrieved tokens."""
+    key = jax.random.key(0)
+    n, d, vocab = 512, 16, 64
+    keys = jax.random.normal(key, (n, d))
+    vals = jnp.full((n,), 7, jnp.int32)       # every neighbor votes token 7
+    ds = KNNDatastore.build(keys, vals, k=8)
+    q = keys[:4] + 0.01
+    knl = knn_logits(ds, q, vocab, k=4)
+    lm = jnp.zeros((4, vocab))
+    mixed = interpolate(lm, knl, lam=0.5)
+    assert (jnp.argmax(mixed, -1) == 7).all()
+    # and with lam=0 the LM wins
+    mixed0 = interpolate(lm.at[:, 3].set(5.0), knl, lam=1e-6)
+    assert (jnp.argmax(mixed0, -1) == 3).all()

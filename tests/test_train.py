@@ -1,0 +1,229 @@
+"""Training substrate: loss decreases, optimizer math, checkpoint
+save/restore/atomicity, NaN-guard + rollback, straggler watchdog,
+gradient compression, data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, TokenPipeline, mean_pool_embeddings, pack_documents, semantic_order
+from repro.data.pipeline import SyntheticLMSource
+from repro.models import init_tree, model_schema
+from repro.train import OptimizerConfig, TrainConfig, TrainLoop, make_train_step
+from repro.train import optimizer as opt_mod
+from repro.train.checkpoint import Checkpointer
+from repro.train.compression import dequantize_int8, ef_accumulate, quantize_int8
+from repro.train.fault import FaultPolicy, StragglerWatchdog, elastic_mesh
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = get_smoke_config("yi-6b")
+    params = init_tree(jax.random.key(0), model_schema(cfg))
+    state = opt_mod.init(params)
+    dc = DataConfig(seq_len=64, global_batch=4, vocab=cfg.vocab, prefetch=0)
+    pipe = TokenPipeline(dc, process_index=0, process_count=1)
+    return cfg, params, state, pipe
+
+
+def test_loss_decreases(small_setup):
+    cfg, params, state, pipe = small_setup
+    tc = TrainConfig(opt=OptimizerConfig(lr=2e-3, warmup_steps=3,
+                                         total_steps=30))
+    step = jax.jit(make_train_step(cfg, tc))
+    losses = []
+    for i, b in zip(range(25), pipe):
+        params, state, m = step(params, state, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_adamw_matches_reference():
+    """Our AdamW == hand-rolled numpy reference on a tiny problem."""
+    oc = OptimizerConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                         weight_decay=0.01, grad_clip=0.0,
+                         warmup_steps=0, total_steps=10**9,
+                         schedule="constant")
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.5, 0.5, -1.0])}
+    st = opt_mod.init(p)
+    p1, st1, _ = opt_mod.apply(oc, p, st, g)
+    # reference
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.99)
+    want = np.asarray(p["w"]) - 0.1 * (
+        mh / (np.sqrt(vh) + 1e-8) + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    oc = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                         min_lr_ratio=0.1)
+    lrs = [float(opt_mod.learning_rate(oc, jnp.int32(s)))
+           for s in [0, 9, 10, 55, 99]]
+    assert lrs[0] < 0.2                   # warmup
+    assert abs(lrs[2] - 1.0) < 0.01       # peak
+    assert lrs[3] < lrs[2]                # decaying
+    assert abs(lrs[4] - 0.1) < 0.02       # floor
+
+
+def test_nan_guard_skips_update(small_setup):
+    cfg, params, state, pipe = small_setup
+    tc = TrainConfig(opt=OptimizerConfig(lr=1e-3))
+    step = jax.jit(make_train_step(cfg, tc))
+    batch = next(iter(pipe))
+    # poison the params so the loss is NaN
+    bad = jax.tree.map(lambda x: x * jnp.nan, params)
+    p1, s1, m = step(bad, state, batch)
+    assert int(m["skipped"]) == 1
+    # params unchanged (identity update)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(bad)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip(tmp_path, small_setup):
+    cfg, params, state, _ = small_setup
+    ck = Checkpointer(str(tmp_path), every=1, async_write=False)
+    ck.save(7, params, state)
+    assert ck.latest_step() == 7
+    like = {"params": params, "opt_state": state}
+    step, tree = ck.load(like=like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path, small_setup):
+    cfg, params, state, _ = small_setup
+    ck = Checkpointer(str(tmp_path), every=1, keep=2, async_write=True)
+    for s in (1, 2, 3, 4):
+        ck.save(s, params, state)
+    ck.wait()
+    ck._gc()
+    steps = ck._list_steps()
+    assert max(steps) == 4 and len(steps) <= 2
+
+
+def test_checkpoint_ignores_partial(tmp_path, small_setup):
+    """A crashed write (tmp dir, no manifest) must be invisible."""
+    cfg, params, state, _ = small_setup
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    ck.save(5, params, state)
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    (tmp_path / "step_00000009.tmp" / "host_00000.npz").write_bytes(b"junk")
+    assert ck.latest_step() == 5
+
+
+def test_fault_policy_rolls_back(tmp_path, small_setup):
+    cfg, params, state, _ = small_setup
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    ck.save(10, params, state)
+    fp = FaultPolicy(ck, max_consecutive_skips=2, max_restarts=3)
+    bad = jax.tree.map(lambda x: x + 999.0, params)
+    # two skipped steps in a row -> rollback to checkpoint
+    p, s, rolled = fp.after_step(11, bad, state, {"skipped": 1})
+    assert not rolled
+    p, s, rolled = fp.after_step(12, bad, state, {"skipped": 1})
+    assert rolled
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert fp.last_good_step == 10
+
+
+def test_fault_policy_gives_up(tmp_path, small_setup):
+    cfg, params, state, _ = small_setup
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    ck.save(1, params, state)
+    fp = FaultPolicy(ck, max_consecutive_skips=1, max_restarts=2)
+    fp.after_step(2, params, state, {"skipped": 1})
+    fp.after_step(3, params, state, {"skipped": 1})
+    with pytest.raises(RuntimeError, match="unstable"):
+        fp.after_step(4, params, state, {"skipped": 1})
+
+
+def test_straggler_watchdog():
+    import time
+    dog = StragglerWatchdog(threshold=3.0, alpha=0.5)
+    for _ in range(5):
+        dog.step_start()
+        time.sleep(0.01)
+        assert not dog.step_end(0)
+    dog.step_start()
+    time.sleep(0.12)
+    assert dog.step_end(6)
+    assert dog.stragglers == 1
+
+
+def test_elastic_mesh_shrinks():
+    mesh = elastic_mesh(jax.devices(), model_axis=16)
+    assert mesh.size == len(jax.devices())
+    assert "model" in mesh.shape and "data" in mesh.shape
+
+
+def test_ef_accumulate_preserves_sum():
+    """int8 error-feedback accumulation: total equals fp32 sum within
+    quant tolerance after the residual is folded in."""
+    rng = np.random.RandomState(0)
+    grads = [rng.randn(1000).astype(np.float32) * 0.01 for _ in range(8)]
+    acc_q = acc_s = None
+    residual = jnp.zeros(1000)
+    for g in grads:
+        acc_q, acc_s, residual = ef_accumulate(
+            acc_q, acc_s, residual, jnp.asarray(g))
+    meta = ((1000,), (-1000) % 256)
+    total = np.asarray(dequantize_int8(acc_q, acc_s, meta)) + \
+        np.asarray(residual)
+    np.testing.assert_allclose(total, np.sum(grads, axis=0), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_restartable():
+    dc = DataConfig(seq_len=32, global_batch=4, vocab=128, prefetch=0)
+    p1 = TokenPipeline(dc, process_index=0, process_count=1)
+    it1 = iter(p1)
+    b1 = [next(it1) for _ in range(3)]
+    state = p1.state()
+    b_next = next(it1)
+    # restart from saved state
+    p2 = TokenPipeline(dc, process_index=0, process_count=1)
+    p2.restore(state)
+    b2 = next(iter(p2))
+    np.testing.assert_array_equal(np.asarray(b_next["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_pipeline_host_sharding_disjoint():
+    dc = DataConfig(seq_len=32, global_batch=4, vocab=128, prefetch=0)
+    a = next(iter(TokenPipeline(dc, process_index=0, process_count=2)))
+    b = next(iter(TokenPipeline(dc, process_index=1, process_count=2)))
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(b["tokens"]))
+
+
+def test_packing_labels_shifted():
+    src = SyntheticLMSource(64, seed=1)
+    rows, nxt = pack_documents(src, 0, 16, 2)
+    assert rows.shape == (2, 17)
+    dc = DataConfig(seq_len=16, global_batch=1, vocab=64, prefetch=0)
+    p = TokenPipeline(dc, process_index=0, process_count=1)
+    b = next(iter(p))
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][0, 1:]), np.asarray(b["labels"][0, :-1]))
+
+
+def test_semantic_order_improves_locality():
+    """data/ordering.py: the paper's C3 at corpus level."""
+    from repro.core import datasets
+    emb = datasets.clustered(jax.random.key(0), 512, 16, 8)
+    order, stats = semantic_order(emb, k=8)
+    assert sorted(order.tolist()) == list(range(512))
+    assert stats["in_block_after"] > stats["in_block_before"]
