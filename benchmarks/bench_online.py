@@ -1,0 +1,75 @@
+"""Online updates (core/online.py): insert throughput vs. full rebuild.
+
+Streams batches of new points into a built store with ``knn_insert`` and
+compares against rebuilding the graph from scratch on the grown corpus —
+in wall time, points/s, and the paper's cost model (distance evaluations,
+via DescentStats.dist_evals). Also reports delete+patch latency.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Sink
+from repro.core import DescentConfig, build_knn_graph, datasets
+from repro.core.online import MutableKNNStore, knn_delete, knn_insert
+
+
+def run(n: int = 8192, d: int = 32, k: int = 20, batch: int = 256,
+        n_batches: int = 4) -> list:
+    sink = Sink("online")
+    key = jax.random.key(0)
+    x = datasets.clustered(key, n + batch * n_batches, d, 16)
+    x0, stream = x[:n], x[n:]
+    dcfg = DescentConfig(k=k, rho=1.0, max_iters=15)
+
+    t0 = time.perf_counter()
+    store, build_stats = MutableKNNStore.build(
+        x0, k=k, descent=dcfg, key=jax.random.key(1))
+    jax.block_until_ready(store.nl.dist)
+    t_build = time.perf_counter() - t0
+    sink.row(op="initial_build", n=n, k=k, s=round(t_build, 3),
+             dist_evals=build_stats.dist_evals)
+
+    # --- streaming inserts (first batch pays compile; report both)
+    total_ins = 0
+    ins_evals = 0
+    t_stream = 0.0
+    for b in range(n_batches):
+        xb = stream[b * batch:(b + 1) * batch]
+        t0 = time.perf_counter()
+        store, st = knn_insert(store, xb, key=jax.random.fold_in(key, b))
+        jax.block_until_ready(store.nl.dist)
+        dt = time.perf_counter() - t0
+        t_stream += dt
+        total_ins += batch
+        ins_evals += st.dist_evals
+        sink.row(op="insert", batch=batch, n_after=store.n,
+                 s=round(dt, 3), pts_per_s=round(batch / dt, 1),
+                 dist_evals=st.dist_evals, compile_included=b == 0)
+
+    # --- full rebuild on the grown corpus (the alternative to streaming)
+    grown = x[:n + total_ins]
+    t0 = time.perf_counter()
+    _, _, rb = build_knn_graph(grown, k=k, cfg=dcfg, key=jax.random.key(1))
+    t_rebuild = time.perf_counter() - t0
+    sink.row(op="rebuild", n=grown.shape[0], s=round(t_rebuild, 3),
+             dist_evals=rb.dist_evals,
+             insert_speedup=round(t_rebuild / max(t_stream, 1e-9), 2),
+             eval_ratio=round(ins_evals / rb.dist_evals, 4))
+
+    # --- delete + patch
+    dead = jnp.arange(0, n // 10, dtype=jnp.int32)
+    t0 = time.perf_counter()
+    store, dst = knn_delete(store, dead)
+    jax.block_until_ready(store.nl.dist)
+    dt = time.perf_counter() - t0
+    sink.row(op="delete", n_dead=int(dead.shape[0]), s=round(dt, 3),
+             dist_evals=dst.dist_evals)
+    return sink.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ Paper artifact map:
     realworld   -> Table 2 (MNIST/Audio stand-ins)
     roofline    -> Fig. 3 (memory/compute crossover, v5e ridge)
     kernels     -> (ours) blocked-kernel tile model
+    online      -> (ours) streaming insert/delete vs. full rebuild
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ def main(argv=None):
 
     from benchmarks import (
         bench_kernels,
+        bench_online,
         bench_realworld,
         bench_reorder,
         bench_roofline,
@@ -49,6 +51,9 @@ def main(argv=None):
         "realworld": lambda: bench_realworld.run(
             n_mnist=2048 if quick else 4096,
             n_audio=2048 if quick else 4096),
+        "online": lambda: bench_online.run(
+            n=2048 if quick else 8192, batch=128 if quick else 256,
+            n_batches=2 if quick else 4),
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

@@ -11,13 +11,17 @@ Public API:
 from repro.core import (
     DescentConfig,
     DescentStats,
+    MutableKNNStore,
     NeighborLists,
+    OnlineConfig,
     apply_permutation,
     brute_force_knn,
     build_knn_graph,
     distance_recall,
     graph_search,
     greedy_reorder,
+    knn_delete,
+    knn_insert,
     locality_stats,
     nn_descent_iteration,
     recall_at_k,
@@ -29,13 +33,17 @@ __version__ = "0.1.0"
 __all__ = [
     "DescentConfig",
     "DescentStats",
+    "MutableKNNStore",
     "NeighborLists",
+    "OnlineConfig",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",
     "distance_recall",
     "graph_search",
     "greedy_reorder",
+    "knn_delete",
+    "knn_insert",
     "locality_stats",
     "nn_descent_iteration",
     "recall_at_k",

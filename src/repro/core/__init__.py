@@ -9,6 +9,12 @@ from repro.core.nn_descent import (
     build_knn_graph,
     nn_descent_iteration,
 )
+from repro.core.online import (
+    MutableKNNStore,
+    OnlineConfig,
+    knn_delete,
+    knn_insert,
+)
 from repro.core.recall import brute_force_knn, distance_recall, recall_at_k
 from repro.core.reorder import (
     apply_permutation,
@@ -20,13 +26,17 @@ from repro.core.reorder import (
 __all__ = [
     "DescentConfig",
     "DescentStats",
+    "MutableKNNStore",
     "NeighborLists",
+    "OnlineConfig",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",
     "distance_recall",
     "graph_search",
     "greedy_reorder",
+    "knn_delete",
+    "knn_insert",
     "locality_stats",
     "nn_descent_iteration",
     "recall_at_k",

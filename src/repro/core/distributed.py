@@ -31,7 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import heap, selection
 from repro.core.heap import NeighborLists
-from repro.core.nn_descent import DescentConfig, _compact_pairs, _pair_block
+from repro.core.nn_descent import DescentConfig, compact_pairs, pair_block
 
 
 def _ring_perm(axis: str, size: int):
@@ -267,8 +267,8 @@ def nn_descent_sharded_iteration(
     x2_o = jnp.sum(xg_o * xg_o, axis=-1)
     vn, vo = cn >= 0, co >= 0
 
-    d_nn = _pair_block(xg_n, x2_n, xg_n, x2_n)
-    d_no = _pair_block(xg_n, x2_n, xg_o, x2_o)
+    d_nn = pair_block(xg_n, x2_n, xg_n, x2_n)
+    d_no = pair_block(xg_n, x2_n, xg_o, x2_o)
 
     cn_b, co_b = cn.shape[1], co.shape[1]
     iu = jnp.triu_indices(cn_b, k=1)
@@ -296,7 +296,7 @@ def nn_descent_sharded_iteration(
     r = got[:, 0]
     valid_r = r >= 0
     rl = jnp.where(valid_r, r - base, -1)
-    cd, ci = _compact_pairs(
+    cd, ci = compact_pairs(
         rl, got[:, 1], jnp.where(valid_r, _bits_f32(got[:, 2]), jnp.inf),
         n_local, cfg.merge_k,
     )

@@ -28,8 +28,14 @@ def graph_search(
     rounds: int = 24,
     entry: jax.Array | None = None,   # (e,) entry point ids
     key: jax.Array | None = None,
+    alive: jax.Array | None = None,   # (n,) bool — tombstone mask
 ):
-    """Returns (dist (q, k_out), idx (q, k_out)) ascending."""
+    """Returns (dist (q, k_out), idx (q, k_out)) ascending.
+
+    With ``alive`` given (the online store's tombstone mask), dead nodes
+    are neither expanded nor returned: entry points are drawn from live
+    rows only and dead neighbors are masked out of the pool.
+    """
     n, k = graph_idx.shape
     x = x.astype(jnp.float32)
     x2 = jnp.sum(x * x, axis=1)
@@ -38,7 +44,12 @@ def graph_search(
         # inter-cluster edges, so search can only reach clusters that hold
         # an entry point — spread the whole beam across the corpus
         key = jax.random.key(0) if key is None else key
-        entry = jax.random.randint(key, (beam,), 0, n)
+        if alive is None:
+            entry = jax.random.randint(key, (beam,), 0, n)
+        else:
+            # uniform over live rows: top-`beam` random keys among alive
+            w = jnp.where(alive, jax.random.uniform(key, (n,)), -1.0)
+            _, entry = jax.lax.top_k(w, beam)
 
     def q_dist(q, ids):
         rows = x[ids]
@@ -53,6 +64,9 @@ def graph_search(
         e = entry.shape[0]
         pool_i = pool_i.at[:e].set(entry.astype(jnp.int32))
         pool_d = pool_d.at[:e].set(q_dist(q, entry))
+        if alive is not None:
+            dead = (pool_i >= 0) & ~alive[jnp.clip(pool_i, 0, n - 1)]
+            pool_d = jnp.where(dead, _BIG, pool_d)
 
         def round_fn(_, state):
             pool_d, pool_i, pool_e = state
@@ -64,6 +78,8 @@ def graph_search(
             pool_e = pool_e.at[b].set(True)
             nbrs = graph_idx[jnp.clip(node, 0, n - 1)]       # (k,)
             nb_ok = (nbrs >= 0) & can
+            if alive is not None:
+                nb_ok &= alive[jnp.clip(nbrs, 0, n - 1)]
             nd = jnp.where(nb_ok, q_dist(q, jnp.clip(nbrs, 0, n - 1)), _BIG)
             # merge pool + neighbors, dedup by id, keep best `beam`
             all_i = jnp.concatenate([pool_i, jnp.where(nb_ok, nbrs, -1)])
@@ -81,6 +97,11 @@ def graph_search(
         pool_d, pool_i, pool_e = jax.lax.fori_loop(
             0, rounds, round_fn, (pool_d, pool_i, pool_e)
         )
-        return pool_d[:k_out], pool_i[:k_out]
+        out_d, out_i = pool_d[:k_out], pool_i[:k_out]
+        if alive is not None:
+            # dead entry points survive in the pool at distance _BIG;
+            # never surface them
+            out_i = jnp.where(out_d >= _BIG, -1, out_i)
+        return out_d, out_i
 
     return jax.vmap(one_query)(queries.astype(jnp.float32))

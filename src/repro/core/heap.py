@@ -124,6 +124,24 @@ def _lookup_flags(nl: NeighborLists, ids: jax.Array) -> jax.Array:
     return (hit & nl.new[:, None, :]).any(-1)
 
 
+def purge(
+    nl: NeighborLists, alive: jax.Array, *, backend: str = "auto"
+) -> tuple[NeighborLists, jax.Array]:
+    """Remove edges pointing at dead nodes (``alive[idx] == False``).
+
+    Survivors stay sorted and packed to the front; freed slots become
+    (inf, -1, False). Returns (lists, per-node removed count) — the online
+    delete path (core/online.py) refills rows where removed > 0."""
+    n = alive.shape[0]
+    valid = nl.idx >= 0
+    drop = valid & ~alive[jnp.clip(nl.idx, 0, n - 1)]
+    new_dist, new_idx, removed = ops.knn_compact(
+        nl.dist, nl.idx, drop, backend=backend
+    )
+    flag = _lookup_flags(nl, new_idx) & (new_idx >= 0)
+    return NeighborLists(new_dist, new_idx, flag), removed
+
+
 def mark_sampled_old(nl: NeighborLists, sampled_mask: jax.Array) -> NeighborLists:
     """Clear the 'new' flag of forward slots that were sampled this round
     (NN-Descent incremental search: a pair is joined at most once)."""

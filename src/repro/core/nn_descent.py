@@ -74,7 +74,7 @@ _SELECT: dict[str, Callable] = {
 }
 
 
-def _pair_block(xg: jax.Array, x2g: jax.Array, yg: jax.Array, y2g: jax.Array):
+def pair_block(xg: jax.Array, x2g: jax.Array, yg: jax.Array, y2g: jax.Array):
     """Batched norm-expansion distances: (n,a,d)x(n,b,d) -> (n,a,b)."""
     ab = jnp.einsum(
         "nad,nbd->nab", xg, yg, preferred_element_type=jnp.float32
@@ -83,7 +83,7 @@ def _pair_block(xg: jax.Array, x2g: jax.Array, yg: jax.Array, y2g: jax.Array):
     return jnp.maximum(out, 0.0)
 
 
-def _compact_pairs(recv, cand, dist, n: int, c: int):
+def compact_pairs(recv, cand, dist, n: int, c: int):
     """Group flattened (receiver, candidate, dist) updates into per-node
     (n, c) buffers keeping the c best (smallest distance) per receiver."""
     valid = recv >= 0
@@ -122,8 +122,8 @@ def nn_descent_iteration(
     x2_n = jnp.where(vn, x2[jnp.where(vn, cn, 0)], 0.0)
     x2_o = jnp.where(vo, x2[jnp.where(vo, co, 0)], 0.0)
 
-    d_nn = _pair_block(xg_n, x2_n, xg_n, x2_n)   # (n, Cn, Cn)
-    d_no = _pair_block(xg_n, x2_n, xg_o, x2_o)   # (n, Cn, Co)
+    d_nn = pair_block(xg_n, x2_n, xg_n, x2_n)   # (n, Cn, Cn)
+    d_no = pair_block(xg_n, x2_n, xg_o, x2_o)   # (n, Cn, Co)
 
     cn_b = cn.shape[1]
     co_b = co.shape[1]
@@ -154,7 +154,7 @@ def nn_descent_iteration(
     ok &= dd < kth[jnp.where(ok, a, 0)]
     recv = jnp.where(ok, a, -1)
 
-    cand_d, cand_i = _compact_pairs(recv, b, dd, n, cfg.merge_k)
+    cand_d, cand_i = compact_pairs(recv, b, dd, n, cfg.merge_k)
     nl, upd = heap.merge(nl, cand_d, cand_i, cand_new=True)
 
     n_evals = jnp.sum(ok_nn) + jnp.sum(ok_no)   # unordered evaluations

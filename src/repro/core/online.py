@@ -1,0 +1,465 @@
+"""Online K-NN graph updates: insert / delete without a full rebuild.
+
+The paper's NN-Descent builds a *static* graph; a serving datastore must
+absorb new points and retire stale ones while queries keep flowing. This
+module adds that, built from the same primitives as the offline build:
+
+  * ``knn_insert(store, new_points)`` — each new point is *seeded* by a
+    greedy ``graph_search`` over the existing graph (the serving-side
+    structure already answers "who is near q?"), then refined by a
+    **localized NN-Descent**: a few friend-of-a-friend rounds that join
+    each new point against the neighbors of its current neighbors
+    (Dong et al.'s local-join restricted to the touched frontier), using
+    the offline build's ``compact_pairs`` + ``heap.merge`` machinery for
+    the reverse-edge repair. Convergence is fast for the same reason
+    NN-Descent's is: a neighbor of a neighbor is likely a neighbor, so a
+    handful of seed candidates is enough to pull in the true neighborhood.
+
+  * ``knn_delete(store, ids)`` — tombstones rows (``alive`` mask), purges
+    the dead targets out of every bounded neighbor list with the
+    ``knn_compact`` kernel, and refills the holes of affected rows from
+    their surviving neighbors' lists (one friend-of-a-friend merge round).
+
+  * ``MutableKNNStore`` — capacity-doubling padded arrays (features,
+    squared norms, neighbor lists, alive mask). Shapes only change on a
+    doubling, so the jitted insert/delete/search computations are reused
+    across steady-state streaming updates instead of recompiling per call.
+
+Cost accounting mirrors the offline build: both entry points return a
+``DescentStats`` whose ``dist_evals`` counts (an upper bound on) distance
+evaluations, so insert-vs-rebuild tradeoffs are measurable (see
+``benchmarks/bench_online.py`` and ``tests/test_online.py``).
+
+Scaling note: the delete-refill round is dense over the store (every row
+gathers its k*k friend-of-friend candidates; only affected rows' pairs
+are evaluated/counted). For stores far beyond ~10^5 rows the refill
+should be chunked or frontier-compacted; at repro scale dense is simpler
+and layout-native.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heap
+from repro.core.graph_search import graph_search
+from repro.core.heap import NeighborLists
+from repro.core.layout import pad_features
+from repro.core.nn_descent import (
+    DescentConfig,
+    DescentStats,
+    build_knn_graph,
+    compact_pairs,
+)
+
+_FILL = 1e6   # coordinate fill for unallocated rows (cf. layout.pad_points)
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    beam: int = 32            # seeding graph-search pool width
+    seed_rounds: int = 24     # seeding graph-search expansion rounds
+    refine_rounds: int = 2    # localized friend-of-a-friend rounds
+    self_join: bool = True    # all-pairs join within the inserted batch
+    self_join_max: int = 512  # skip the O(m^2) self-join beyond this m
+    merge_mult: int = 2       # reverse-merge buffer = merge_mult * k
+    backend: str = "auto"     # kernel dispatch for the tombstone purge
+                              # (heap.merge is pure jnp regardless)
+
+
+@dataclasses.dataclass(frozen=True)
+class MutableKNNStore:
+    """Growable K-NN graph store. Rows [0, n) are allocated; ``alive``
+    marks the live ones (False = tombstoned or unallocated)."""
+
+    x: jax.Array          # (cap, dp) feature-padded points
+    x2: jax.Array         # (cap,) cached squared norms
+    nl: NeighborLists     # (cap, k) bounded neighbor lists
+    alive: jax.Array      # (cap,) bool
+    n: int                # allocation high-water mark
+    d: int                # logical (unpadded) feature dim
+    cfg: OnlineConfig
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.nl.idx.shape[1]
+
+    @property
+    def graph_idx(self) -> jax.Array:
+        return self.nl.idx
+
+    def live_count(self) -> int:
+        return int(jnp.sum(self.alive))
+
+    @classmethod
+    def from_graph(
+        cls,
+        x: jax.Array,
+        dist: jax.Array,
+        idx: jax.Array,
+        *,
+        cfg: OnlineConfig | None = None,
+    ) -> "MutableKNNStore":
+        """Wrap an offline ``build_knn_graph`` result (original id space)."""
+        cfg = cfg or OnlineConfig()
+        n, d = x.shape
+        xp = pad_features(x.astype(jnp.float32))
+        cap = _next_capacity(n)
+        store = cls(
+            x=jnp.full((cap, xp.shape[1]), _FILL, jnp.float32).at[:n].set(xp),
+            x2=jnp.zeros((cap,), jnp.float32),
+            nl=NeighborLists(
+                jnp.full((cap, idx.shape[1]), jnp.inf, jnp.float32)
+                .at[:n].set(dist.astype(jnp.float32)),
+                jnp.full((cap, idx.shape[1]), -1, jnp.int32)
+                .at[:n].set(idx.astype(jnp.int32)),
+                jnp.zeros((cap, idx.shape[1]), bool),
+            ),
+            alive=jnp.zeros((cap,), bool).at[:n].set(True),
+            n=n,
+            d=d,
+            cfg=cfg,
+        )
+        return dataclasses.replace(
+            store, x2=jnp.sum(store.x * store.x, axis=1)
+        )
+
+    @classmethod
+    def build(
+        cls,
+        x: jax.Array,
+        k: int = 20,
+        *,
+        cfg: OnlineConfig | None = None,
+        descent: DescentConfig | None = None,
+        key: jax.Array | None = None,
+    ) -> tuple["MutableKNNStore", DescentStats]:
+        """Offline build + wrap. Returns (store, build stats)."""
+        dcfg = descent or DescentConfig(k=k, rho=1.0, max_iters=15)
+        if dcfg.k != k:
+            dcfg = dataclasses.replace(dcfg, k=k)
+        dist, idx, stats = build_knn_graph(x, k=k, cfg=dcfg, key=key)
+        return cls.from_graph(x, dist, idx, cfg=cfg), stats
+
+    def search(
+        self,
+        queries: jax.Array,
+        *,
+        k_out: int = 10,
+        beam: int = 32,
+        rounds: int = 24,
+        key: jax.Array | None = None,
+    ):
+        """Batched query path: greedy graph search that never returns a
+        tombstoned or unallocated row."""
+        q = _pad_to(queries, self.x.shape[1])
+        return graph_search(
+            self.x, self.nl.idx, q, k_out=k_out, beam=beam,
+            rounds=rounds, key=key, alive=self.alive,
+        )
+
+
+def _next_capacity(n: int) -> int:
+    cap = 8
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+def _pad_to(x: jax.Array, dp: int) -> jax.Array:
+    xp = pad_features(x.astype(jnp.float32))
+    if xp.shape[1] != dp:
+        raise ValueError(
+            f"feature dim {x.shape[1]} pads to {xp.shape[1]}, store has {dp}"
+        )
+    return xp
+
+
+def _grown(store: MutableKNNStore, need: int) -> MutableKNNStore:
+    """Double capacity until ``need`` rows fit (amortized O(1) growth;
+    shapes change only on a doubling so jitted update steps are reused)."""
+    cap = store.capacity
+    if need <= cap:
+        return store
+    new_cap = cap
+    while new_cap < need:
+        new_cap *= 2
+    pad = new_cap - cap
+    k = store.k
+    dp = store.x.shape[1]
+    return dataclasses.replace(
+        store,
+        x=jnp.concatenate(
+            [store.x, jnp.full((pad, dp), _FILL, jnp.float32)]
+        ),
+        x2=jnp.concatenate(
+            [store.x2, jnp.full((pad,), dp * _FILL * _FILL, jnp.float32)]
+        ),
+        nl=NeighborLists(
+            jnp.concatenate(
+                [store.nl.dist, jnp.full((pad, k), jnp.inf, jnp.float32)]
+            ),
+            jnp.concatenate(
+                [store.nl.idx, jnp.full((pad, k), -1, jnp.int32)]
+            ),
+            jnp.concatenate([store.nl.new, jnp.zeros((pad, k), bool)]),
+        ),
+        alive=jnp.concatenate([store.alive, jnp.zeros((pad,), bool)]),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _insert_stitch(
+    x: jax.Array,
+    x2: jax.Array,
+    nl: NeighborLists,
+    alive: jax.Array,
+    q: jax.Array,          # (m, dp) new points
+    ids: jax.Array,        # (m,) their row ids
+    seed_d: jax.Array,     # (m, k) graph-search seed distances
+    seed_i: jax.Array,     # (m, k) graph-search seed ids
+    cfg: OnlineConfig,
+):
+    """Stitch m new rows into the graph and run the localized refinement.
+    Returns (x, x2, nl, alive, extra dist evals, per-round accepted)."""
+    cap, k = nl.idx.shape
+    m = ids.shape[0]
+    c = cfg.merge_mult * k
+    q2 = jnp.sum(q * q, axis=1)
+
+    x = x.at[ids].set(q)
+    x2 = x2.at[ids].set(q2)
+    alive = alive.at[ids].set(True)
+    seed_ok = seed_i >= 0
+    dist = nl.dist.at[ids].set(jnp.where(seed_ok, seed_d, jnp.inf))
+    idx = nl.idx.at[ids].set(jnp.where(seed_ok, seed_i, -1))
+    newf = nl.new.at[ids].set(seed_ok)
+
+    evals = jnp.zeros((), jnp.int32)
+    upds = []
+
+    # reverse-merge the seed edges: each new point is a candidate for the
+    # rows that seeded it (distances already evaluated by the search)
+    recv = jnp.where(seed_ok, seed_i, -1).reshape(-1)
+    src = jnp.broadcast_to(ids[:, None], (m, k)).reshape(-1)
+    cd, ci = compact_pairs(recv, src, seed_d.reshape(-1), cap, c)
+    merged, upd0 = heap.merge(
+        NeighborLists(dist, idx, newf), cd, ci
+    )
+    dist, idx, newf = merged
+    upds.append(jnp.sum(upd0))
+
+    # all-pairs join within the inserted batch: a streamed batch is often
+    # self-similar (new points are each other's nearest neighbors) and the
+    # seed search only sees pre-existing rows
+    if cfg.self_join and 1 < m <= cfg.self_join_max:
+        d_qq = q2[:, None] + q2[None, :] - 2.0 * (
+            q @ q.T
+        )
+        off = ~jnp.eye(m, dtype=bool)
+        d_qq = jnp.where(off, jnp.maximum(d_qq, 0.0), jnp.inf)
+        cand = jnp.where(off, jnp.broadcast_to(ids[None, :], (m, m)), -1)
+        sub = NeighborLists(dist[ids], idx[ids], newf[ids])
+        sub, upd_sj = heap.merge(sub, d_qq, cand)
+        dist = dist.at[ids].set(sub.dist)
+        idx = idx.at[ids].set(sub.idx)
+        newf = newf.at[ids].set(sub.new)
+        evals += m * (m - 1) // 2
+        upds[-1] = upds[-1] + jnp.sum(upd_sj)
+
+    # localized NN-Descent: friend-of-a-friend rounds over the frontier
+    for _r in range(cfg.refine_rounds):
+        ni = idx[ids]                                       # (m, k)
+        nb = idx[jnp.clip(ni, 0, cap - 1)]                  # (m, k, k)
+        cand = nb.reshape(m, k * k)
+        src_ok = jnp.broadcast_to(
+            (ni >= 0)[:, :, None], (m, k, k)
+        ).reshape(m, k * k)
+        ok = (
+            src_ok
+            & (cand >= 0)
+            & alive[jnp.clip(cand, 0, cap - 1)]
+            & (cand != ids[:, None])
+        )
+        ok &= ~(cand[:, :, None] == ni[:, None, :]).any(-1)  # already linked
+        cx = x[jnp.clip(cand, 0, cap - 1)]                   # (m, kk, dp)
+        dd = q2[:, None] + x2[jnp.clip(cand, 0, cap - 1)] - 2.0 * jnp.einsum(
+            "md,mcd->mc", q, cx, preferred_element_type=jnp.float32
+        )
+        dd = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+        evals += jnp.sum(ok)
+
+        # forward: candidates into the new rows' lists
+        sub = NeighborLists(dist[ids], idx[ids], newf[ids])
+        sub, upd_f = heap.merge(
+            sub, dd, jnp.where(ok, cand, -1)
+        )
+        dist = dist.at[ids].set(sub.dist)
+        idx = idx.at[ids].set(sub.idx)
+        newf = newf.at[ids].set(sub.new)
+
+        # reverse: the new point is a candidate for every touched row that
+        # it beats (receiver-side prefilter, as in nn_descent_iteration)
+        kth = dist[jnp.clip(cand, 0, cap - 1), -1]
+        rok = ok & (dd < kth)
+        recv = jnp.where(rok, cand, -1).reshape(-1)
+        src = jnp.broadcast_to(ids[:, None], cand.shape).reshape(-1)
+        cd, ci = compact_pairs(recv, src, dd.reshape(-1), cap, c)
+        merged, upd_r = heap.merge(
+            NeighborLists(dist, idx, newf), cd, ci
+        )
+        dist, idx, newf = merged
+        upds.append(jnp.sum(upd_f) + jnp.sum(upd_r))
+
+    return x, x2, NeighborLists(dist, idx, newf), alive, evals, jnp.stack(upds)
+
+
+def knn_insert(
+    store: MutableKNNStore,
+    new_points: jax.Array,
+    *,
+    key: jax.Array | None = None,
+) -> tuple[MutableKNNStore, DescentStats]:
+    """Insert ``new_points`` (m, d) into the store. Deterministic given
+    ``key`` (the only randomness is the seed search's entry points).
+
+    Returns (store, stats); ``stats.dist_evals`` is an upper bound on the
+    distance evaluations spent (the seed-search term is the analytic bound
+    beam + rounds*k per query; the refinement term is exact).
+    """
+    cfg = store.cfg
+    k = store.k
+    m = int(new_points.shape[0])
+    if m == 0:
+        return store, DescentStats(iters=0, dist_evals=0)
+    key = jax.random.key(0) if key is None else key
+    if new_points.shape[1] != store.d:
+        raise ValueError(
+            f"new points have dim {new_points.shape[1]}, store has {store.d}"
+        )
+    q = _pad_to(new_points, store.x.shape[1])
+    store = _grown(store, store.n + m)
+    ids = jnp.arange(store.n, store.n + m, dtype=jnp.int32)
+
+    beam = max(cfg.beam, k)
+    seed_d, seed_i = graph_search(
+        store.x, store.nl.idx, q, k_out=k, beam=beam,
+        rounds=cfg.seed_rounds, key=key, alive=store.alive,
+    )
+    seed_evals = m * (beam + cfg.seed_rounds * k)
+
+    x, x2, nl, alive, evals, upds = _insert_stitch(
+        store.x, store.x2, store.nl, store.alive, q, ids, seed_d, seed_i,
+        cfg,
+    )
+    stats = DescentStats(
+        iters=cfg.refine_rounds,
+        dist_evals=seed_evals + int(evals),
+        updates=tuple(int(u) for u in upds),
+    )
+    return (
+        dataclasses.replace(
+            store, x=x, x2=x2, nl=nl, alive=alive, n=store.n + m
+        ),
+        stats,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _delete_patch(
+    x: jax.Array,
+    x2: jax.Array,
+    nl: NeighborLists,
+    alive: jax.Array,
+    cfg: OnlineConfig,
+):
+    """Purge dead targets from every list and refill affected rows from
+    their surviving neighbors' lists (one friend-of-a-friend round)."""
+    cap, k = nl.idx.shape
+    nl, removed = heap.purge(nl, alive, backend=cfg.backend)
+    affected = (removed > 0) & alive
+
+    ni = nl.idx
+    nb = ni[jnp.clip(ni, 0, cap - 1)].reshape(cap, k * k)
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    src_ok = jnp.broadcast_to(
+        (ni >= 0)[:, :, None], (cap, k, k)
+    ).reshape(cap, k * k)
+    ok = (
+        affected[:, None]
+        & src_ok
+        & (nb >= 0)
+        & alive[jnp.clip(nb, 0, cap - 1)]
+        & (nb != rows[:, None])
+    )
+    ok &= ~(nb[:, :, None] == ni[:, None, :]).any(-1)
+    cx = x[jnp.clip(nb, 0, cap - 1)]
+    dd = x2[:, None] + x2[jnp.clip(nb, 0, cap - 1)] - 2.0 * jnp.einsum(
+        "nd,ncd->nc", x, cx, preferred_element_type=jnp.float32
+    )
+    dd = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+    evals = jnp.sum(ok)
+    nl, upd = heap.merge(
+        nl, dd, jnp.where(ok, nb, -1)
+    )
+
+    # reconnect orphans: a live row whose ENTIRE neighborhood died has no
+    # surviving neighbors to refill from (and its inbound edges were
+    # purged too) — re-anchor it to k deterministic live rows, both
+    # directions, so it stays reachable by graph search
+    orphan = alive & ~(nl.idx >= 0).any(axis=1)
+    anchor_score = jnp.where(alive & ~orphan, (cap - rows).astype(jnp.float32),
+                             -1.0)
+    _, anchors = jax.lax.top_k(anchor_score, k)          # lowest live ids
+    ok2 = (
+        orphan[:, None]
+        & alive[anchors][None, :]
+        & ~orphan[anchors][None, :]
+        & (anchors[None, :] != rows[:, None])
+    )
+    dd2 = x2[:, None] + x2[anchors][None, :] - 2.0 * (
+        x @ x[anchors].T
+    )
+    dd2 = jnp.where(ok2, jnp.maximum(dd2, 0.0), jnp.inf)
+    evals += jnp.sum(ok2)
+    anc = jnp.broadcast_to(anchors[None, :], (cap, k))
+    nl, upd2 = heap.merge(nl, dd2, jnp.where(ok2, anc, -1))
+    # reverse edges: the anchors adopt the orphan so it is reachable
+    recv = jnp.where(ok2, anc, -1).reshape(-1)
+    src = jnp.broadcast_to(rows[:, None], (cap, k)).reshape(-1)
+    cd, ci = compact_pairs(recv, src, dd2.reshape(-1), cap,
+                           cfg.merge_mult * k)
+    nl, upd3 = heap.merge(nl, cd, ci)
+
+    # dead rows keep their coordinates (harmless) but lose their lists
+    nl = NeighborLists(
+        jnp.where(alive[:, None], nl.dist, jnp.inf),
+        jnp.where(alive[:, None], nl.idx, -1),
+        nl.new & alive[:, None],
+    )
+    return nl, evals, jnp.sum(upd) + jnp.sum(upd2) + jnp.sum(upd3)
+
+
+def knn_delete(
+    store: MutableKNNStore,
+    ids: jax.Array,
+) -> tuple[MutableKNNStore, DescentStats]:
+    """Tombstone ``ids`` and patch every neighbor list that pointed at
+    them. Deleted rows are never returned by ``store.search`` and never
+    re-enter any list; their slots are not reused (capacity is monotone).
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    alive = store.alive.at[ids].set(False)
+    nl, evals, upd = _delete_patch(store.x, store.x2, store.nl, alive,
+                                   store.cfg)
+    stats = DescentStats(
+        iters=1, dist_evals=int(evals), updates=(int(upd),)
+    )
+    return dataclasses.replace(store, nl=nl, alive=alive), stats

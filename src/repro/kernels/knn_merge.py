@@ -69,6 +69,89 @@ def _merge_kernel(cd_ref, ci_ref, qd_ref, qi_ref, od_ref, oi_ref, upd_ref, *, k:
     upd_ref[...] = n_upd[:, None]
 
 
+def _compact_kernel(cd_ref, ci_ref, dr_ref, od_ref, oi_ref, rm_ref, *, k: int):
+    """Drop masked entries from sorted rows, keeping the survivors sorted
+    and packed to the front — the tombstone-purge primitive of the online
+    subsystem (core/online.py). Same k-step min-extraction network as
+    ``_merge_kernel``: no gathers, VPU-native."""
+    cur_d = cd_ref[...]                 # (TM, K) ascending
+    cur_i = ci_ref[...]                 # (TM, K)
+    drop = dr_ref[...] != 0             # (TM, K) int32 mask -> bool
+
+    valid = cur_i >= 0
+    rm_ref[...] = jnp.sum(
+        (drop & valid).astype(jnp.int32), axis=1, keepdims=True
+    )
+    # survivors are tracked by mask, not by distance magnitude, so valid
+    # entries at placeholder distances (heap.init_random's 3e38) survive
+    # exactly as in the ref.knn_compact oracle
+    keep = ~drop & valid & jnp.isfinite(cur_d)
+    pool_d = jnp.where(keep, cur_d, _BIG)
+    lane = jax.lax.broadcasted_iota(jnp.int32, pool_d.shape, 1)
+    out_d = []
+    out_i = []
+    for _t in range(k):
+        amin = jnp.argmin(pool_d, axis=1)
+        onehot = lane == amin[:, None]
+        dmin = jnp.min(pool_d, axis=1)
+        imin = jnp.sum(jnp.where(onehot, cur_i, 0), axis=1)
+        real = jnp.any(onehot & keep, axis=1)
+        out_d.append(jnp.where(real, dmin, jnp.inf))
+        out_i.append(jnp.where(real, imin, -1))
+        pool_d = jnp.where(onehot, _BIG, pool_d)
+        keep &= ~onehot
+    od_ref[...] = jnp.stack(out_d, axis=1)
+    oi_ref[...] = jnp.stack(out_i, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def knn_compact_blocked(
+    cur_dist: jax.Array,   # (n, k) ascending, +inf = empty slot
+    cur_idx: jax.Array,    # (n, k) int32, -1 = empty
+    drop: jax.Array,       # (n, k) bool — entries to remove
+    *,
+    tm: int = DEFAULT_TM,
+    interpret: bool = False,
+):
+    """Remove ``drop``-masked entries from sorted bounded lists.
+
+    Returns (dist, idx, removed): survivors packed to the front in
+    ascending order, freed slots set to (inf, -1), ``removed`` the per-row
+    count of dropped valid entries.
+    """
+    n, k = cur_dist.shape
+    npad = ((n + tm - 1) // tm) * tm
+    pad = npad - n
+    cur_dist = jnp.pad(cur_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    cur_idx = jnp.pad(cur_idx, ((0, pad), (0, 0)), constant_values=-1)
+    drop_i = jnp.pad(
+        drop.astype(jnp.int32), ((0, pad), (0, 0)), constant_values=0
+    )
+
+    kern = functools.partial(_compact_kernel, k=k)
+    od, oi, rm = pl.pallas_call(
+        kern,
+        grid=(npad // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, k), jnp.float32),
+            jax.ShapeDtypeStruct((npad, k), jnp.int32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cur_dist, cur_idx, drop_i)
+    return od[:n], oi[:n], rm[:n, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("tm", "interpret"))
 def knn_merge_blocked(
     cur_dist: jax.Array,   # (n, k) ascending, +inf = empty slot

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.knn_merge import knn_merge_blocked
+from repro.kernels.knn_merge import knn_compact_blocked, knn_merge_blocked
 from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
 
 
@@ -61,6 +61,23 @@ def knn_merge(
             cur_dist, cur_idx, cand_dist, cand_idx, interpret=True
         )
     return ref.knn_merge(cur_dist, cur_idx, cand_dist, cand_idx)
+
+
+def knn_compact(
+    cur_dist: jax.Array,
+    cur_idx: jax.Array,
+    drop: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Drop masked entries from sorted bounded k-NN lists (tombstone purge)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_compact_blocked(cur_dist, cur_idx, drop)
+    if backend == "interpret":
+        return knn_compact_blocked(cur_dist, cur_idx, drop, interpret=True)
+    return ref.knn_compact(cur_dist, cur_idx, drop)
 
 
 def attention(

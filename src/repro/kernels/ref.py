@@ -79,6 +79,28 @@ def knn_merge(
     return new_dist, new_idx, updated
 
 
+def knn_compact(
+    cur_dist: jax.Array,   # (n, k) ascending, +inf = empty
+    cur_idx: jax.Array,    # (n, k), -1 = empty
+    drop: jax.Array,       # (n, k) bool — entries to remove
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Drop masked entries from sorted lists; survivors stay sorted and
+    packed to the front, freed slots become (inf, -1). Returns
+    (dist, idx, removed). Oracle for knn_compact_blocked."""
+    n, k = cur_dist.shape
+    valid = cur_idx >= 0
+    removed = jnp.sum(drop & valid, axis=1).astype(jnp.int32)
+    masked = jnp.where(drop | ~valid, jnp.inf, cur_dist)
+    order = jnp.argsort(masked, axis=1, stable=True)
+    new_dist = jnp.take_along_axis(masked, order, axis=1)
+    new_idx = jnp.where(
+        jnp.isfinite(new_dist),
+        jnp.take_along_axis(cur_idx, order, axis=1),
+        -1,
+    )
+    return new_dist, new_idx, removed
+
+
 # ---------------------------------------------------------------------------
 # Flash attention (blocked attention for the LM stack)
 # ---------------------------------------------------------------------------

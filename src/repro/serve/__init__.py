@@ -6,12 +6,18 @@ from repro.serve.decode import (
     prefill,
     serve_step,
 )
-from repro.serve.knn_lm import KNNDatastore, interpolate, knn_logits
+from repro.serve.knn_lm import (
+    KNNDatastore,
+    MutableKNNDatastore,
+    interpolate,
+    knn_logits,
+)
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 __all__ = [
     "ContinuousBatcher",
     "KNNDatastore",
+    "MutableKNNDatastore",
     "Request",
     "abstract_cache",
     "cache_schema",

@@ -24,6 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DescentConfig, build_knn_graph, graph_search
+from repro.core.online import (
+    MutableKNNStore,
+    OnlineConfig,
+    knn_delete,
+    knn_insert,
+)
 
 
 @dataclasses.dataclass
@@ -48,8 +54,54 @@ class KNNDatastore:
         )
 
 
+@dataclasses.dataclass
+class MutableKNNDatastore:
+    """Growable kNN-LM datastore: the online store (core/online.py) plus a
+    value array that grows in lockstep — so the datastore can absorb
+    (hidden state, next token) pairs *during decoding* (see the capture
+    hook in serve/scheduler.py) and retire stale entries, without a full
+    graph rebuild."""
+
+    store: MutableKNNStore
+    values: jax.Array       # (cap,) next-token ids, row-aligned with store
+    build_stats: dict
+
+    @classmethod
+    def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
+              cfg: DescentConfig | None = None,
+              online_cfg: OnlineConfig | None = None,
+              key: jax.Array | None = None):
+        cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
+        store, st = MutableKNNStore.build(
+            keys, k=k, cfg=online_cfg, descent=cfg, key=key)
+        vals = jnp.zeros((store.capacity,), values.dtype)
+        vals = vals.at[:values.shape[0]].set(values)
+        return cls(
+            store=store,
+            values=vals,
+            build_stats={"iters": st.iters, "dist_evals": st.dist_evals,
+                         "reordered": st.reordered},
+        )
+
+    def append(self, keys: jax.Array, values: jax.Array, *,
+               key: jax.Array | None = None):
+        """Insert (key, value) pairs; returns (datastore, insert stats)."""
+        n0 = self.store.n
+        store, stats = knn_insert(self.store, keys, key=key)
+        vals = self.values
+        if store.capacity != vals.shape[0]:     # store doubled: grow alike
+            vals = jnp.zeros((store.capacity,), vals.dtype
+                             ).at[:vals.shape[0]].set(vals)
+        vals = vals.at[n0:n0 + keys.shape[0]].set(values)
+        return dataclasses.replace(self, store=store, values=vals), stats
+
+    def delete(self, ids: jax.Array):
+        store, stats = knn_delete(self.store, ids)
+        return dataclasses.replace(self, store=store), stats
+
+
 def knn_logits(
-    ds: KNNDatastore,
+    ds: KNNDatastore | MutableKNNDatastore,
     queries: jax.Array,      # (q, d) hidden states
     vocab: int,
     *,
@@ -59,8 +111,12 @@ def knn_logits(
     rounds: int = 24,
 ) -> jax.Array:
     """Graph-search retrieval -> (q, vocab) log-probabilities."""
-    dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
-                             k_out=k, beam=beam, rounds=rounds)
+    if isinstance(ds, MutableKNNDatastore):
+        dist, idx = ds.store.search(queries, k_out=k, beam=beam,
+                                    rounds=rounds)
+    else:
+        dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
+                                 k_out=k, beam=beam, rounds=rounds)
     w = jax.nn.softmax(-dist / temperature, axis=-1)        # (q, k)
     vals = ds.values[jnp.clip(idx, 0, ds.values.shape[0] - 1)]
     probs = jnp.zeros((queries.shape[0], vocab))

@@ -42,7 +42,10 @@ class ContinuousBatcher:
 
     def __init__(self, n_slots: int, step_fn: Callable,
                  prefill_fn: Callable, write_slot: Callable,
-                 sampler: Callable | None = None):
+                 sampler: Callable | None = None, *,
+                 knn_store: Any | None = None,
+                 knn_capture: Callable | None = None,
+                 knn_chunk: int = 64):
         self.n_slots = n_slots
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -54,6 +57,15 @@ class ContinuousBatcher:
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self.lengths = np.zeros((n_slots,), np.int32)
         self.steps = 0
+        # optional online kNN-LM datastore growth: each decode step's
+        # (captured key, sampled token) pairs from active slots are
+        # buffered and inserted in fixed-size chunks so the jitted insert
+        # path compiles once (serve/knn_lm.MutableKNNDatastore)
+        self.knn_store = knn_store
+        self.knn_capture = knn_capture
+        self.knn_chunk = knn_chunk
+        self._knn_keys: list[np.ndarray] = []
+        self._knn_vals: list[int] = []
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -82,6 +94,13 @@ class ContinuousBatcher:
         logits, cache = self.step_fn(
             cache, jnp.asarray(self.tokens), jnp.asarray(self.lengths))
         nxt = np.asarray(self.sampler(logits))
+        if self.knn_store is not None and self.knn_capture is not None:
+            keys = np.asarray(self.knn_capture(logits))
+            for i, s in enumerate(self.slots):
+                if s.active:
+                    self._knn_keys.append(keys[i])
+                    self._knn_vals.append(int(nxt[i]))
+            self._flush_knn()
         for i, s in enumerate(self.slots):
             if not s.active:
                 continue
@@ -96,9 +115,37 @@ class ContinuousBatcher:
                 del self.live[s.rid]
                 self.slots[i] = SlotState()
         self.steps += 1
+        if self.knn_store is not None and not self.live and not self.queue:
+            # stream drained: flush the sub-chunk tail so step()-driven
+            # callers (not just run()) lose nothing
+            self._flush_knn(final=True)
         return cache, True
+
+    def flush_knn(self):
+        """Flush any buffered (key, token) pairs into the datastore."""
+        if self.knn_store is not None:
+            self._flush_knn(final=True)
+
+    def _flush_knn(self, final: bool = False):
+        """Insert buffered (key, token) pairs in ``knn_chunk``-sized
+        batches (fixed shapes -> the jitted insert path is reused); a
+        ``final`` flush takes the remainder as a one-off shape."""
+        while len(self._knn_vals) >= self.knn_chunk:
+            self._knn_insert(self.knn_chunk)
+        if final and self._knn_vals:
+            self._knn_insert(len(self._knn_vals))
+
+    def _knn_insert(self, m: int):
+        kb = jnp.asarray(np.stack(self._knn_keys[:m]))
+        vb = jnp.asarray(np.asarray(self._knn_vals[:m], np.int32))
+        del self._knn_keys[:m]
+        del self._knn_vals[:m]
+        self.knn_store, _ = self.knn_store.append(
+            kb, vb, key=jax.random.fold_in(jax.random.key(17), self.steps))
 
     def run(self, cache, *, max_steps: int = 10_000):
         while (self.queue or self.live) and self.steps < max_steps:
             cache, _ = self.step(cache)
+        if self.knn_store is not None:
+            self._flush_knn(final=True)
         return cache

@@ -58,6 +58,19 @@ def test_recall_fast_operating_point(clustered_data, truth):
     assert recall_at_k(idx, ti) > 0.95
 
 
+def test_recall_regression_small_seeded():
+    """Seeded end-to-end floor on a small Gaussian-blob set: recall@10
+    >= 0.9 at the default operating point. Guards future kernel/selection
+    changes against silently degrading graph quality (fast tier)."""
+    x = datasets.clustered(jax.random.key(11), 512, 16, 8)
+    _, ti = brute_force_knn(x, x, 10)
+    cfg = DescentConfig(k=10, rho=1.0, max_iters=15)
+    _, idx, stats = build_knn_graph(x, k=10, cfg=cfg, key=jax.random.key(5))
+    r = recall_at_k(idx, ti)
+    assert r >= 0.9, r
+    assert stats.iters <= cfg.max_iters
+
+
 def test_convergence_updates_decrease(clustered_data):
     x, _ = clustered_data
     cfg = DescentConfig(k=10, rho=1.0, max_iters=10, reorder=False)

@@ -1,0 +1,188 @@
+"""Online subsystem (core/online.py + serve wiring): insert quality and
+cost vs. a full rebuild, tombstone semantics, determinism, and the
+growable kNN-LM datastore / scheduler capture path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DescentConfig,
+    brute_force_knn,
+    build_knn_graph,
+    datasets,
+    recall_at_k,
+)
+from repro.core.online import (
+    MutableKNNStore,
+    OnlineConfig,
+    knn_delete,
+    knn_insert,
+)
+from repro.kernels import ref
+from repro.kernels.knn_merge import knn_compact_blocked
+from repro.serve import ContinuousBatcher, MutableKNNDatastore, Request, knn_logits
+
+K = 10
+DCFG = DescentConfig(k=K, rho=1.0, max_iters=15)
+
+
+@pytest.fixture(scope="module")
+def blob_split():
+    """~512-point Gaussian-blob corpus + a 10% insert batch (the paper's
+    clustered setting, small enough for the fast tier)."""
+    x = datasets.clustered(jax.random.key(3), 563, 16, 8)
+    return x[:512], x[512:]
+
+
+@pytest.fixture(scope="module")
+def base_store(blob_split):
+    x0, _ = blob_split
+    dist, idx, _ = build_knn_graph(x0, k=K, cfg=DCFG, key=jax.random.key(1))
+    return MutableKNNStore.from_graph(x0, dist, idx, cfg=OnlineConfig())
+
+
+def test_insert_recall_and_cost(blob_split, base_store):
+    """Acceptance criterion: inserting 10% new points reaches >= 0.85
+    recall on the combined corpus at < 25% of the distance evaluations of
+    a from-scratch build (both counted via DescentStats.dist_evals)."""
+    x0, xn = blob_split
+    store, ins = knn_insert(base_store, xn, key=jax.random.key(2))
+    combined = jnp.concatenate([x0, xn], axis=0)
+    _, _, rebuild = build_knn_graph(
+        combined, k=K, cfg=DCFG, key=jax.random.key(1))
+    _, true_idx = brute_force_knn(combined, combined, K)
+    r = recall_at_k(store.nl.idx[:combined.shape[0]], true_idx)
+    assert r >= 0.85, r
+    assert ins.dist_evals < 0.25 * rebuild.dist_evals, (
+        ins.dist_evals, rebuild.dist_evals)
+
+
+def test_insert_grows_capacity(blob_split, base_store):
+    _, xn = blob_split
+    assert base_store.capacity == 512
+    store, _ = knn_insert(base_store, xn, key=jax.random.key(2))
+    assert store.capacity == 1024
+    assert store.n == 563
+    assert store.live_count() == 563
+
+
+def test_insert_deterministic(blob_split, base_store):
+    _, xn = blob_split
+    a, sa = knn_insert(base_store, xn, key=jax.random.key(7))
+    b, sb = knn_insert(base_store, xn, key=jax.random.key(7))
+    assert jnp.array_equal(a.nl.idx, b.nl.idx)
+    assert jnp.array_equal(a.nl.dist, b.nl.dist)
+    assert sa.dist_evals == sb.dist_evals
+
+
+def test_delete_never_returns_tombstoned(blob_split, base_store):
+    x0, _ = blob_split
+    dead = jnp.arange(0, 64, dtype=jnp.int32)
+    store, _ = knn_delete(base_store, dead)
+    # no list edge targets a dead node
+    tgt = store.nl.idx
+    bad = (tgt[:, :, None] == dead[None, None, :]).any(-1) & (tgt >= 0)
+    assert int(bad.sum()) == 0
+    # queries (including the deleted points themselves) never surface a
+    # tombstoned id, and the patched graph still answers fully
+    _, idx = store.search(x0[:96], k_out=5, key=jax.random.key(0))
+    got = np.asarray(idx)
+    assert not np.isin(got[got >= 0], np.asarray(dead)).any()
+    assert (got >= 0).mean() == 1.0
+
+
+def test_delete_then_insert_roundtrip(blob_split, base_store):
+    """Tombstoned rows stay dead across later inserts."""
+    x0, xn = blob_split
+    dead = jnp.asarray([3, 99, 500], jnp.int32)
+    store, _ = knn_delete(base_store, dead)
+    store, _ = knn_insert(store, xn, key=jax.random.key(2))
+    assert not bool(store.alive[dead].any())
+    tgt = store.nl.idx
+    bad = (tgt[:, :, None] == dead[None, None, :]).any(-1) & (tgt >= 0)
+    assert int(bad.sum()) == 0
+
+
+def test_delete_reconnects_orphaned_rows():
+    """A live row whose entire neighborhood dies must keep a non-empty
+    list (re-anchored to live rows) instead of dropping out of the graph."""
+    key = jax.random.key(0)
+    # two far-apart blobs; kill all of blob B except one point
+    a = jax.random.normal(key, (96, 8))
+    b = 100.0 + jax.random.normal(jax.random.fold_in(key, 1), (32, 8))
+    x = jnp.concatenate([a, b])
+    dist, idx, _ = build_knn_graph(x, k=8,
+                                   cfg=DescentConfig(k=8, rho=1.0,
+                                                     max_iters=10),
+                                   key=jax.random.key(1))
+    store = MutableKNNStore.from_graph(x, dist, idx)
+    survivor = 96
+    dead = jnp.arange(97, 128, dtype=jnp.int32)
+    store, _ = knn_delete(store, dead)
+    nbrs = store.nl.idx[survivor]
+    assert int((nbrs >= 0).sum()) > 0          # reconnected, not orphaned
+    assert bool(store.alive[jnp.clip(nbrs, 0, None)][nbrs >= 0].all())
+
+
+def test_compact_kernel_matches_oracle():
+    rng = np.random.RandomState(0)
+    n, k = 37, 8
+    d = np.sort(rng.rand(n, k).astype(np.float32), axis=1)
+    i = rng.randint(-1, 50, size=(n, k)).astype(np.int32)
+    # exercise the init_random placeholder distance (3e38, a valid entry
+    # that must survive) and empty slots (inf)
+    d[5, -1] = 3.0e38
+    i[5, -1] = 42
+    d[6, -1] = np.inf
+    drop = rng.rand(n, k) < 0.3
+    drop[5, -1] = False
+    rd, ri, rr = ref.knn_compact(
+        jnp.asarray(d), jnp.asarray(i), jnp.asarray(drop))
+    kd, ki, kr = knn_compact_blocked(
+        jnp.asarray(d), jnp.asarray(i), jnp.asarray(drop), tm=16,
+        interpret=True)
+    assert jnp.array_equal(ri, ki)
+    assert jnp.array_equal(rr, kr)
+    assert jnp.array_equal(jnp.isinf(rd), jnp.isinf(kd))
+    assert jnp.array_equal(jnp.where(jnp.isinf(rd), 0.0, rd),
+                           jnp.where(jnp.isinf(kd), 0.0, kd))
+
+
+def test_mutable_datastore_append_changes_retrieval():
+    vocab, dk = 16, 8
+    keys0 = jax.random.normal(jax.random.key(0), (128, dk))
+    vals0 = jax.random.randint(jax.random.key(1), (128,), 0, vocab)
+    ds = MutableKNNDatastore.build(keys0, vals0, k=8, key=jax.random.key(2))
+    center = jnp.full((dk,), 5.0)
+    newk = center + 0.05 * jax.random.normal(jax.random.key(3), (16, dk))
+    ds2, _ = ds.append(newk, jnp.full((16,), 7, vals0.dtype),
+                       key=jax.random.key(4))
+    lp = knn_logits(ds2, center[None], vocab, k=4)
+    assert int(jnp.argmax(lp[0])) == 7
+
+
+def test_scheduler_capture_grows_datastore():
+    vocab, dk = 16, 8
+    keys0 = jax.random.normal(jax.random.key(0), (64, dk))
+    vals0 = jax.random.randint(jax.random.key(1), (64,), 0, vocab)
+    ds = MutableKNNDatastore.build(keys0, vals0, k=8, key=jax.random.key(2))
+    proj = jax.random.normal(jax.random.key(5), (vocab, dk))
+
+    def prefill_fn(toks):
+        return jnp.ones((1, vocab)), None, toks.shape[1]
+
+    def step_fn(cache, toks, lengths):
+        lg = jax.nn.one_hot((toks[:, 0] * 3 + lengths) % vocab, vocab) * 4.0
+        return lg, cache
+
+    b = ContinuousBatcher(
+        2, step_fn, prefill_fn, lambda c, i, o, l: c,
+        knn_store=ds, knn_capture=lambda lg: lg @ proj, knn_chunk=8)
+    for r in range(3):
+        b.submit(Request(rid=r, prompt=np.array([1, 2, 3], np.int32),
+                         max_new=8))
+    b.run(None)
+    # 3 requests x 8 tokens, minus the un-captured prefill token each
+    assert b.knn_store.store.n == ds.store.n + 21
+    assert b.knn_store.store.live_count() == ds.store.n + 21
