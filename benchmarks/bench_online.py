@@ -1,25 +1,66 @@
-"""Online updates (core/online.py): insert throughput vs. full rebuild.
+"""Online updates (core/online.py): insert throughput vs. full rebuild,
+and the frontier-compaction scaling story.
 
-Streams batches of new points into a built store with ``knn_insert`` and
-compares against rebuilding the graph from scratch on the grown corpus —
-in wall time, points/s, and the paper's cost model (distance evaluations,
-via DescentStats.dist_evals). Also reports delete+patch latency.
+Modes (``python benchmarks/bench_online.py --mode ...``):
+
+  * ``stream`` (default) — streams batches of new points into a built
+    store with ``knn_insert`` and compares against rebuilding the graph
+    from scratch on the grown corpus — in wall time, points/s, and the
+    paper's cost model (distance evaluations, via DescentStats.dist_evals).
+    Also reports delete+patch latency.
+
+  * ``smoke`` — tiny fixed config for the CI benchmark lane: one insert
+    batch + one delete on a small clustered corpus, reporting
+    ``insert_recall`` (combined-corpus recall vs. brute force) and the
+    frontier accounting. CI fails the lane when ``insert_recall`` drops
+    below the pinned floor (see benchmarks/check_gate.py and
+    benchmarks/README.md).
+
+  * ``sweep`` — the frontier-compaction scaling sweep: for each store
+    size up to 10^5 rows, time delete+refill with the frontier path
+    (cost ~ affected rows) against the dense baseline
+    (``OnlineConfig(frontier=False)``: every allocated row processed).
+    The dense wall-clock grows linearly with n; the frontier wall-clock
+    tracks the (fixed) frontier size — the acceptance gate for the
+    frontier refactor is frontier >= 5x faster at n = 10^5.
+
+All modes write JSON rows via benchmarks.common.Sink (online.json).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Sink
-from repro.core import DescentConfig, build_knn_graph, datasets
-from repro.core.online import MutableKNNStore, knn_delete, knn_insert
+from repro.core import (
+    DescentConfig,
+    brute_force_knn,
+    build_knn_graph,
+    datasets,
+    recall_at_k,
+)
+from repro.core.online import (
+    MutableKNNStore,
+    OnlineConfig,
+    knn_delete,
+    knn_insert,
+)
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    return out, time.perf_counter() - t0
 
 
 def run(n: int = 8192, d: int = 32, k: int = 20, batch: int = 256,
-        n_batches: int = 4) -> list:
-    sink = Sink("online")
+        n_batches: int = 4, sink: Sink | None = None) -> list:
+    """Streaming insert vs. rebuild (the original online benchmark)."""
+    sink = sink or Sink("online")
     key = jax.random.key(0)
     x = datasets.clustered(key, n + batch * n_batches, d, 16)
     x0, stream = x[:n], x[n:]
@@ -48,7 +89,9 @@ def run(n: int = 8192, d: int = 32, k: int = 20, batch: int = 256,
         ins_evals += st.dist_evals
         sink.row(op="insert", batch=batch, n_after=store.n,
                  s=round(dt, 3), pts_per_s=round(batch / dt, 1),
-                 dist_evals=st.dist_evals, compile_included=b == 0)
+                 dist_evals=st.dist_evals, compile_included=b == 0,
+                 frontier_rows=st.frontier_rows,
+                 padded_rows=st.padded_rows)
 
     # --- full rebuild on the grown corpus (the alternative to streaming)
     grown = x[:n + total_ins]
@@ -67,9 +110,107 @@ def run(n: int = 8192, d: int = 32, k: int = 20, batch: int = 256,
     jax.block_until_ready(store.nl.dist)
     dt = time.perf_counter() - t0
     sink.row(op="delete", n_dead=int(dead.shape[0]), s=round(dt, 3),
-             dist_evals=dst.dist_evals)
+             dist_evals=dst.dist_evals, frontier_rows=dst.frontier_rows,
+             padded_rows=dst.padded_rows)
     return sink.save()
 
 
+def run_smoke(n: int = 768, d: int = 16, k: int = 10,
+              batch: int = 96) -> list:
+    """CI benchmark lane: small, seeded, < ~2 min on a CPU runner.
+
+    Emits ``insert_recall`` — recall@k of the store's neighbor lists on
+    the combined corpus after one streamed insert batch, against brute
+    force — which check_gate.py compares to the pinned floor."""
+    sink = Sink("online")
+    x = datasets.clustered(jax.random.key(3), n + batch, d, 8)
+    x0, xn = x[:n], x[n:]
+    dcfg = DescentConfig(k=k, rho=1.0, max_iters=15)
+
+    store, _ = MutableKNNStore.build(
+        x0, k=k, descent=dcfg, key=jax.random.key(1))
+    (store, ins), t_ins = _timed(
+        lambda: knn_insert(store, xn, key=jax.random.key(2)))
+    combined = jnp.concatenate([x0, xn], axis=0)
+    _, true_idx = brute_force_knn(combined, combined, k)
+    r = recall_at_k(store.nl.idx[:combined.shape[0]], true_idx)
+    sink.row(op="smoke_insert", n=n, batch=batch, k=k,
+             s=round(t_ins, 3), insert_recall=round(float(r), 4),
+             dist_evals=ins.dist_evals,
+             frontier_rows=ins.frontier_rows,
+             padded_rows=ins.padded_rows)
+
+    dead = jnp.arange(0, n // 10, dtype=jnp.int32)
+    (store, dst), t_del = _timed(lambda: knn_delete(store, dead))
+    live = store.nl.idx[:combined.shape[0]]
+    dangling = int(
+        ((live[:, :, None] == dead[None, None, :]).any(-1)
+         & (live >= 0)).sum()
+    )
+    sink.row(op="smoke_delete", n_dead=int(dead.shape[0]),
+             s=round(t_del, 3), dangling_edges=dangling,
+             frontier_rows=dst.frontier_rows,
+             padded_rows=dst.padded_rows)
+    return sink.save()
+
+
+def run_sweep(sizes: tuple = (12_500, 25_000, 50_000, 100_000),
+              d: int = 32, k: int = 20, n_dead: int = 128,
+              iters: int = 2) -> list:
+    """Frontier vs. dense delete+refill scaling (the tentpole's receipt).
+
+    The store is built once per size with a cheap descent config (graph
+    quality is irrelevant for update timing), then the same delete is
+    timed under the frontier path and the dense baseline. Both paths run
+    the identical chunked kernels; the dense baseline simply puts every
+    allocated row on the frontier."""
+    sink = Sink("online")
+    for n in sizes:
+        x = datasets.clustered(jax.random.key(0), n, d, 32)
+        dcfg = DescentConfig(k=k, rho=0.5, max_iters=4, polish=1)
+        t0 = time.perf_counter()
+        dist, idx, _ = build_knn_graph(x, k=k, cfg=dcfg,
+                                       key=jax.random.key(1))
+        t_build = time.perf_counter() - t0
+        dead = jnp.arange(0, n_dead, dtype=jnp.int32)
+
+        row = {"op": "sweep_delete", "n": n, "k": k, "n_dead": n_dead,
+               "build_s": round(t_build, 2)}
+        for mode, frontier in (("frontier", True), ("dense", False)):
+            cfg = OnlineConfig(frontier=frontier)
+            store = MutableKNNStore.from_graph(x, dist, idx, cfg=cfg)
+            # warm-up pays compile, then time fresh deletes of the same
+            # rows (delete is not idempotent state-wise, so rebuild the
+            # store wrapper each rep — from_graph is O(n) copies, cheap)
+            knn_delete(store, dead)
+            ts = []
+            for _ in range(iters):
+                store_i = MutableKNNStore.from_graph(x, dist, idx, cfg=cfg)
+                (_, st), dt = _timed(lambda s=store_i: knn_delete(s, dead))
+                ts.append(dt)
+            row[f"{mode}_s"] = round(min(ts), 4)
+            row[f"{mode}_rows"] = st.padded_rows
+            row[f"{mode}_evals"] = st.dist_evals
+        row["speedup"] = round(row["dense_s"] / max(row["frontier_s"], 1e-9),
+                               2)
+        sink.row(**row)
+    return sink.save()
+
+
+def main(argv: list | None = None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mode", choices=("stream", "smoke", "sweep"),
+                   default="stream")
+    p.add_argument("--n", type=int, default=None,
+                   help="override corpus size (stream mode)")
+    args = p.parse_args(argv)
+    if args.mode == "smoke":
+        return run_smoke()
+    if args.mode == "sweep":
+        return run_sweep()
+    kw = {} if args.n is None else {"n": args.n}
+    return run(**kw)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -19,7 +19,6 @@ CPU-budget note: n stops at 32k (vs the paper's 131k on native C).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax

@@ -1,0 +1,58 @@
+"""CI perf/quality gate for the online-update benchmark lane.
+
+Reads the JSON written by ``bench_online.py --mode smoke`` and fails
+(exit 1) when any gated metric violates its pinned floor:
+
+  * ``insert_recall`` — combined-corpus recall@k after a streamed insert
+    batch must stay at or above ``--floor`` (quality gate)
+  * ``dangling_edges`` — a delete must leave zero edges pointing at
+    tombstoned rows (correctness gate)
+
+See benchmarks/README.md for how the floor is pinned and when to move it.
+
+Usage: python benchmarks/check_gate.py results/bench/online.json --floor 0.85
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_insert"]
+    if not smoke:
+        failures.append("no smoke_insert row in benchmark output")
+    for r in smoke:
+        recall = float(r.get("insert_recall", 0.0))
+        if recall < floor:
+            failures.append(
+                f"insert_recall {recall:.4f} below pinned floor {floor}"
+            )
+    for r in rows:
+        if r.get("op") == "smoke_delete" and int(r.get("dangling_edges", 0)):
+            failures.append(
+                f"delete left {r['dangling_edges']} dangling edges"
+            )
+    return failures
+
+
+def main(argv: list | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("results", help="path to online.json")
+    p.add_argument("--floor", type=float, default=0.85,
+                   help="pinned insert_recall floor")
+    args = p.parse_args(argv)
+    with open(args.results) as f:
+        rows = json.load(f)
+    failures = check(rows, args.floor)
+    for msg in failures:
+        print(f"GATE FAIL: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"gate ok: insert_recall >= {args.floor}, no dangling edges")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,6 @@ Paper artifact map:
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data import DataConfig, TokenPipeline
-from repro.models import forward, init_tree, model_schema
+from repro.models import init_tree, model_schema
 from repro.models.model import embed_inputs, output_logits
 from repro.models.transformer import run_stack
 from repro.serve import KNNDatastore, interpolate, knn_logits

@@ -17,6 +17,39 @@ import jax.numpy as jnp
 _BIG = 3.0e38
 
 
+@functools.partial(jax.jit, static_argnames=("hops", "capacity"))
+def expand_frontier(
+    graph_idx: jax.Array,   # (n, k) neighbor ids, -1 = empty
+    seeds: jax.Array,       # (s,) seed row ids, -1 = padding
+    *,
+    hops: int = 1,
+    capacity: int,
+    alive: jax.Array | None = None,   # (n,) bool — rows to keep
+):
+    """h-hop outbound closure of ``seeds`` over the K-NN graph, compacted
+    into a padded id buffer (the localized-update frontier of
+    core/online.py: after a change at ``seeds``, refinement only needs to
+    propagate along this closure — the friend-of-a-friend principle).
+
+    Returns (ids (capacity,) int32 ascending with -1 padding at the tail,
+    mask (n,) bool). When the closure exceeds ``capacity`` the smallest
+    ``capacity`` ids are kept (the mask is exact either way). The mask
+    passes are O(n*k) bitwise work — no distance evaluations; the point is
+    that the *expensive* per-row kernels then run on the compacted ids.
+    """
+    n, _ = graph_idx.shape
+    mask = jnp.zeros((n,), bool)
+    mask = mask.at[jnp.where(seeds >= 0, seeds, n)].set(True, mode="drop")
+    for _h in range(hops):
+        hit = mask[:, None] & (graph_idx >= 0)
+        tgt = jnp.where(hit, graph_idx, n).reshape(-1)
+        mask = mask.at[tgt].set(True, mode="drop")
+    if alive is not None:
+        mask &= alive
+    ids = jnp.nonzero(mask, size=capacity, fill_value=-1)[0].astype(jnp.int32)
+    return ids, mask
+
+
 @functools.partial(jax.jit, static_argnames=("k_out", "beam", "rounds"))
 def graph_search(
     x: jax.Array,          # (n, d) corpus (feature-padded ok)

@@ -124,6 +124,63 @@ def _lookup_flags(nl: NeighborLists, ids: jax.Array) -> jax.Array:
     return (hit & nl.new[:, None, :]).any(-1)
 
 
+def merge_rows(
+    nl: NeighborLists,
+    rows: jax.Array,
+    cand_dist: jax.Array,
+    cand_idx: jax.Array,
+    *,
+    backend: str = "auto",
+) -> tuple[NeighborLists, jax.Array]:
+    """Frontier merge: merge (f, c) candidates into rows ``rows`` only
+    (-1 = padding; ids must be unique). All flag bookkeeping happens on
+    the gathered (f, k) sub-lists, so the cost is O(f), not O(n).
+    Returns (lists, per-frontier-row accepted count)."""
+    n, _ = nl.dist.shape
+    ok = rows >= 0
+    safe = jnp.where(ok, rows, 0)
+    old_sub = NeighborLists(nl.dist[safe], nl.idx[safe], nl.new[safe])
+    new_dist, new_idx, upd = ops.knn_merge_rows(
+        nl.dist, nl.idx, rows, cand_dist, cand_idx, backend=backend
+    )
+    sub_i = new_idx[safe]
+    was_old = (sub_i[:, :, None] == old_sub.idx[:, None, :]).any(-1)
+    flag_sub = jnp.where(
+        was_old, _lookup_flags(old_sub, sub_i), True
+    ) & (sub_i >= 0)
+    tgt = jnp.where(ok, rows, n)
+    new_flag = nl.new.at[tgt].set(flag_sub, mode="drop")
+    return NeighborLists(new_dist, new_idx, new_flag), upd
+
+
+def purge_rows(
+    nl: NeighborLists, rows: jax.Array, alive: jax.Array, *,
+    backend: str = "auto",
+) -> tuple[NeighborLists, jax.Array]:
+    """Frontier purge: drop dead-target edges from rows ``rows`` only, and
+    empty the lists of rows that are themselves dead (the online delete
+    path puts both kinds on the compaction frontier). Survivors stay
+    sorted/packed; freed slots become (inf, -1, False). Returns
+    (lists, per-frontier-row removed count)."""
+    n = alive.shape[0]
+    ok = rows >= 0
+    safe = jnp.where(ok, rows, 0)
+    sub_i = nl.idx[safe]
+    sub_valid = sub_i >= 0
+    drop = sub_valid & ~alive[jnp.clip(sub_i, 0, n - 1)]
+    drop |= sub_valid & ~alive[safe][:, None]       # dead row: clear it all
+    new_dist, new_idx, removed = ops.knn_compact_rows(
+        nl.dist, nl.idx, rows, drop, backend=backend
+    )
+    sub_new = new_idx[safe]
+    flag_sub = _lookup_flags(
+        NeighborLists(nl.dist[safe], sub_i, nl.new[safe]), sub_new
+    ) & (sub_new >= 0)
+    tgt = jnp.where(ok, rows, n)
+    new_flag = nl.new.at[tgt].set(flag_sub, mode="drop")
+    return NeighborLists(new_dist, new_idx, new_flag), removed
+
+
 def purge(
     nl: NeighborLists, alive: jax.Array, *, backend: str = "auto"
 ) -> tuple[NeighborLists, jax.Array]:

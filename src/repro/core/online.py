@@ -10,31 +10,41 @@ module adds that, built from the same primitives as the offline build:
     **localized NN-Descent**: a few friend-of-a-friend rounds that join
     each new point against the neighbors of its current neighbors
     (Dong et al.'s local-join restricted to the touched frontier), using
-    the offline build's ``compact_pairs`` + ``heap.merge`` machinery for
-    the reverse-edge repair. Convergence is fast for the same reason
-    NN-Descent's is: a neighbor of a neighbor is likely a neighbor, so a
-    handful of seed candidates is enough to pull in the true neighborhood.
+    the offline build's ``compact_pairs`` machinery for the reverse-edge
+    repair. Convergence is fast for the same reason NN-Descent's is: a
+    neighbor of a neighbor is likely a neighbor, so a handful of seed
+    candidates is enough to pull in the true neighborhood.
 
   * ``knn_delete(store, ids)`` — tombstones rows (``alive`` mask), purges
-    the dead targets out of every bounded neighbor list with the
-    ``knn_compact`` kernel, and refills the holes of affected rows from
-    their surviving neighbors' lists (one friend-of-a-friend merge round).
+    the dead targets out of every *affected* neighbor list with the
+    chunked ``knn_compact`` kernel, and refills the holes of affected rows
+    from their surviving neighbors' lists (one friend-of-a-friend merge
+    round).
 
   * ``MutableKNNStore`` — capacity-doubling padded arrays (features,
     squared norms, neighbor lists, alive mask). Shapes only change on a
     doubling, so the jitted insert/delete/search computations are reused
     across steady-state streaming updates instead of recompiling per call.
 
+**Frontier compaction.** Every update step operates on an explicit,
+compacted frontier of affected row ids instead of masking over the dense
+store: the frontier (``graph_search.expand_frontier`` for inserts, a
+dead-edge scan for deletes) is gathered into padded chunks of
+``OnlineConfig.chunk`` rows, the merge/compact kernels run per chunk
+(``kernels.ops.knn_merge_rows`` / ``knn_compact_rows``), and results are
+scattered back. Update cost therefore scales with the frontier size, not
+the store size — the friend-of-a-friend principle says a localized change
+only propagates along a small frontier, so stores can grow past 10^5 rows
+without updates going dense. The only O(n) work left per update is
+bitwise mask bookkeeping (no distance evaluations). Setting
+``OnlineConfig(frontier=False)`` keeps the same semantics but puts every
+allocated row on the delete frontier — the dense baseline used by
+``benchmarks/bench_online.py`` to measure the compaction win.
+
 Cost accounting mirrors the offline build: both entry points return a
 ``DescentStats`` whose ``dist_evals`` counts (an upper bound on) distance
-evaluations, so insert-vs-rebuild tradeoffs are measurable (see
-``benchmarks/bench_online.py`` and ``tests/test_online.py``).
-
-Scaling note: the delete-refill round is dense over the store (every row
-gathers its k*k friend-of-friend candidates; only affected rows' pairs
-are evaluated/counted). For stores far beyond ~10^5 rows the refill
-should be chunked or frontier-compacted; at repro scale dense is simpler
-and layout-native.
+evaluations, and whose ``frontier_rows`` / ``padded_rows`` record how many
+store rows the update actually touched (see ``tests/test_online.py``).
 """
 from __future__ import annotations
 
@@ -45,7 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heap
-from repro.core.graph_search import graph_search
+from repro.core.graph_search import expand_frontier, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
 from repro.core.nn_descent import (
@@ -66,8 +76,17 @@ class OnlineConfig:
     self_join: bool = True    # all-pairs join within the inserted batch
     self_join_max: int = 512  # skip the O(m^2) self-join beyond this m
     merge_mult: int = 2       # reverse-merge buffer = merge_mult * k
-    backend: str = "auto"     # kernel dispatch for the tombstone purge
-                              # (heap.merge is pure jnp regardless)
+    backend: str = "auto"     # kernel dispatch for the chunked
+                              # merge/compact kernels (ops.knn_merge_rows /
+                              # ops.knn_compact_rows)
+    chunk: int = 1024         # frontier chunk: padded row-id buffers are
+                              # rounded up to a multiple of this, and the
+                              # delete path processes one chunk at a time
+    frontier: bool = True     # False = dense baseline: every allocated row
+                              # goes on the delete frontier (bench only)
+    frontier_mult: int = 4    # insert reverse-frontier cap, in units of
+                              # m*k (the 2-hop closure is truncated to
+                              # min(cap, frontier_mult*m*k) rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +192,11 @@ def _next_capacity(n: int) -> int:
     return cap
 
 
+def _ceil_chunk(f: int, chunk: int, cap: int) -> int:
+    """Round a frontier size up to whole padded chunks, capped at cap."""
+    return min(cap, ((max(f, 1) + chunk - 1) // chunk) * chunk)
+
+
 def _pad_to(x: jax.Array, dp: int) -> jax.Array:
     xp = pad_features(x.astype(jnp.float32))
     if xp.shape[1] != dp:
@@ -215,6 +239,23 @@ def _grown(store: MutableKNNStore, need: int) -> MutableKNNStore:
     )
 
 
+def _frontier_slots(fids: jax.Array, recv: jax.Array) -> jax.Array:
+    """Map receiver row ids into frontier-local slots. ``fids`` is an
+    ascending padded id buffer (expand_frontier's layout: valid prefix,
+    -1 tail); receivers not on the frontier map to -1 (dropped)."""
+    big = jnp.iinfo(jnp.int32).max
+    fs = jnp.where(fids >= 0, fids, big)
+    slot = jnp.searchsorted(fs, recv)
+    slot_c = jnp.clip(slot, 0, fids.shape[0] - 1)
+    hit = (recv >= 0) & (fs[slot_c] == recv)
+    return jnp.where(hit, slot_c.astype(jnp.int32), -1)
+
+
+# ---------------------------------------------------------------------------
+# insert
+# ---------------------------------------------------------------------------
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _insert_stitch(
     x: jax.Array,
@@ -228,33 +269,49 @@ def _insert_stitch(
     cfg: OnlineConfig,
 ):
     """Stitch m new rows into the graph and run the localized refinement.
-    Returns (x, x2, nl, alive, extra dist evals, per-round accepted)."""
+
+    All reverse-edge repair runs on a compacted frontier: the 1-hop
+    closure of the new rows for the seed merge, the 2-hop closure per
+    refinement round — gathered into padded chunks and merged with the
+    chunked kernels, never a dense pass over the store.
+
+    Returns (x, x2, nl, alive, extra dist evals, per-round accepted,
+    frontier rows touched, padded rows processed)."""
     cap, k = nl.idx.shape
     m = ids.shape[0]
     c = cfg.merge_mult * k
+    chunk = max(1, min(cfg.chunk, cap))
     q2 = jnp.sum(q * q, axis=1)
 
     x = x.at[ids].set(q)
     x2 = x2.at[ids].set(q2)
     alive = alive.at[ids].set(True)
     seed_ok = seed_i >= 0
-    dist = nl.dist.at[ids].set(jnp.where(seed_ok, seed_d, jnp.inf))
-    idx = nl.idx.at[ids].set(jnp.where(seed_ok, seed_i, -1))
-    newf = nl.new.at[ids].set(seed_ok)
+    nl = NeighborLists(
+        nl.dist.at[ids].set(jnp.where(seed_ok, seed_d, jnp.inf)),
+        nl.idx.at[ids].set(jnp.where(seed_ok, seed_i, -1)),
+        nl.new.at[ids].set(seed_ok),
+    )
 
     evals = jnp.zeros((), jnp.int32)
+    f_rows = jnp.zeros((), jnp.int32)
+    p_rows = jnp.zeros((), jnp.int32)
     upds = []
 
     # reverse-merge the seed edges: each new point is a candidate for the
-    # rows that seeded it (distances already evaluated by the search)
+    # rows that seeded it (distances already evaluated by the search).
+    # Receivers all sit on the 1-hop closure of the new rows, which fits
+    # exactly in m*(k+1) frontier slots — no truncation.
+    f_seed = _ceil_chunk(min(cap, m * (k + 1)), chunk, cap)
+    fids, _ = expand_frontier(nl.idx, ids, hops=1, capacity=f_seed)
     recv = jnp.where(seed_ok, seed_i, -1).reshape(-1)
     src = jnp.broadcast_to(ids[:, None], (m, k)).reshape(-1)
-    cd, ci = compact_pairs(recv, src, seed_d.reshape(-1), cap, c)
-    merged, upd0 = heap.merge(
-        NeighborLists(dist, idx, newf), cd, ci
-    )
-    dist, idx, newf = merged
+    lrecv = _frontier_slots(fids, recv)
+    cd, ci = compact_pairs(lrecv, src, seed_d.reshape(-1), f_seed, c)
+    nl, upd0 = heap.merge_rows(nl, fids, cd, ci, backend=cfg.backend)
     upds.append(jnp.sum(upd0))
+    f_rows += jnp.sum(fids >= 0, dtype=jnp.int32)
+    p_rows += f_seed
 
     # all-pairs join within the inserted batch: a streamed batch is often
     # self-similar (new points are each other's nearest neighbors) and the
@@ -266,18 +323,24 @@ def _insert_stitch(
         off = ~jnp.eye(m, dtype=bool)
         d_qq = jnp.where(off, jnp.maximum(d_qq, 0.0), jnp.inf)
         cand = jnp.where(off, jnp.broadcast_to(ids[None, :], (m, m)), -1)
-        sub = NeighborLists(dist[ids], idx[ids], newf[ids])
-        sub, upd_sj = heap.merge(sub, d_qq, cand)
-        dist = dist.at[ids].set(sub.dist)
-        idx = idx.at[ids].set(sub.idx)
-        newf = newf.at[ids].set(sub.new)
+        nl, upd_sj = heap.merge_rows(nl, ids, d_qq, cand,
+                                     backend=cfg.backend)
         evals += m * (m - 1) // 2
         upds[-1] = upds[-1] + jnp.sum(upd_sj)
+        f_rows += m
+        p_rows += m
 
     # localized NN-Descent: friend-of-a-friend rounds over the frontier
+    f_rev = _ceil_chunk(min(cap, cfg.frontier_mult * m * k), chunk, cap)
     for _r in range(cfg.refine_rounds):
-        ni = idx[ids]                                       # (m, k)
-        nb = idx[jnp.clip(ni, 0, cap - 1)]                  # (m, k, k)
+        ni = nl.idx[ids]                                    # (m, k)
+        nb = nl.idx[jnp.clip(ni, 0, cap - 1)]               # (m, k, k)
+        # receivers of this round's reverse edges all sit on the 2-hop
+        # closure of the new rows (cand = neighbors-of-neighbors); the
+        # frontier buffer is that closure, truncated to f_rev rows
+        fids_r, _ = expand_frontier(
+            nl.idx, ids, hops=2, capacity=f_rev, alive=alive
+        )
         cand = nb.reshape(m, k * k)
         src_ok = jnp.broadcast_to(
             (ni >= 0)[:, :, None], (m, k, k)
@@ -294,31 +357,29 @@ def _insert_stitch(
             "md,mcd->mc", q, cx, preferred_element_type=jnp.float32
         )
         dd = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
-        evals += jnp.sum(ok)
+        evals += jnp.sum(ok, dtype=jnp.int32)
 
         # forward: candidates into the new rows' lists
-        sub = NeighborLists(dist[ids], idx[ids], newf[ids])
-        sub, upd_f = heap.merge(
-            sub, dd, jnp.where(ok, cand, -1)
+        nl, upd_f = heap.merge_rows(
+            nl, ids, dd, jnp.where(ok, cand, -1), backend=cfg.backend
         )
-        dist = dist.at[ids].set(sub.dist)
-        idx = idx.at[ids].set(sub.idx)
-        newf = newf.at[ids].set(sub.new)
 
         # reverse: the new point is a candidate for every touched row that
         # it beats (receiver-side prefilter, as in nn_descent_iteration)
-        kth = dist[jnp.clip(cand, 0, cap - 1), -1]
+        kth = nl.dist[jnp.clip(cand, 0, cap - 1), -1]
         rok = ok & (dd < kth)
         recv = jnp.where(rok, cand, -1).reshape(-1)
         src = jnp.broadcast_to(ids[:, None], cand.shape).reshape(-1)
-        cd, ci = compact_pairs(recv, src, dd.reshape(-1), cap, c)
-        merged, upd_r = heap.merge(
-            NeighborLists(dist, idx, newf), cd, ci
-        )
-        dist, idx, newf = merged
+        lrecv = _frontier_slots(fids_r, recv)
+        cd, ci = compact_pairs(lrecv, src, dd.reshape(-1), f_rev, c)
+        nl, upd_r = heap.merge_rows(nl, fids_r, cd, ci, backend=cfg.backend)
         upds.append(jnp.sum(upd_f) + jnp.sum(upd_r))
+        # count rows actually on the compacted buffer (the closure may be
+        # truncated to f_rev, and truncated rows are never touched)
+        f_rows += m + jnp.sum(fids_r >= 0, dtype=jnp.int32)
+        p_rows += m + f_rev
 
-    return x, x2, NeighborLists(dist, idx, newf), alive, evals, jnp.stack(upds)
+    return x, x2, nl, alive, evals, jnp.stack(upds), f_rows, p_rows
 
 
 def knn_insert(
@@ -355,7 +416,7 @@ def knn_insert(
     )
     seed_evals = m * (beam + cfg.seed_rounds * k)
 
-    x, x2, nl, alive, evals, upds = _insert_stitch(
+    x, x2, nl, alive, evals, upds, f_rows, p_rows = _insert_stitch(
         store.x, store.x2, store.nl, store.alive, q, ids, seed_d, seed_i,
         cfg,
     )
@@ -363,6 +424,8 @@ def knn_insert(
         iters=cfg.refine_rounds,
         dist_evals=seed_evals + int(evals),
         updates=tuple(int(u) for u in upds),
+        frontier_rows=int(f_rows),
+        padded_rows=int(p_rows),
     )
     return (
         dataclasses.replace(
@@ -372,48 +435,100 @@ def knn_insert(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _delete_patch(
+# ---------------------------------------------------------------------------
+# delete
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _delete_need(idx: jax.Array, alive: jax.Array) -> jax.Array:
+    """Rows needing compaction after a tombstone: rows that reference a
+    dead id, plus newly-dead rows that still hold a list. One O(n*k)
+    bitwise scan — no distance evaluations; everything downstream runs on
+    the compacted frontier this mask defines."""
+    cap = alive.shape[0]
+    valid = idx >= 0
+    dead_tgt = valid & ~alive[jnp.clip(idx, 0, cap - 1)]
+    return dead_tgt.any(axis=1) | (valid.any(axis=1) & ~alive)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _purge_chunk(
+    nl: NeighborLists,
+    rows: jax.Array,
+    alive: jax.Array,
+    backend: str,
+):
+    """One padded chunk of the tombstone purge (heap.purge_rows)."""
+    return heap.purge_rows(nl, rows, alive, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _refill_chunk(
+    x: jax.Array,
+    x2: jax.Array,
+    nl: NeighborLists,
+    idx0: jax.Array,       # (cap, k) post-purge snapshot (read-only)
+    alive: jax.Array,
+    rows: jax.Array,       # (chunk,) frontier row ids, -1 = padding
+    removed: jax.Array,    # (chunk,) per-row purge removal count
+    backend: str,
+):
+    """Refill one padded chunk of affected rows from their surviving
+    neighbors' lists (one friend-of-a-friend round). Candidate reads come
+    from the post-purge snapshot ``idx0`` so chunk processing order cannot
+    change the result (all chunks see the same graph state).
+
+    Returns (nl, dist evals, accepted, orphan count in this chunk)."""
+    cap, k = nl.idx.shape
+    f = rows.shape[0]
+    ok_row = rows >= 0
+    safe = jnp.where(ok_row, rows, 0)
+    refill = ok_row & alive[safe] & (removed > 0)
+
+    ni = idx0[safe]                                        # (f, k)
+    nb = idx0[jnp.clip(ni, 0, cap - 1)].reshape(f, k * k)
+    src_ok = jnp.broadcast_to(
+        (ni >= 0)[:, :, None], (f, k, k)
+    ).reshape(f, k * k)
+    ok = (
+        refill[:, None]
+        & src_ok
+        & (nb >= 0)
+        & alive[jnp.clip(nb, 0, cap - 1)]
+        & (nb != safe[:, None])
+    )
+    ok &= ~(nb[:, :, None] == ni[:, None, :]).any(-1)
+    cx = x[jnp.clip(nb, 0, cap - 1)]
+    dd = x2[safe][:, None] + x2[jnp.clip(nb, 0, cap - 1)] - 2.0 * jnp.einsum(
+        "fd,fcd->fc", x[safe], cx, preferred_element_type=jnp.float32
+    )
+    dd = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+    evals = jnp.sum(ok, dtype=jnp.int32)
+    nl, upd = heap.merge_rows(
+        nl, rows, dd, jnp.where(ok, nb, -1), backend=backend
+    )
+
+    orphan = ok_row & alive[safe] & ~(nl.idx[safe] >= 0).any(axis=1)
+    return nl, evals, jnp.sum(upd), jnp.sum(orphan, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("merge_c",))
+def _reconnect_orphans(
     x: jax.Array,
     x2: jax.Array,
     nl: NeighborLists,
     alive: jax.Array,
-    cfg: OnlineConfig,
+    merge_c: int,
 ):
-    """Purge dead targets from every list and refill affected rows from
-    their surviving neighbors' lists (one friend-of-a-friend round)."""
+    """Reconnect orphans: a live row whose ENTIRE neighborhood died has no
+    surviving neighbors to refill from (and its inbound edges were purged
+    too) — re-anchor it to k deterministic live rows, both directions, so
+    it stays reachable by graph search. Rare (requires a whole
+    neighborhood to die at once), so this runs as a separate pass only
+    when a refill chunk reports orphans."""
     cap, k = nl.idx.shape
-    nl, removed = heap.purge(nl, alive, backend=cfg.backend)
-    affected = (removed > 0) & alive
-
-    ni = nl.idx
-    nb = ni[jnp.clip(ni, 0, cap - 1)].reshape(cap, k * k)
     rows = jnp.arange(cap, dtype=jnp.int32)
-    src_ok = jnp.broadcast_to(
-        (ni >= 0)[:, :, None], (cap, k, k)
-    ).reshape(cap, k * k)
-    ok = (
-        affected[:, None]
-        & src_ok
-        & (nb >= 0)
-        & alive[jnp.clip(nb, 0, cap - 1)]
-        & (nb != rows[:, None])
-    )
-    ok &= ~(nb[:, :, None] == ni[:, None, :]).any(-1)
-    cx = x[jnp.clip(nb, 0, cap - 1)]
-    dd = x2[:, None] + x2[jnp.clip(nb, 0, cap - 1)] - 2.0 * jnp.einsum(
-        "nd,ncd->nc", x, cx, preferred_element_type=jnp.float32
-    )
-    dd = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
-    evals = jnp.sum(ok)
-    nl, upd = heap.merge(
-        nl, dd, jnp.where(ok, nb, -1)
-    )
-
-    # reconnect orphans: a live row whose ENTIRE neighborhood died has no
-    # surviving neighbors to refill from (and its inbound edges were
-    # purged too) — re-anchor it to k deterministic live rows, both
-    # directions, so it stays reachable by graph search
     orphan = alive & ~(nl.idx >= 0).any(axis=1)
     anchor_score = jnp.where(alive & ~orphan, (cap - rows).astype(jnp.float32),
                              -1.0)
@@ -428,23 +543,15 @@ def _delete_patch(
         x @ x[anchors].T
     )
     dd2 = jnp.where(ok2, jnp.maximum(dd2, 0.0), jnp.inf)
-    evals += jnp.sum(ok2)
+    evals = jnp.sum(ok2, dtype=jnp.int32)
     anc = jnp.broadcast_to(anchors[None, :], (cap, k))
     nl, upd2 = heap.merge(nl, dd2, jnp.where(ok2, anc, -1))
     # reverse edges: the anchors adopt the orphan so it is reachable
     recv = jnp.where(ok2, anc, -1).reshape(-1)
     src = jnp.broadcast_to(rows[:, None], (cap, k)).reshape(-1)
-    cd, ci = compact_pairs(recv, src, dd2.reshape(-1), cap,
-                           cfg.merge_mult * k)
+    cd, ci = compact_pairs(recv, src, dd2.reshape(-1), cap, merge_c)
     nl, upd3 = heap.merge(nl, cd, ci)
-
-    # dead rows keep their coordinates (harmless) but lose their lists
-    nl = NeighborLists(
-        jnp.where(alive[:, None], nl.dist, jnp.inf),
-        jnp.where(alive[:, None], nl.idx, -1),
-        nl.new & alive[:, None],
-    )
-    return nl, evals, jnp.sum(upd) + jnp.sum(upd2) + jnp.sum(upd3)
+    return nl, evals, jnp.sum(upd2) + jnp.sum(upd3)
 
 
 def knn_delete(
@@ -454,12 +561,68 @@ def knn_delete(
     """Tombstone ``ids`` and patch every neighbor list that pointed at
     them. Deleted rows are never returned by ``store.search`` and never
     re-enter any list; their slots are not reused (capacity is monotone).
+
+    The purge + refill run over the compacted frontier of affected rows
+    (rows referencing a dead id, plus the dead rows themselves), gathered
+    into ``cfg.chunk``-row padded chunks — O(frontier) work, not O(n).
+    With ``cfg.frontier=False`` every allocated row is processed (the
+    dense baseline; identical results).
     """
+    cfg = store.cfg
     ids = jnp.asarray(ids, jnp.int32)
     alive = store.alive.at[ids].set(False)
-    nl, evals, upd = _delete_patch(store.x, store.x2, store.nl, alive,
-                                   store.cfg)
+    cap = store.capacity
+    chunk = max(1, min(cfg.chunk, cap))
+
+    if cfg.frontier:
+        need = _delete_need(store.nl.idx, alive)
+        f = int(jnp.sum(need))
+        if f == 0:
+            return (
+                dataclasses.replace(store, alive=alive),
+                DescentStats(iters=0, dist_evals=0, frontier_rows=0,
+                             padded_rows=0),
+            )
+        n_chunks = (f + chunk - 1) // chunk
+        fids = jnp.nonzero(
+            need, size=n_chunks * chunk, fill_value=-1
+        )[0].astype(jnp.int32)
+    else:
+        f = store.n
+        n_chunks = (f + chunk - 1) // chunk
+        ar = jnp.arange(n_chunks * chunk, dtype=jnp.int32)
+        fids = jnp.where(ar < f, ar, -1)
+
+    nl = store.nl
+    removed = []
+    for j in range(n_chunks):
+        rows = jax.lax.dynamic_slice_in_dim(fids, j * chunk, chunk)
+        nl, rm = _purge_chunk(nl, rows, alive, cfg.backend)
+        removed.append(rm)
+
+    idx0 = nl.idx      # post-purge snapshot: all refill chunks read this
+    evals = jnp.zeros((), jnp.int32)
+    upd = jnp.zeros((), jnp.int32)
+    orphans = jnp.zeros((), jnp.int32)
+    for j in range(n_chunks):
+        rows = jax.lax.dynamic_slice_in_dim(fids, j * chunk, chunk)
+        nl, ev, up, orp = _refill_chunk(
+            store.x, store.x2, nl, idx0, alive, rows, removed[j],
+            cfg.backend,
+        )
+        evals += ev
+        upd += up
+        orphans += orp
+
+    if int(orphans) > 0:
+        nl, ev2, up2 = _reconnect_orphans(
+            store.x, store.x2, nl, alive, cfg.merge_mult * store.k
+        )
+        evals += ev2
+        upd += up2
+
     stats = DescentStats(
-        iters=1, dist_evals=int(evals), updates=(int(upd),)
+        iters=1, dist_evals=int(evals), updates=(int(upd),),
+        frontier_rows=f, padded_rows=n_chunks * chunk,
     )
     return dataclasses.replace(store, nl=nl, alive=alive), stats

@@ -25,21 +25,40 @@ def brute_force_knn(
     """Exact k-NN of ``queries`` against corpus ``x`` (squared l2).
 
     Chunked over queries through the blocked distance kernel; (dist, idx)
-    ascending. When queries IS the corpus, pass exclude_self=True.
+    ascending. ``exclude_self`` requires queries IS the corpus (row i of
+    the queries is row i of the corpus; excluded by index, since the norm
+    expansion's self-distance carries cancellation error). Pass
+    exclude_self=False for a separate query set.
     """
+    if exclude_self and queries.shape[0] != x.shape[0]:
+        raise ValueError(
+            "exclude_self=True assumes queries IS the corpus "
+            f"(row-aligned); got {queries.shape[0]} queries vs "
+            f"{x.shape[0]} corpus rows — pass exclude_self=False"
+        )
     nq = queries.shape[0]
     pad = (-nq) % chunk
     qp = jnp.pad(queries, ((0, pad), (0, 0)))
 
-    def one(qc):
+    def one(args):
+        qc, off = args
         d = ops.pairwise_sq_l2(qc, x, backend=backend)
         if exclude_self:
-            d = jnp.where(d <= 1e-9, jnp.inf, d)
+            # identity exclusion, not a distance threshold: the norm
+            # expansion's self-distance carries cancellation error well
+            # above any epsilon (float32, large norms), and a threshold
+            # would also drop true duplicate points from the ground truth
+            rows = off * chunk + jnp.arange(chunk)
+            d = jnp.where(
+                rows[:, None] == jnp.arange(x.shape[0])[None, :], jnp.inf, d
+            )
         neg_d, idx = jax.lax.top_k(-d, k)
         return -neg_d, idx
 
     qs = qp.reshape(-1, chunk, qp.shape[1])
-    dist, idx = jax.lax.map(one, qs)
+    dist, idx = jax.lax.map(
+        one, (qs, jnp.arange(qs.shape[0], dtype=jnp.int32))
+    )
     dist = dist.reshape(-1, k)[:nq]
     idx = idx.reshape(-1, k)[:nq]
     return dist, idx.astype(jnp.int32)

@@ -27,7 +27,6 @@ graph state (paper: "the copying itself is done all at once").
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

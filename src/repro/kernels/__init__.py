@@ -5,13 +5,19 @@
 # ops.py = jit'd dispatch wrappers, ref.py = pure-jnp oracles.
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.knn_merge import knn_merge_blocked
+from repro.kernels.knn_merge import (
+    knn_compact_rows_blocked,
+    knn_merge_blocked,
+    knn_merge_rows_blocked,
+)
 from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
 
 __all__ = [
     "ops",
     "ref",
     "flash_attention",
+    "knn_compact_rows_blocked",
     "knn_merge_blocked",
+    "knn_merge_rows_blocked",
     "pairwise_sq_l2_blocked",
 ]

@@ -194,3 +194,66 @@ def knn_merge_blocked(
         interpret=interpret,
     )(cur_dist, cur_idx, cand_dist, cand_idx)
     return od[:n], oi[:n], upd[:n, 0]
+
+
+# ---------------------------------------------------------------------------
+# Frontier (gather/scatter) chunked dispatch — the online subsystem's
+# sparse-update entry points: gather a compacted padded buffer of row ids,
+# run the same row-blocked kernels over the (f, ...) chunk (the pallas grid
+# is the per-chunk tiling), scatter the results back. Cost scales with the
+# frontier size f, not the store size n. Oracles: ref.knn_merge_rows /
+# ref.knn_compact_rows.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def knn_merge_rows_blocked(
+    cur_dist: jax.Array,   # (n, k) ascending, +inf = empty slot
+    cur_idx: jax.Array,    # (n, k) int32, -1 = empty
+    rows: jax.Array,       # (f,) unique row ids, -1 = padding
+    cand_dist: jax.Array,  # (f, c) f32
+    cand_idx: jax.Array,   # (f, c) int32, -1 = invalid
+    *,
+    tm: int = DEFAULT_TM,
+    interpret: bool = False,
+):
+    """Merge candidates into the listed rows only (full arrays returned)."""
+    n, _ = cur_dist.shape
+    ok = rows >= 0
+    safe = jnp.where(ok, rows, 0)
+    sub_d = cur_dist[safe]
+    sub_i = cur_idx[safe]
+    cand_idx = jnp.where(ok[:, None], cand_idx, -1)
+    md, mi, upd = knn_merge_blocked(
+        sub_d, sub_i, cand_dist, cand_idx, tm=tm, interpret=interpret
+    )
+    tgt = jnp.where(ok, rows, n)
+    out_d = cur_dist.at[tgt].set(md, mode="drop")
+    out_i = cur_idx.at[tgt].set(mi, mode="drop")
+    return out_d, out_i, jnp.where(ok, upd, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def knn_compact_rows_blocked(
+    cur_dist: jax.Array,   # (n, k) ascending, +inf = empty slot
+    cur_idx: jax.Array,    # (n, k) int32, -1 = empty
+    rows: jax.Array,       # (f,) unique row ids, -1 = padding
+    drop: jax.Array,       # (f, k) bool — frontier-local entries to remove
+    *,
+    tm: int = DEFAULT_TM,
+    interpret: bool = False,
+):
+    """Drop masked entries from the listed rows only (full arrays returned)."""
+    n, _ = cur_dist.shape
+    ok = rows >= 0
+    safe = jnp.where(ok, rows, 0)
+    sub_d = cur_dist[safe]
+    sub_i = cur_idx[safe]
+    drop = drop & ok[:, None]
+    cd, ci, removed = knn_compact_blocked(
+        sub_d, sub_i, drop, tm=tm, interpret=interpret
+    )
+    tgt = jnp.where(ok, rows, n)
+    out_d = cur_dist.at[tgt].set(cd, mode="drop")
+    out_i = cur_idx.at[tgt].set(ci, mode="drop")
+    return out_d, out_i, jnp.where(ok, removed, 0)

@@ -9,14 +9,16 @@ shape/dtype sweeps.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.knn_merge import knn_compact_blocked, knn_merge_blocked
+from repro.kernels.knn_merge import (
+    knn_compact_blocked,
+    knn_compact_rows_blocked,
+    knn_merge_blocked,
+    knn_merge_rows_blocked,
+)
 from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
 
 
@@ -78,6 +80,49 @@ def knn_compact(
     if backend == "interpret":
         return knn_compact_blocked(cur_dist, cur_idx, drop, interpret=True)
     return ref.knn_compact(cur_dist, cur_idx, drop)
+
+
+def knn_merge_rows(
+    cur_dist: jax.Array,
+    cur_idx: jax.Array,
+    rows: jax.Array,
+    cand_dist: jax.Array,
+    cand_idx: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Frontier merge: candidates target ``rows`` only (gather -> blocked
+    merge kernel over the padded chunk -> scatter). -1 rows are padding."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_merge_rows_blocked(cur_dist, cur_idx, rows, cand_dist,
+                                      cand_idx)
+    if backend == "interpret":
+        return knn_merge_rows_blocked(
+            cur_dist, cur_idx, rows, cand_dist, cand_idx, interpret=True
+        )
+    return ref.knn_merge_rows(cur_dist, cur_idx, rows, cand_dist, cand_idx)
+
+
+def knn_compact_rows(
+    cur_dist: jax.Array,
+    cur_idx: jax.Array,
+    rows: jax.Array,
+    drop: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Frontier compact: drop masked entries from ``rows`` only (gather ->
+    blocked compact kernel over the padded chunk -> scatter)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_compact_rows_blocked(cur_dist, cur_idx, rows, drop)
+    if backend == "interpret":
+        return knn_compact_rows_blocked(cur_dist, cur_idx, rows, drop,
+                                        interpret=True)
+    return ref.knn_compact_rows(cur_dist, cur_idx, rows, drop)
 
 
 def attention(

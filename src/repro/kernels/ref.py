@@ -102,6 +102,63 @@ def knn_compact(
 
 
 # ---------------------------------------------------------------------------
+# Frontier (gather/scatter) row dispatch — the online subsystem's chunked
+# update primitives: apply merge/compact to an explicit compacted set of
+# row ids instead of the whole store, so update cost scales with the
+# frontier size (core/online.py). ``rows`` is a padded id buffer (-1 =
+# padding slot, ids must be unique); non-listed rows pass through.
+# ---------------------------------------------------------------------------
+
+def knn_merge_rows(
+    cur_dist: jax.Array,   # (n, k) ascending
+    cur_idx: jax.Array,    # (n, k)
+    rows: jax.Array,       # (f,) unique row ids, -1 = padding
+    cand_dist: jax.Array,  # (f, c)
+    cand_idx: jax.Array,   # (f, c)  (-1 = invalid slot)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge per-frontier-row candidates into the listed rows only.
+
+    Returns (dist, idx, updated) with full (n, k) arrays — rows not in
+    ``rows`` are untouched — and ``updated`` (f,) the per-frontier-row
+    accepted count (0 on padding slots). Oracle for knn_merge_rows_blocked.
+    """
+    n, _ = cur_dist.shape
+    ok = rows >= 0
+    safe = jnp.where(ok, rows, 0)
+    sub_d = cur_dist[safe]
+    sub_i = cur_idx[safe]
+    cand_idx = jnp.where(ok[:, None], cand_idx, -1)
+    md, mi, upd = knn_merge(sub_d, sub_i, cand_dist, cand_idx)
+    tgt = jnp.where(ok, rows, n)          # padding scatters out of bounds
+    out_d = cur_dist.at[tgt].set(md, mode="drop")
+    out_i = cur_idx.at[tgt].set(mi, mode="drop")
+    return out_d, out_i, jnp.where(ok, upd, 0)
+
+
+def knn_compact_rows(
+    cur_dist: jax.Array,   # (n, k) ascending, +inf = empty
+    cur_idx: jax.Array,    # (n, k), -1 = empty
+    rows: jax.Array,       # (f,) unique row ids, -1 = padding
+    drop: jax.Array,       # (f, k) bool — entries to remove, frontier-local
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Drop masked entries from the listed rows only.
+
+    Returns (dist, idx, removed) with full (n, k) arrays and ``removed``
+    (f,) per-frontier-row. Oracle for knn_compact_rows_blocked."""
+    n, _ = cur_dist.shape
+    ok = rows >= 0
+    safe = jnp.where(ok, rows, 0)
+    sub_d = cur_dist[safe]
+    sub_i = cur_idx[safe]
+    drop = drop & ok[:, None]
+    cd, ci, removed = knn_compact(sub_d, sub_i, drop)
+    tgt = jnp.where(ok, rows, n)
+    out_d = cur_dist.at[tgt].set(cd, mode="drop")
+    out_i = cur_idx.at[tgt].set(ci, mode="drop")
+    return out_d, out_i, jnp.where(ok, removed, 0)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (blocked attention for the LM stack)
 # ---------------------------------------------------------------------------
 

@@ -6,7 +6,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 #   PYTHONPATH=src python -m repro.launch.attr --cell knn --variant a2a
 
 import argparse
-import json
 from collections import defaultdict
 
 from repro.launch import hlo_cost as H
@@ -107,7 +106,6 @@ def main():
     ap.add_argument("--variant", required=True)
     ap.add_argument("--top", type=int, default=25)
     args = ap.parse_args()
-    from repro.launch.perf import VARIANTS, lower_knn_variant, lower_train_variant
     # re-lower, keep the hlo text
     import repro.launch.dryrun as dr
     captured = {}

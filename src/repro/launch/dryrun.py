@@ -38,7 +38,6 @@ from repro.configs import SHAPES, batch_specs, get_config, input_specs, list_arc
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     model_flops_step,
-    parse_collectives,
     roofline_from_compiled,
 )
 from repro.models import abstract_tree, active_param_count, model_schema, param_count, sharding_tree

@@ -30,7 +30,6 @@ used by launch/dryrun.py for the §Roofline terms.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

@@ -18,11 +18,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse
 import dataclasses
 import json
-import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, batch_specs, get_config, input_specs
 from repro.launch.dryrun import _finish, _train_cfg

@@ -16,7 +16,6 @@ per-link traffic of ONE group member, matching the per-chip denominators.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16

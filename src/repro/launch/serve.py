@@ -20,8 +20,6 @@ from repro.serve import (
     KNNDatastore,
     Request,
     init_cache,
-    interpolate,
-    knn_logits,
     prefill,
     serve_step,
 )

@@ -12,10 +12,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, TokenPipeline

@@ -20,13 +20,12 @@ is a §Perf optimization (EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ParamDef, apply_rope, dense_schema, rmsnorm, rmsnorm_schema, softcap as _softcap
+from repro.models.layers import ParamDef, apply_rope, rmsnorm, rmsnorm_schema
 from repro.models.sharding import shard_act
 
 _NEG = -2.0e30

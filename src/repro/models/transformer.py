@@ -16,9 +16,6 @@ Every schema helper mirrors its apply function 1:1 (params.py contract).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
 
@@ -27,8 +24,6 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
     ParamDef,
-    dense,
-    dense_schema,
     glu,
     glu_schema,
     layernorm,
@@ -38,7 +33,6 @@ from repro.models.layers import (
     rmsnorm,
     rmsnorm_schema,
 )
-from repro.models.params import ParamDef as _PD
 from repro.models.sharding import shard_act
 
 

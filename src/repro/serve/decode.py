@@ -18,8 +18,6 @@ lower: (params, cache, tokens (B,1), lengths (B,)) -> (logits, cache).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,13 +26,10 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.model import embed_inputs, output_logits
-from repro.models.params import ParamDef, abstract_tree, init_tree, sharding_tree
+from repro.models.params import abstract_tree, init_tree, sharding_tree
 from repro.models.transformer import (
     apply_ffn,
     apply_norm,
-    attn_block,
-    mamba_block,
-    shared_block,
     stack_schema,
 )
 

@@ -70,8 +70,18 @@ class MutableKNNDatastore:
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
               cfg: DescentConfig | None = None,
               online_cfg: OnlineConfig | None = None,
+              frontier_chunk: int | None = None,
               key: jax.Array | None = None):
+        """``frontier_chunk`` overrides the online store's frontier chunk
+        size (OnlineConfig.chunk): streamed decode-time inserts touch a
+        frontier proportional to the insert batch, so serving stacks tune
+        the padded-chunk quantum to their stream batch size (see the
+        capture hook in serve/scheduler.py)."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
+        online_cfg = online_cfg or OnlineConfig()
+        if frontier_chunk is not None:
+            online_cfg = dataclasses.replace(online_cfg,
+                                             chunk=frontier_chunk)
         store, st = MutableKNNStore.build(
             keys, k=k, cfg=online_cfg, descent=cfg, key=key)
         vals = jnp.zeros((store.capacity,), values.dtype)

@@ -19,7 +19,6 @@ Quantization: symmetric per-block int8 (block = trailing axis tiles of
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

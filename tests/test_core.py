@@ -19,8 +19,7 @@ from repro import (
     recall_at_k,
     window_cluster_purity,
 )
-from repro.core import datasets, heap, selection
-from repro.core.nn_descent import nn_descent_iteration
+from repro.core import datasets, heap
 
 
 @pytest.fixture(scope="module")

@@ -1,6 +1,10 @@
 """Online subsystem (core/online.py + serve wiring): insert quality and
-cost vs. a full rebuild, tombstone semantics, determinism, and the
+cost vs. a full rebuild, tombstone semantics, determinism, frontier
+compaction (oracle parity of the chunked gather/scatter dispatch,
+O(frontier) delete cost, frontier-vs-dense result parity), and the
 growable kNN-LM datastore / scheduler capture path."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +17,7 @@ from repro.core import (
     datasets,
     recall_at_k,
 )
+from repro.core.graph_search import expand_frontier
 from repro.core.online import (
     MutableKNNStore,
     OnlineConfig,
@@ -20,7 +25,11 @@ from repro.core.online import (
     knn_insert,
 )
 from repro.kernels import ref
-from repro.kernels.knn_merge import knn_compact_blocked
+from repro.kernels.knn_merge import (
+    knn_compact_blocked,
+    knn_compact_rows_blocked,
+    knn_merge_rows_blocked,
+)
 from repro.serve import ContinuousBatcher, MutableKNNDatastore, Request, knn_logits
 
 K = 10
@@ -147,6 +156,135 @@ def test_compact_kernel_matches_oracle():
     assert jnp.array_equal(jnp.isinf(rd), jnp.isinf(kd))
     assert jnp.array_equal(jnp.where(jnp.isinf(rd), 0.0, rd),
                            jnp.where(jnp.isinf(kd), 0.0, kd))
+
+
+# ---------------------------------------------------------------------------
+# frontier compaction (the chunked gather/scatter dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _random_lists(rng, n, k, hi):
+    d = np.sort(rng.rand(n, k).astype(np.float32), axis=1)
+    i = rng.randint(-1, hi, size=(n, k)).astype(np.int32)
+    return jnp.asarray(d), jnp.asarray(i)
+
+
+def test_merge_rows_kernel_matches_oracle():
+    """Chunked gather/scatter merge: pallas (interpret) vs. pure-jnp
+    oracle, including padding slots and out-of-frontier passthrough."""
+    rng = np.random.RandomState(1)
+    n, k, f, c = 41, 6, 16, 9
+    cur_d, cur_i = _random_lists(rng, n, k, 60)
+    rows = np.full((f,), -1, np.int32)
+    picks = rng.choice(n, size=f - 3, replace=False)
+    rows[:f - 3] = np.sort(picks)
+    cand_d = rng.rand(f, c).astype(np.float32)
+    cand_i = rng.randint(-1, 60, size=(f, c)).astype(np.int32)
+    args = (cur_d, cur_i, jnp.asarray(rows), jnp.asarray(cand_d),
+            jnp.asarray(cand_i))
+    rd, ri, ru = ref.knn_merge_rows(*args)
+    kd, ki, ku = knn_merge_rows_blocked(*args, tm=8, interpret=True)
+    assert jnp.array_equal(ri, ki)
+    assert jnp.array_equal(ru, ku)
+    assert jnp.allclose(jnp.where(jnp.isinf(rd), 0.0, rd),
+                        jnp.where(jnp.isinf(kd), 0.0, kd))
+    # rows off the frontier are bit-identical to the input
+    off = np.setdiff1d(np.arange(n), rows[rows >= 0])
+    assert jnp.array_equal(ri[off], cur_i[off])
+    assert jnp.array_equal(rd[off], cur_d[off])
+
+
+def test_compact_rows_kernel_matches_oracle():
+    rng = np.random.RandomState(2)
+    n, k, f = 29, 8, 12
+    cur_d, cur_i = _random_lists(rng, n, k, 40)
+    rows = np.full((f,), -1, np.int32)
+    rows[:f - 2] = np.sort(rng.choice(n, size=f - 2, replace=False))
+    drop = rng.rand(f, k) < 0.4
+    args = (cur_d, cur_i, jnp.asarray(rows), jnp.asarray(drop))
+    rd, ri, rr = ref.knn_compact_rows(*args)
+    kd, ki, kr = knn_compact_rows_blocked(*args, tm=8, interpret=True)
+    assert jnp.array_equal(ri, ki)
+    assert jnp.array_equal(rr, kr)
+    assert jnp.array_equal(jnp.isinf(rd), jnp.isinf(kd))
+    off = np.setdiff1d(np.arange(n), rows[rows >= 0])
+    assert jnp.array_equal(ri[off], cur_i[off])
+
+
+def test_expand_frontier_closure():
+    """1- and 2-hop closures over a known tiny graph, with truncation."""
+    idx = jnp.asarray([[1, -1], [2, -1], [3, -1], [3, -1]], jnp.int32)
+    seeds = jnp.asarray([0], jnp.int32)
+    ids1, mask1 = expand_frontier(idx, seeds, hops=1, capacity=4)
+    assert np.asarray(ids1).tolist() == [0, 1, -1, -1]
+    ids2, mask2 = expand_frontier(idx, seeds, hops=2, capacity=4)
+    assert np.asarray(ids2).tolist() == [0, 1, 2, -1]
+    # alive filter drops rows; truncation keeps the smallest ids
+    alive = jnp.asarray([True, False, True, True])
+    ids3, _ = expand_frontier(idx, seeds, hops=3, capacity=2, alive=alive)
+    assert np.asarray(ids3).tolist() == [0, 2]
+    assert bool(mask1[1]) and not bool(mask1[2])
+    assert bool(mask2[2])
+
+
+def test_delete_refill_touches_o_frontier_rows(blob_split):
+    """The tentpole's receipt: delete-refill processes O(frontier) rows —
+    the padded-chunk row count tracks the affected set, not the store
+    size. The same 8-row delete on a 4x bigger store must process the
+    same number of padded rows (and far fewer than the store holds)."""
+    x0, _ = blob_split                       # 512 points
+    xbig = datasets.clustered(jax.random.key(9), 2048, 16, 8)
+    cfg = OnlineConfig(chunk=64)
+    dead = jnp.arange(17, 25, dtype=jnp.int32)
+    for name, pts in (("small", x0), ("big", xbig)):
+        dist, idx, _ = build_knn_graph(pts, k=K, cfg=DCFG,
+                                       key=jax.random.key(1))
+        store = MutableKNNStore.from_graph(pts, dist, idx, cfg=cfg)
+        _, st = knn_delete(store, dead)
+        assert st.frontier_rows <= st.padded_rows
+        # padding never adds more than one chunk
+        assert st.padded_rows <= st.frontier_rows + 64
+        # the frontier is the dead rows plus their inbound pointers — a
+        # degree-bounded set that does NOT scale with the store: the same
+        # bound holds on the 512-row and the 2048-row store
+        assert st.frontier_rows <= 4 * int(dead.shape[0]) * K, (
+            name, st.frontier_rows)
+        assert st.padded_rows < pts.shape[0] // 2, (name, st.padded_rows)
+
+
+def test_delete_frontier_matches_dense(blob_split, base_store):
+    """The dense baseline (frontier=False) and the compacted frontier
+    path run the same per-row semantics — results must be identical."""
+    dead = jnp.concatenate([
+        jnp.arange(0, 40, dtype=jnp.int32),
+        jnp.asarray([200, 201, 202, 511], jnp.int32),
+    ])
+    sf = dataclasses.replace(
+        base_store, cfg=dataclasses.replace(base_store.cfg, frontier=True,
+                                            chunk=128))
+    sd = dataclasses.replace(
+        base_store, cfg=dataclasses.replace(base_store.cfg, frontier=False,
+                                            chunk=128))
+    out_f, st_f = knn_delete(sf, dead)
+    out_d, st_d = knn_delete(sd, dead)
+    assert jnp.array_equal(out_f.nl.idx, out_d.nl.idx)
+    assert jnp.array_equal(out_f.nl.dist, out_d.nl.dist)
+    assert jnp.array_equal(out_f.alive, out_d.alive)
+    # identical distance work, far fewer rows processed
+    assert st_f.dist_evals == st_d.dist_evals
+    assert st_f.padded_rows < st_d.padded_rows
+
+
+def test_insert_reports_frontier_accounting(blob_split, base_store):
+    _, xn = blob_split
+    store, st = knn_insert(base_store, xn, key=jax.random.key(2))
+    assert st.frontier_rows > 0
+    assert st.padded_rows >= st.frontier_rows
+    # one padded chunk per merge stage at most (the store is smaller than
+    # the chunk quantum here, so every stage is capacity-bounded)
+    cfg = base_store.cfg
+    stages = 2 + 2 * cfg.refine_rounds   # seed + self-join + 2 per round
+    assert st.padded_rows <= stages * store.capacity
 
 
 def test_mutable_datastore_append_changes_retrieval():

@@ -1,11 +1,10 @@
 """Sharding rules + HLO cost analyzer unit tests (single device)."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.hlo_cost import analyze, parse_module
-from repro.models.sharding import DEFAULT_RULES, logical_to_spec
+from repro.models.sharding import logical_to_spec
 
 
 class FakeMesh:

@@ -9,13 +9,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.data import DataConfig, TokenPipeline, mean_pool_embeddings, pack_documents, semantic_order
+from repro.data import DataConfig, TokenPipeline, pack_documents, semantic_order
 from repro.data.pipeline import SyntheticLMSource
 from repro.models import init_tree, model_schema
-from repro.train import OptimizerConfig, TrainConfig, TrainLoop, make_train_step
+from repro.train import OptimizerConfig, TrainConfig, make_train_step
 from repro.train import optimizer as opt_mod
 from repro.train.checkpoint import Checkpointer
-from repro.train.compression import dequantize_int8, ef_accumulate, quantize_int8
+from repro.train.compression import dequantize_int8, ef_accumulate
 from repro.train.fault import FaultPolicy, StragglerWatchdog, elastic_mesh
 
 
