@@ -1,0 +1,120 @@
+"""Offline build benchmark: the fused local join vs. the global-lexsort
+pair routing (the tentpole receipt for kernels/knn_join.py).
+
+Modes (``python benchmarks/bench_build.py --mode ...``):
+
+  * ``compare`` (default) — builds the same clustered corpus twice with
+    identical DescentConfig except ``backend``: the fused local join
+    (backend="auto": knn_join kernels, incidence inversion, chunked block
+    merge) against the retained lexsort oracle path (backend="ref":
+    ``compact_pairs``). Reports wall-clock, per-iteration time after the
+    compile-bearing first build, dist_evals (must NOT increase under the
+    fused path) and recall vs. brute force. Default n=20000 — the size
+    regime where the O(n*C^2) pair sort dominates the ref path.
+
+  * ``smoke`` — tiny fixed config for the CI benchmark lane (< ~1 min on
+    a CPU runner): one fused and one ref build on a 1024-point corpus,
+    emitting ``build_speedup``, ``fused_evals``/``lexsort_evals`` and
+    ``build_recall``, gated by benchmarks/check_gate.py (evals must not
+    increase under the fused path; recall floor), so the perf trajectory
+    tracks the offline build too (see benchmarks/README.md).
+
+All rows go through benchmarks.common.Sink into results/bench/build.json;
+the CI `bench-online` artifact uploads the whole results/bench directory,
+so the build rows ride in the existing artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Sink
+from repro.core import (
+    DescentConfig,
+    brute_force_knn,
+    build_knn_graph,
+    datasets,
+    recall_at_k,
+)
+
+
+def _build(x, k, cfg, key):
+    t0 = time.perf_counter()
+    dist, idx, st = build_knn_graph(x, k=k, cfg=cfg, key=key)
+    jax.block_until_ready(dist)
+    return idx, st, time.perf_counter() - t0
+
+
+def run_compare(n: int = 20000, d: int = 32, k: int = 20,
+                iters: int = 4, sink: Sink | None = None) -> list:
+    sink = sink or Sink("build")
+    x = datasets.clustered(jax.random.key(0), n, d, 32)
+    cfg = DescentConfig(k=k, rho=1.0, max_iters=iters, reorder=False,
+                        polish=1)
+    key = jax.random.key(1)
+    row = {"op": "build_compare", "n": n, "d": d, "k": k, "iters": iters}
+    fused_idx = None
+    for tag, backend in (("fused", "auto"), ("lexsort", "ref")):
+        c = dataclasses.replace(cfg, backend=backend)
+        idx, st, dt = _build(x, k, c, key)
+        if tag == "fused":
+            fused_idx = idx        # deterministic given key: reuse below
+        row[f"{tag}_s"] = round(dt, 2)
+        row[f"{tag}_evals"] = st.dist_evals
+    # recall sanity on a subsample of the truth (full brute force at 2e4
+    # is itself minutes-long on CPU; 2048 query rows suffice). The query
+    # rows are corpus rows, so fetch k+1 and drop the self column by id
+    # (exclude_self needs row-aligned queries).
+    q = x[:2048]
+    _, ti = brute_force_knn(x, q, k + 1, exclude_self=False)
+    keep = ti != jnp.arange(q.shape[0], dtype=ti.dtype)[:, None]
+    order = jnp.argsort(~keep, axis=1, stable=True)   # non-self first
+    ti = jnp.take_along_axis(ti, order, axis=1)[:, :k]
+    row["fused_recall_2048q"] = round(
+        float(recall_at_k(fused_idx[:2048], ti)), 4)
+    row["speedup"] = round(row["lexsort_s"] / max(row["fused_s"], 1e-9), 2)
+    sink.row(**row)
+    return sink.save()
+
+
+def run_smoke(n: int = 1024, d: int = 16, k: int = 10) -> list:
+    """CI lane: small seeded fused-vs-lexsort build (build.json)."""
+    sink = Sink("build")
+    x = datasets.clustered(jax.random.key(4), n, d, 8)
+    cfg = DescentConfig(k=k, rho=1.0, max_iters=12)
+    key = jax.random.key(2)
+    _, ti = brute_force_knn(x, x, k)
+    out = {}
+    for tag, backend in (("fused", "auto"), ("lexsort", "ref")):
+        c = dataclasses.replace(cfg, backend=backend)
+        idx, st, dt = _build(x, k, c, key)
+        out[tag] = (dt, st.dist_evals, float(recall_at_k(idx, ti)))
+    sink.row(op="smoke_build", n=n, k=k,
+             fused_s=round(out["fused"][0], 3),
+             lexsort_s=round(out["lexsort"][0], 3),
+             build_speedup=round(out["lexsort"][0] /
+                                 max(out["fused"][0], 1e-9), 2),
+             fused_evals=out["fused"][1],
+             lexsort_evals=out["lexsort"][1],
+             build_recall=round(out["fused"][2], 4))
+    return sink.save()
+
+
+def main(argv: list | None = None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mode", choices=("compare", "smoke"), default="compare")
+    p.add_argument("--n", type=int, default=None,
+                   help="override corpus size (compare mode)")
+    args = p.parse_args(argv)
+    if args.mode == "smoke":
+        return run_smoke()
+    kw = {} if args.n is None else {"n": args.n}
+    return run_compare(**kw)
+
+
+if __name__ == "__main__":
+    main()

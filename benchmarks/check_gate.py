@@ -1,16 +1,24 @@
-"""CI perf/quality gate for the online-update benchmark lane.
+"""CI perf/quality gate for the online-update + offline-build bench lanes.
 
-Reads the JSON written by ``bench_online.py --mode smoke`` and fails
-(exit 1) when any gated metric violates its pinned floor:
+Reads the JSON written by ``bench_online.py --mode smoke`` (and, when
+``--build`` is given, ``bench_build.py --mode smoke``) and fails (exit 1)
+when any gated metric violates its pinned floor:
 
   * ``insert_recall`` — combined-corpus recall@k after a streamed insert
     batch must stay at or above ``--floor`` (quality gate)
   * ``dangling_edges`` — a delete must leave zero edges pointing at
     tombstoned rows (correctness gate)
+  * ``fused_evals``/``lexsort_evals`` — the fused local join must not
+    spend more distance evaluations than the lexsort oracle path
+    (cost-model gate; tiny slack for sampling divergence)
+  * ``build_recall`` — the fused build must stay at or above
+    ``--build-floor`` on the smoke corpus (quality gate)
 
-See benchmarks/README.md for how the floor is pinned and when to move it.
+See benchmarks/README.md for how the floors are pinned and when to move
+them.
 
-Usage: python benchmarks/check_gate.py results/bench/online.json --floor 0.85
+Usage: python benchmarks/check_gate.py results/bench/online.json \
+           --floor 0.85 --build results/bench/build.json --build-floor 0.95
 """
 from __future__ import annotations
 
@@ -38,19 +46,58 @@ def check(rows: list, floor: float) -> list:
     return failures
 
 
+def check_build(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_build"]
+    if not smoke:
+        failures.append("no smoke_build row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("fused_evals", "lexsort_evals",
+                                   "build_recall") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(f"smoke_build row missing gated keys {missing}")
+            continue
+        fused = int(r["fused_evals"])
+        ref = int(r["lexsort_evals"])
+        # 2% slack: the fused and lexsort paths sample identically only
+        # on the first iteration; later iterations diverge benignly
+        if fused > ref * 1.02:
+            failures.append(
+                f"fused build spent {fused} dist evals vs lexsort {ref}"
+            )
+        recall = float(r["build_recall"])
+        if recall < floor:
+            failures.append(
+                f"build_recall {recall:.4f} below pinned floor {floor}"
+            )
+    return failures
+
+
 def main(argv: list | None = None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("results", help="path to online.json")
     p.add_argument("--floor", type=float, default=0.85,
                    help="pinned insert_recall floor")
+    p.add_argument("--build", default=None,
+                   help="path to build.json (enables the build gate)")
+    p.add_argument("--build-floor", type=float, default=0.95,
+                   help="pinned build_recall floor")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
     failures = check(rows, args.floor)
+    if args.build is not None:
+        with open(args.build) as f:
+            build_rows = json.load(f)
+        failures += check_build(build_rows, args.build_floor)
     for msg in failures:
         print(f"GATE FAIL: {msg}", file=sys.stderr)
     if not failures:
-        print(f"gate ok: insert_recall >= {args.floor}, no dangling edges")
+        print(f"gate ok: insert_recall >= {args.floor}, no dangling edges"
+              + ("" if args.build is None else
+                 f"; build_recall >= {args.build_floor}, fused evals <= ref"))
     return 1 if failures else 0
 
 

@@ -13,6 +13,7 @@ Paper artifact map:
     roofline    -> Fig. 3 (memory/compute crossover, v5e ridge)
     kernels     -> (ours) blocked-kernel tile model
     online      -> (ours) streaming insert/delete vs. full rebuild
+    build       -> (ours) fused local join vs. global-lexsort routing
 """
 from __future__ import annotations
 
@@ -27,6 +28,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        bench_build,
         bench_kernels,
         bench_online,
         bench_realworld,
@@ -53,6 +55,8 @@ def main(argv=None):
         "online": lambda: bench_online.run(
             n=2048 if quick else 8192, batch=128 if quick else 256,
             n_batches=2 if quick else 4),
+        "build": lambda: bench_build.run_compare(
+            n=4096 if quick else 20000),
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

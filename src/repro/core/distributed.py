@@ -19,7 +19,11 @@ ids are ``shard * n_local + row``. Three collective patterns:
     permutations so every shard can rewrite its neighbor ids.
 
 The per-shard inner work reuses the exact same selection/merge/blocked
-kernels as the single-chip path.
+kernels as the single-chip path. After the sampled iterations converge,
+``build_knn_graph_sharded`` runs the same terminal polish rounds as the
+single-chip build (``polish_sharded_round`` — exhaustive k*k
+neighbor-of-neighbor join with the fused ``knn_join_select`` reduction,
+neighbor lists and features fetched via the request-routed all_to_all).
 """
 from __future__ import annotations
 
@@ -31,7 +35,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import heap, selection
 from repro.core.heap import NeighborLists
-from repro.core.nn_descent import DescentConfig, compact_pairs, pair_block
+from repro.core.nn_descent import DescentConfig, invert_candidates, pair_block
+from repro.kernels import ops
 
 
 def _ring_perm(axis: str, size: int):
@@ -151,14 +156,15 @@ def fetch_rows_a2a(x_local, ids, *, axis: str, P_: int, n_local: int,
     loc = got - base
     ok_here = (loc >= 0) & (loc < n_local)
     rows = x_local[jnp.clip(loc, 0, n_local - 1)]
-    rows = jnp.where(ok_here[..., None], rows, 0.0)      # (P_, cap, d)
+    zero = jnp.zeros((), x_local.dtype)       # dtype-safe fill (works for
+    rows = jnp.where(ok_here[..., None], rows, zero)     # int rows too)
     back = jax.lax.all_to_all(rows[:, None], axis, split_axis=0,
                               concat_axis=0, tiled=False)[:, 0]
 
     in_bucket = (dest_s < P_) & (pos >= 0) & (pos < cap)
     fetched = back[jnp.clip(dest_s, 0, P_ - 1), jnp.clip(pos, 0, cap - 1)]
     out = jnp.zeros((m, d), x_local.dtype)
-    out = out.at[order].set(jnp.where(in_bucket[:, None], fetched, 0.0))
+    out = out.at[order].set(jnp.where(in_bucket[:, None], fetched, zero))
     ok = jnp.zeros((m,), bool).at[order].set(in_bucket)
     return out, ok & (ids >= 0)
 
@@ -288,7 +294,11 @@ def nn_descent_sharded_iteration(
     dd = jnp.concatenate([dd_nn, dd_nn, dd_no, dd_no], axis=1).reshape(-1)
     ok = jnp.concatenate([ok_nn, ok_nn, ok_no, ok_no], axis=1).reshape(-1)
 
-    # ---- route updates to receiver owners, merge locally
+    # ---- route updates to receiver owners, merge locally. The received
+    # (receiver, candidate, dist) rows go through the fused knn_join
+    # routing (invert incidences -> gather -> top-merge_k select) instead
+    # of a (receiver, dist) lexsort — the same kernel family as the
+    # single-chip local join.
     k_u, key = jax.random.split(key)
     payload = jnp.stack([a, b, _f32_bits(dd)], axis=1)
     cap_u = max(4 * cfg.merge_k * max(n_local // max(P_, 1), 1), 8)
@@ -296,15 +306,87 @@ def nn_descent_sharded_iteration(
     r = got[:, 0]
     valid_r = r >= 0
     rl = jnp.where(valid_r, r - base, -1)
-    cd, ci = compact_pairs(
-        rl, got[:, 1], jnp.where(valid_r, _bits_f32(got[:, 2]), jnp.inf),
-        n_local, cfg.merge_k,
+    dd_r = jnp.where(valid_r, _bits_f32(got[:, 2]), jnp.inf)
+    # per-receiver source buffer: 2x the expected load (cap_u routes
+    # ~4*merge_k rows per receiver on average). Position-biased on
+    # overflow like every bounded buffer here — hub-heavy meshes can
+    # raise DescentConfig.join_src to widen it (cf. the ROADMAP note on
+    # distance-prioritized drops).
+    s_cap = cfg.join_src or 8 * cfg.merge_k
+    rows_of, _ = invert_candidates(rl[:, None], n_local, s_cap)
+    ok_r = rows_of >= 0
+    safe_r = jnp.where(ok_r, rows_of, 0)
+    gd = jnp.where(ok_r, dd_r[safe_r], jnp.inf)
+    gi = jnp.where(ok_r, got[:, 1][safe_r], -1)
+    cd, ci = ops.knn_join_select(
+        gd, gi, jnp.full((n_local,), jnp.inf), c=cfg.merge_k,
     )
     nl, upd = heap.merge(nl, cd, ci, cand_new=True)
     n_evals = jnp.sum(ok_nn) + jnp.sum(ok_no)
     total_upd = jax.lax.psum(jnp.sum(upd), axis)
     total_ev = jax.lax.psum(n_evals, axis)
     return nl, total_upd, total_ev
+
+
+def polish_sharded_round(
+    x_local: jax.Array,       # (n_local, d) f32
+    x2_local: jax.Array,      # (n_local,)
+    nl: NeighborLists,        # local rows, GLOBAL neighbor ids
+    *,
+    axis: str,
+    P_: int,
+    merge_c: int,             # select width before the merge (<= k*k)
+):
+    """One sharded exhaustive local-join polish round (call under
+    shard_map) — the port of core/nn_descent.py polish_iteration: every
+    local row joins against ALL k*k of its neighbors-of-neighbors
+    (forward direction, unsampled). Neighbor LISTS of remote neighbors
+    and then the candidates' FEATURES are both fetched with the
+    request-routed all_to_all (``fetch_rows_a2a``); candidates whose
+    fetch overflowed its bucket are dropped (bounded-buffer sampling
+    noise). The k*k candidate row is reduced by the fused
+    ``knn_join_select`` kernel before the bounded merge, exactly like the
+    single-chip fused polish. Returns (nl, accepted, evals) — the counts
+    psum'd over the mesh."""
+    n_local, k = nl.idx.shape
+    p = jax.lax.axis_index(axis)
+    base = p * n_local
+    my_ids = base + jnp.arange(n_local, dtype=jnp.int32)
+
+    ni = nl.idx                                           # (n_local, k)
+    cap_l = max(4 * (n_local * k) // max(P_, 1), 16)
+    lists, ok_l = fetch_rows_a2a(
+        nl.idx, ni.reshape(-1), axis=axis, P_=P_, n_local=n_local,
+        cap=cap_l,
+    )                                                     # (n_local*k, k)
+    nb = lists.reshape(n_local, k * k)
+    src_ok = jnp.broadcast_to(
+        ((ni >= 0) & ok_l.reshape(n_local, k))[:, :, None], (n_local, k, k)
+    ).reshape(n_local, k * k)
+
+    cap_f = max(4 * (n_local * k * k) // max(P_, 1), 16)
+    feats, ok_f = fetch_rows_a2a(
+        x_local, nb.reshape(-1), axis=axis, P_=P_, n_local=n_local,
+        cap=cap_f,
+    )                                                     # (n_local*k*k, d)
+    ok = (
+        src_ok
+        & (nb >= 0)
+        & ok_f.reshape(n_local, k * k)
+        & (nb != my_ids[:, None])
+    )
+    feats = feats.reshape(n_local, k * k, -1)
+    dd = x2_local[:, None] + jnp.sum(feats * feats, axis=-1) - 2.0 * (
+        jnp.einsum("nd,ncd->nc", x_local, feats,
+                   preferred_element_type=jnp.float32)
+    )
+    dd = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+    evals = jnp.sum(ok)
+    cd, ci = ops.knn_join_select(
+        dd, jnp.where(ok, nb, -1), nl.dist[:, -1], c=merge_c,
+    )
+    nl, upd = heap.merge(nl, cd, ci)
+    return nl, jax.lax.psum(jnp.sum(upd), axis), jax.lax.psum(evals, axis)
 
 
 def _f32_bits(x):
@@ -469,4 +551,38 @@ def build_knn_graph_sharded(
         total_ev += int(ev)
         if int(upd) <= cfg.delta * n * k:
             break
-    return nl.dist, nl.idx, {"iters": it + 1, "dist_evals": total_ev}
+
+    # terminal polish rounds (quality parity with the single-chip build:
+    # see DescentConfig.polish / nn_descent.polish_iteration)
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=(
+            (P(axis, None), P(axis, None), P(axis, None)), P(), P(),
+        ),
+        check_vma=False,
+    )
+    def polish_fn(x_local, d_, i_, n_):
+        x_local = x_local.astype(jnp.float32)
+        x2_local = jnp.sum(x_local * x_local, axis=1)
+        nl_local = NeighborLists(d_, i_, n_ > 0)
+        nl2, upd, ev = polish_sharded_round(
+            x_local, x2_local, nl_local, axis=axis, P_=P_,
+            merge_c=min(6 * k, k * k),
+        )
+        return (nl2.dist, nl2.idx, nl2.new.astype(jnp.int8)), upd, ev
+
+    polish_updates = []
+    for _p in range(cfg.polish):
+        (d_, i_, nf), upd_p, ev_p = polish_fn(
+            x, nl.dist, nl.idx, nl.new.astype(jnp.int8)
+        )
+        nl = NeighborLists(d_, i_, nf > 0)
+        total_ev += int(ev_p)
+        polish_updates.append(int(upd_p))
+    return nl.dist, nl.idx, {
+        "iters": it + 1,
+        "dist_evals": total_ev,
+        "polish_updates": tuple(polish_updates),
+    }

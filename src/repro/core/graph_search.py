@@ -118,11 +118,17 @@ def graph_search(
             all_i = jnp.concatenate([pool_i, jnp.where(nb_ok, nbrs, -1)])
             all_d = jnp.concatenate([pool_d, nd])
             all_e = jnp.concatenate([pool_e, jnp.zeros((k,), bool)])
-            # dedup: mark later duplicates invalid (stable: pool first)
-            m = all_i.shape[0]
-            eq = all_i[:, None] == all_i[None, :]
-            earlier = jnp.tril(jnp.ones((m, m), bool), k=-1)
-            dup = (eq & earlier).any(-1) & (all_i >= 0)
+            # dedup: mark later duplicates invalid (stable: pool first).
+            # Sort-by-id adjacent-duplicate pass — O(m log m) instead of
+            # the O(m^2) eq&earlier matrix; the stable sort keeps the
+            # earliest (pool) occurrence first among equal ids, preserving
+            # the expanded flag exactly like the matrix form did.
+            sid = jnp.argsort(all_i, stable=True)
+            si = all_i[sid]
+            adj = jnp.concatenate(
+                [jnp.zeros((1,), bool), si[1:] == si[:-1]]
+            )
+            dup = jnp.zeros_like(adj).at[sid].set(adj) & (all_i >= 0)
             all_d = jnp.where(dup | (all_i < 0), _BIG, all_d)
             order = jnp.argsort(all_d)[:beam]
             return all_d[order], all_i[order], all_e[order]

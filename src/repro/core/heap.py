@@ -124,6 +124,41 @@ def _lookup_flags(nl: NeighborLists, ids: jax.Array) -> jax.Array:
     return (hit & nl.new[:, None, :]).any(-1)
 
 
+def merge_block(
+    nl: NeighborLists,
+    start: jax.Array,
+    cand_dist: jax.Array,
+    cand_idx: jax.Array,
+    *,
+    backend: str = "auto",
+) -> tuple[NeighborLists, jax.Array]:
+    """Chunked merge entry point: merge (R, c) candidates into the
+    CONTIGUOUS row block [start, start+R) — the fused local join's
+    receiver chunks (core/nn_descent.py local_join_fused). Receivers are
+    rows, so no id dedup/scatter is needed: one dynamic slice in, the
+    blocked merge kernel, one dynamic slice out. ``start`` must satisfy
+    start + R <= n (the fused driver pads the lists to a chunk multiple).
+    Returns (lists, (R,) accepted counts)."""
+    r, _ = cand_dist.shape
+    k = nl.dist.shape[1]
+    sub_d = jax.lax.dynamic_slice(nl.dist, (start, 0), (r, k))
+    sub_i = jax.lax.dynamic_slice(nl.idx, (start, 0), (r, k))
+    sub_n = jax.lax.dynamic_slice(nl.new, (start, 0), (r, k))
+    md, mi, upd = ops.knn_merge(
+        sub_d, sub_i, cand_dist, cand_idx, backend=backend
+    )
+    old_sub = NeighborLists(sub_d, sub_i, sub_n)
+    was_old = (mi[:, :, None] == sub_i[:, None, :]).any(-1)
+    flag = jnp.where(
+        was_old, _lookup_flags(old_sub, mi), True
+    ) & (mi >= 0)
+    return NeighborLists(
+        jax.lax.dynamic_update_slice(nl.dist, md, (start, 0)),
+        jax.lax.dynamic_update_slice(nl.idx, mi, (start, 0)),
+        jax.lax.dynamic_update_slice(nl.new, flag, (start, 0)),
+    ), upd
+
+
 def merge_rows(
     nl: NeighborLists,
     rows: jax.Array,

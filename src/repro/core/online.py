@@ -10,8 +10,10 @@ module adds that, built from the same primitives as the offline build:
     **localized NN-Descent**: a few friend-of-a-friend rounds that join
     each new point against the neighbors of its current neighbors
     (Dong et al.'s local-join restricted to the touched frontier), using
-    the offline build's ``compact_pairs`` machinery for the reverse-edge
-    repair. Convergence is fast for the same reason NN-Descent's is: a
+    the offline build's fused ``knn_join_select`` routing for the
+    reverse-edge repair (``_route_reverse`` — invert incidences, gather,
+    prefiltered top-c; no pair sort). Convergence is fast for the same
+    reason NN-Descent's is: a
     neighbor of a neighbor is likely a neighbor, so a handful of seed
     candidates is enough to pull in the true neighborhood.
 
@@ -63,7 +65,9 @@ from repro.core.nn_descent import (
     DescentStats,
     build_knn_graph,
     compact_pairs,
+    invert_candidates,
 )
+from repro.kernels import ops
 
 _FILL = 1e6   # coordinate fill for unallocated rows (cf. layout.pad_points)
 
@@ -87,6 +91,10 @@ class OnlineConfig:
     frontier_mult: int = 4    # insert reverse-frontier cap, in units of
                               # m*k (the 2-hop closure is truncated to
                               # min(cap, frontier_mult*m*k) rows)
+    route_src: int = 0        # fused reverse routing: per-receiver
+                              # source-incidence buffer (0 = 2*merge_mult*k;
+                              # overflow is dropped — bounded-buffer
+                              # sampling noise, cf. DescentConfig.join_src)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -251,6 +259,40 @@ def _frontier_slots(fids: jax.Array, recv: jax.Array) -> jax.Array:
     return jnp.where(hit, slot_c.astype(jnp.int32), -1)
 
 
+def _route_reverse(
+    nl: NeighborLists,
+    fids: jax.Array,       # (f,) frontier row-id buffer (ascending, -1 tail)
+    recv: jax.Array,       # (m, w) receiver ids per source row (-1 invalid)
+    dd: jax.Array,         # (m, w) pair distances (+inf on invalid)
+    src_ids: jax.Array,    # (m,) source (new point) row ids
+    c: int,                # candidate width handed to the frontier merge
+    s_cap: int,            # per-receiver source-incidence buffer
+    backend: str,
+    prefilter: bool,
+):
+    """Fused reverse-edge routing (the online face of the knn_join kernel
+    family): instead of pushing all (receiver, source, dist) pairs through
+    a (receiver, dist) lexsort (``compact_pairs``), each frontier receiver
+    inverts its incidences, gathers its incoming distances, and the
+    ``knn_join_select`` kernel reduces them to the best ``c`` under the
+    receiver's k-th-distance prefilter. Returns (f, c) candidate buffers
+    aligned with ``fids`` for heap.merge_rows."""
+    f = fids.shape[0]
+    m, w = recv.shape
+    lrecv = _frontier_slots(fids, recv.reshape(-1)).reshape(m, w)
+    rows_of, slot_of = invert_candidates(lrecv, f, s_cap)
+    ok = rows_of >= 0
+    lin = jnp.where(ok, rows_of * w + slot_of, 0)
+    gd = jnp.where(ok, dd.reshape(-1)[lin], jnp.inf)        # (f, s_cap)
+    gi = jnp.where(ok, src_ids[jnp.where(ok, rows_of, 0)], -1)
+    if prefilter:
+        safe = jnp.where(fids >= 0, fids, 0)
+        kth = jnp.where(fids >= 0, nl.dist[safe, -1], 0.0)
+    else:
+        kth = jnp.full((f,), jnp.inf)
+    return ops.knn_join_select(gd, gi, kth, c=c, backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # insert
 # ---------------------------------------------------------------------------
@@ -303,11 +345,13 @@ def _insert_stitch(
     # Receivers all sit on the 1-hop closure of the new rows, which fits
     # exactly in m*(k+1) frontier slots — no truncation.
     f_seed = _ceil_chunk(min(cap, m * (k + 1)), chunk, cap)
+    s_cap = cfg.route_src or 2 * c
     fids, _ = expand_frontier(nl.idx, ids, hops=1, capacity=f_seed)
-    recv = jnp.where(seed_ok, seed_i, -1).reshape(-1)
-    src = jnp.broadcast_to(ids[:, None], (m, k)).reshape(-1)
-    lrecv = _frontier_slots(fids, recv)
-    cd, ci = compact_pairs(lrecv, src, seed_d.reshape(-1), f_seed, c)
+    cd, ci = _route_reverse(
+        nl, fids, jnp.where(seed_ok, seed_i, -1),
+        jnp.where(seed_ok, seed_d, jnp.inf), ids, c, s_cap,
+        cfg.backend, prefilter=False,
+    )
     nl, upd0 = heap.merge_rows(nl, fids, cd, ci, backend=cfg.backend)
     upds.append(jnp.sum(upd0))
     f_rows += jnp.sum(fids >= 0, dtype=jnp.int32)
@@ -365,13 +409,12 @@ def _insert_stitch(
         )
 
         # reverse: the new point is a candidate for every touched row that
-        # it beats (receiver-side prefilter, as in nn_descent_iteration)
-        kth = nl.dist[jnp.clip(cand, 0, cap - 1), -1]
-        rok = ok & (dd < kth)
-        recv = jnp.where(rok, cand, -1).reshape(-1)
-        src = jnp.broadcast_to(ids[:, None], cand.shape).reshape(-1)
-        lrecv = _frontier_slots(fids_r, recv)
-        cd, ci = compact_pairs(lrecv, src, dd.reshape(-1), f_rev, c)
+        # it beats (receiver-side prefilter, applied inside the fused
+        # select kernel — as in nn_descent's local_join_fused)
+        cd, ci = _route_reverse(
+            nl, fids_r, jnp.where(ok, cand, -1), dd, ids, c, s_cap,
+            cfg.backend, prefilter=True,
+        )
         nl, upd_r = heap.merge_rows(nl, fids_r, cd, ci, backend=cfg.backend)
         upds.append(jnp.sum(upd_f) + jnp.sum(upd_r))
         # count rows actually on the compacted buffer (the closure may be
@@ -546,7 +589,11 @@ def _reconnect_orphans(
     evals = jnp.sum(ok2, dtype=jnp.int32)
     anc = jnp.broadcast_to(anchors[None, :], (cap, k))
     nl, upd2 = heap.merge(nl, dd2, jnp.where(ok2, anc, -1))
-    # reverse edges: the anchors adopt the orphan so it is reachable
+    # reverse edges: the anchors adopt the orphan so it is reachable.
+    # This cold path keeps compact_pairs (exact by-distance truncation):
+    # every orphan targets the SAME k anchors, so the per-receiver
+    # in-degree is unbounded and a bounded source buffer could drop the
+    # closest orphans — the fused routing's contract doesn't fit here.
     recv = jnp.where(ok2, anc, -1).reshape(-1)
     src = jnp.broadcast_to(rows[:, None], (cap, k)).reshape(-1)
     cd, ci = compact_pairs(recv, src, dd2.reshape(-1), cap, merge_c)

@@ -1,10 +1,16 @@
 # The paper's compute hot-spots as Pallas TPU kernels:
 #   l2_blocked      — §3.3 blocked distance evaluations (MXU tiling)
+#   knn_join        — §3.3+§2 fused local join (pair tensor + per-receiver
+#                     prefilter/top-C selection, no global pair sort)
 #   knn_merge       — §2 bounded neighbor-list update
 #   flash_attention — LM-stack attention hotspot (blocked online softmax)
 # ops.py = jit'd dispatch wrappers, ref.py = pure-jnp oracles.
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.knn_join import (
+    knn_join_dists_blocked,
+    knn_join_select_blocked,
+)
 from repro.kernels.knn_merge import (
     knn_compact_rows_blocked,
     knn_merge_blocked,
@@ -17,6 +23,8 @@ __all__ = [
     "ref",
     "flash_attention",
     "knn_compact_rows_blocked",
+    "knn_join_dists_blocked",
+    "knn_join_select_blocked",
     "knn_merge_blocked",
     "knn_merge_rows_blocked",
     "pairwise_sq_l2_blocked",

@@ -1,0 +1,192 @@
+"""Fused local-join kernel family (paper §3.3 blocked evaluation fused with
+§2 update routing) — the build hot path without the global pair sort.
+
+NN-Descent's local join evaluates all new x new / new x old candidate pairs
+per node and routes every evaluated pair to BOTH endpoints. The seed
+implementation flattened the pairs into an O(n*C^2) (receiver, candidate,
+dist) list and pushed it through a global ``jnp.lexsort`` before the merge
+— the sort and its HBM round-trips dominated iteration time and dwarfed
+the distance einsum (see benchmarks/bench_build.py).
+
+The fused form keeps everything receiver-local, in two blocked kernels:
+
+  * ``knn_join_dists_blocked`` — for a block of rows, the full candidate
+    pair-distance tensor (C x C per row) is computed in VMEM via the
+    norm-expansion MXU form, with the join validity mask (at least one
+    endpoint "new", distinct slots, distinct ids, valid ids) folded into
+    the epilogue: invalid pairs come out +inf, and the per-row count of
+    valid unordered pairs (the paper's dist_evals counter) is emitted
+    alongside.
+  * ``knn_join_select_blocked`` — for a block of RECEIVER rows, the
+    gathered incoming pair distances are prefiltered against the
+    receiver's current k-th distance and reduced to the best ``c``
+    (dist, idx) pairs by an in-kernel partial top-C (the same
+    min-extraction selection network as kernels/knn_merge.py — VPU-native,
+    no gathers). Output is O(rows * c) instead of O(rows * pairs).
+
+Between the two kernels sits a single *incidence inversion* (one stable
+argsort of the n*C candidate ids — ~30x fewer elements than the pair
+list): each receiver learns which (row, slot) positions list it, gathers
+its incoming distance rows from the pair tensor, and the select kernel
+reduces them. Receivers are then contiguous rows, so the final merge is a
+chunked block merge (core/heap.py ``merge_block``) with no sort at all.
+The driver lives in core/nn_descent.py; ref.py holds the pure-jnp oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TB = 128    # rows per block, pair-distance kernel
+DEFAULT_TR = 256    # rows per block, select kernel
+_BIG = float(jnp.finfo(jnp.float32).max)
+
+
+def _join_dists_kernel(xg_ref, x2_ref, ids_ref, od_ref, ev_ref, *, cn: int):
+    """Pair-distance tensor for one row block: (TB, C, dp) gathered
+    candidate features -> (TB, C, C) masked squared-l2 distances."""
+    xg = xg_ref[...].astype(jnp.float32)     # (TB, C, dp)
+    x2 = x2_ref[...]                          # (TB, C)
+    ids = ids_ref[...]                        # (TB, C), -1 = invalid
+
+    # cross terms on the MXU (batched over the row block), fp32 accumulation
+    ab = jax.lax.dot_general(
+        xg, xg, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                         # (TB, C, C)
+    dd = x2[:, :, None] + x2[:, None, :] - 2.0 * ab
+
+    c = ids.shape[1]
+    slot_s = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)[None]
+    slot_t = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)[None]
+    # join validity: at least one endpoint from the "new" pool (old x old
+    # pairs are never evaluated — NN-Descent incremental search), distinct
+    # slots, both slots occupied, distinct node ids
+    ok = (slot_s < cn) | (slot_t < cn)
+    ok &= slot_s != slot_t
+    ok &= (ids[:, :, None] >= 0) & (ids[:, None, :] >= 0)
+    ok &= ids[:, :, None] != ids[:, None, :]
+
+    od_ref[...] = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+    # each unordered pair appears at (s, t) and (t, s)
+    ev_ref[...] = (
+        jnp.sum(ok.astype(jnp.int32), axis=(1, 2)) // 2
+    )[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("cn", "tb", "interpret"))
+def knn_join_dists_blocked(
+    xg: jax.Array,     # (n, C, dp) gathered candidate features
+    x2g: jax.Array,    # (n, C) cached squared norms (0 on invalid slots)
+    ids: jax.Array,    # (n, C) candidate node ids, -1 = invalid slot
+    *,
+    cn: int,           # width of the "new" candidate prefix
+    tb: int = DEFAULT_TB,
+    interpret: bool = False,
+):
+    """Blocked local-join pair distances.
+
+    Returns (dists (n, C, C) f32 with +inf on invalid pairs, evals (n,)
+    int32 — the per-row count of valid unordered pairs).
+    """
+    n, c, dp = xg.shape
+    npad = ((n + tb - 1) // tb) * tb
+    pad = npad - n
+    xg = jnp.pad(xg, ((0, pad), (0, 0), (0, 0)))
+    x2g = jnp.pad(x2g, ((0, pad), (0, 0)))
+    ids = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+
+    kern = functools.partial(_join_dists_kernel, cn=cn)
+    od, ev = pl.pallas_call(
+        kern,
+        grid=(npad // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, c, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, c, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, c, c), jnp.float32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xg, x2g, ids)
+    return od[:n], ev[:n, 0]
+
+
+def _join_select_kernel(gd_ref, gi_ref, kth_ref, od_ref, oi_ref, *, c: int):
+    """Receiver-side prefilter + partial top-c selection for one block of
+    receiver rows. Same iota+select min-extraction network as
+    kernels/knn_merge.py — every step stays VPU-native."""
+    gd = gd_ref[...]                          # (TR, W)
+    gi = gi_ref[...]                          # (TR, W)
+    kth = kth_ref[...]                        # (TR, 1)
+
+    # receiver-side prefilter: only pairs beating the receiver's current
+    # k-th distance can change its list (paper §2 "update" short-circuit)
+    pool = jnp.where((gi >= 0) & (gd < kth), gd, _BIG)
+    lane = jax.lax.broadcasted_iota(jnp.int32, pool.shape, 1)
+    out_d = []
+    out_i = []
+    for _t in range(c):
+        amin = jnp.argmin(pool, axis=1)                     # (TR,)
+        onehot = lane == amin[:, None]
+        dmin = jnp.min(pool, axis=1)
+        imin = jnp.sum(jnp.where(onehot, gi, 0), axis=1)
+        out_d.append(jnp.where(dmin < _BIG, dmin, jnp.inf))
+        out_i.append(jnp.where(dmin < _BIG, imin, -1))
+        pool = jnp.where(onehot, _BIG, pool)
+    od_ref[...] = jnp.stack(out_d, axis=1)
+    oi_ref[...] = jnp.stack(out_i, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "tr", "interpret"))
+def knn_join_select_blocked(
+    gd: jax.Array,     # (n, W) gathered incoming pair distances (+inf pad)
+    gi: jax.Array,     # (n, W) their candidate ids (-1 pad)
+    kth: jax.Array,    # (n,) receiver k-th distance (prefilter threshold)
+    *,
+    c: int,            # output width (merge buffer size)
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+):
+    """Per-receiver best-c selection with the k-th-distance prefilter.
+
+    Returns (dist (n, c) ascending with +inf fill, idx (n, c) with -1
+    fill). Ties keep the lowest input position (stable, like the oracle).
+    """
+    n, w = gd.shape
+    npad = ((n + tr - 1) // tr) * tr
+    pad = npad - n
+    gd = jnp.pad(gd, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    gi = jnp.pad(gi, ((0, pad), (0, 0)), constant_values=-1)
+    kth = jnp.pad(kth, (0, pad))
+
+    kern = functools.partial(_join_select_kernel, c=c)
+    od, oi = pl.pallas_call(
+        kern,
+        grid=(npad // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, w), lambda i: (i, 0)),
+            pl.BlockSpec((tr, w), lambda i: (i, 0)),
+            pl.BlockSpec((tr, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+            pl.BlockSpec((tr, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, c), jnp.float32),
+            jax.ShapeDtypeStruct((npad, c), jnp.int32),
+        ],
+        interpret=interpret,
+    )(gd, gi, kth[:, None])
+    return od[:n], oi[:n]

@@ -13,6 +13,10 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.knn_join import (
+    knn_join_dists_blocked,
+    knn_join_select_blocked,
+)
 from repro.kernels.knn_merge import (
     knn_compact_blocked,
     knn_compact_rows_blocked,
@@ -43,6 +47,43 @@ def pairwise_sq_l2(
     if backend == "interpret":
         return pairwise_sq_l2_blocked(a, b, tm=tm, tn=tn, tk=tk, interpret=True)
     return ref.pairwise_sq_l2(a, b)
+
+
+def knn_join_dists(
+    xg: jax.Array,
+    x2g: jax.Array,
+    ids: jax.Array,
+    *,
+    cn: int,
+    backend: str = "auto",
+):
+    """Fused local-join pair distances: (n, C, dp) gathered candidate
+    features -> ((n, C, C) masked sq-l2 tensor, (n,) valid-pair counts)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_join_dists_blocked(xg, x2g, ids, cn=cn)
+    if backend == "interpret":
+        return knn_join_dists_blocked(xg, x2g, ids, cn=cn, interpret=True)
+    return ref.knn_join_dists(xg, x2g, ids, cn)
+
+
+def knn_join_select(
+    gd: jax.Array,
+    gi: jax.Array,
+    kth: jax.Array,
+    *,
+    c: int,
+    backend: str = "auto",
+):
+    """Receiver-side prefilter + best-c selection of gathered join pairs."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_join_select_blocked(gd, gi, kth, c=c)
+    if backend == "interpret":
+        return knn_join_select_blocked(gd, gi, kth, c=c, interpret=True)
+    return ref.knn_join_select(gd, gi, kth, c)
 
 
 def knn_merge(

@@ -42,6 +42,65 @@ def pairwise_sq_l2(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Fused local join (paper §3.3 + §2 fused) — oracles for kernels/knn_join.py
+# ---------------------------------------------------------------------------
+
+_BIG = float(jnp.finfo(jnp.float32).max)
+
+
+def knn_join_dists(
+    xg: jax.Array,     # (n, C, dp) gathered candidate features
+    x2g: jax.Array,    # (n, C) cached squared norms (0 on invalid slots)
+    ids: jax.Array,    # (n, C) candidate node ids, -1 = invalid slot
+    cn: int,           # width of the "new" candidate prefix
+) -> tuple[jax.Array, jax.Array]:
+    """Local-join pair-distance tensor: per row, squared-l2 between every
+    candidate pair with at least one "new" endpoint, distinct slots and
+    distinct ids; invalid pairs are +inf. Returns (dists (n, C, C),
+    evals (n,) int32 — valid unordered pairs). Oracle for
+    knn_join_dists_blocked."""
+    c = ids.shape[1]
+    ab = jnp.einsum(
+        "ncd,ned->nce", xg.astype(jnp.float32), xg.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    dd = x2g[:, :, None] + x2g[:, None, :] - 2.0 * ab
+    slot = jnp.arange(c)
+    ok = (slot[:, None] < cn) | (slot[None, :] < cn)
+    ok &= slot[:, None] != slot[None, :]
+    ok = ok[None]
+    ok &= (ids[:, :, None] >= 0) & (ids[:, None, :] >= 0)
+    ok &= ids[:, :, None] != ids[:, None, :]
+    out = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+    evals = jnp.sum(ok.astype(jnp.int32), axis=(1, 2)) // 2
+    return out, evals
+
+
+def knn_join_select(
+    gd: jax.Array,     # (n, W) gathered incoming pair distances (+inf pad)
+    gi: jax.Array,     # (n, W) their candidate ids (-1 pad)
+    kth: jax.Array,    # (n,) receiver k-th distance (prefilter threshold)
+    c: int,            # output width (merge buffer size)
+) -> tuple[jax.Array, jax.Array]:
+    """Receiver-side prefilter + best-c selection: entries with
+    ``gd < kth`` survive; the c smallest (stable on ties) come back as
+    (dist (n, c) ascending, idx (n, c)) with (+inf, -1) fill. Oracle for
+    knn_join_select_blocked."""
+    w = gd.shape[1]
+    pool = jnp.where((gi >= 0) & (gd < kth[:, None]), gd, _BIG)
+    if c > w:
+        pool = jnp.pad(pool, ((0, 0), (0, c - w)), constant_values=_BIG)
+        gi = jnp.pad(gi, ((0, 0), (0, c - w)), constant_values=-1)
+    neg, pos = jax.lax.top_k(-pool, c)
+    d = -neg
+    i = jnp.take_along_axis(gi, pos, axis=1)
+    return (
+        jnp.where(d < _BIG, d, jnp.inf),
+        jnp.where(d < _BIG, i, -1),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Bounded top-k neighbor-list merge (paper §2 "calculate and update")
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,229 @@
+"""Fused local join (kernels/knn_join.py + core/nn_descent.py
+local_join_fused): kernel-vs-oracle parity, end-to-end parity against the
+retained compact_pairs+heap.merge lexsort path, and the quality pin on
+the seeded 512-pt regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datasets, heap
+from repro.core.layout import pad_features
+from repro.core.nn_descent import (
+    DescentConfig,
+    build_knn_graph,
+    compact_pairs,
+    invert_candidates,
+    local_join_fused,
+    nn_descent_iteration,
+    pair_block,
+    polish_iteration,
+)
+from repro.core.recall import brute_force_knn, recall_at_k
+from repro.kernels import ref
+from repro.kernels.knn_join import (
+    knn_join_dists_blocked,
+    knn_join_select_blocked,
+)
+
+
+def _assert_lists_match(got_d, got_i, want_d, want_i, atol=1e-4):
+    """Neighbor lists equal: idx exact, dist within fp32 tolerance."""
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    gd = np.where(np.isinf(got_d), 0.0, np.asarray(got_d))
+    wd = np.where(np.isinf(want_d), 0.0, np.asarray(want_d))
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,cn,dp,tb", [
+    (37, 12, 5, 16, 16),     # n not a multiple of the row block
+    (64, 8, 8, 32, 32),      # all candidates "new"
+    (10, 6, 0, 8, 4),        # all candidates "old" -> no valid pairs
+])
+def test_join_dists_kernel_matches_oracle(n, c, cn, dp, tb):
+    rng = np.random.RandomState(n + c)
+    xg = jnp.asarray(rng.randn(n, c, dp).astype(np.float32))
+    ids = jnp.asarray(rng.randint(-1, 4 * n, size=(n, c)).astype(np.int32))
+    ids = ids.at[3].set(-1)                      # an all-invalid row
+    x2g = jnp.where(ids >= 0, jnp.sum(xg * xg, axis=-1), 0.0)
+    rd, rev = ref.knn_join_dists(xg, x2g, ids, cn)
+    kd, kev = knn_join_dists_blocked(xg, x2g, ids, cn=cn, tb=tb,
+                                     interpret=True)
+    np.testing.assert_array_equal(np.isinf(rd), np.isinf(kd))
+    np.testing.assert_allclose(np.where(np.isinf(rd), 0.0, rd),
+                               np.where(np.isinf(kd), 0.0, kd),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(rev, kev)
+    assert int(rev[3]) == 0
+    if cn == 0:
+        assert int(rev.sum()) == 0               # old x old never evaluated
+
+
+@pytest.mark.parametrize("n,w,c,tr", [
+    (37, 23, 9, 16),         # n not a multiple of the row block
+    (16, 5, 12, 8),          # c > W (padded selection)
+    (50, 40, 40, 32),        # c == W
+])
+def test_join_select_kernel_matches_oracle(n, w, c, tr):
+    rng = np.random.RandomState(n + w)
+    gd = jnp.asarray(rng.rand(n, w).astype(np.float32))
+    gd = jnp.where(jnp.asarray(rng.rand(n, w) < 0.2), jnp.inf, gd)
+    gi = jnp.asarray(rng.randint(-1, 99, size=(n, w)).astype(np.int32))
+    kth = jnp.asarray(rng.rand(n).astype(np.float32) * 1.5)
+    sd, si = ref.knn_join_select(gd, gi, kth, c)
+    bd, bi = knn_join_select_blocked(gd, gi, kth, c=c, tr=tr,
+                                     interpret=True)
+    np.testing.assert_array_equal(si, bi)
+    np.testing.assert_array_equal(np.isinf(sd), np.isinf(bd))
+    np.testing.assert_allclose(np.where(np.isinf(sd), 0.0, sd),
+                               np.where(np.isinf(bd), 0.0, bd), rtol=1e-6)
+
+
+def test_join_select_prefilter_strict():
+    """Only candidates strictly better than kth survive (ties rejected,
+    matching the lexsort path's `dd < kth` prefilter)."""
+    gd = jnp.asarray([[0.5, 0.3, 0.7]], jnp.float32)
+    gi = jnp.asarray([[1, 2, 3]], jnp.int32)
+    kth = jnp.asarray([0.5], jnp.float32)
+    sd, si = ref.knn_join_select(gd, gi, kth, 3)
+    assert np.asarray(si).tolist() == [[2, -1, -1]]
+    bd, bi = knn_join_select_blocked(gd, gi, kth, c=3, tr=8, interpret=True)
+    np.testing.assert_array_equal(si, bi)
+
+
+def test_invert_candidates_roundtrip():
+    """Every (row, slot) incidence lands in its candidate's buffer, in
+    (row, slot) order, with -1 padding after."""
+    cands = jnp.asarray([[2, 0, -1], [2, 2, 1], [0, -1, 0]], jnp.int32)
+    rows_of, slot_of = invert_candidates(cands, 3, 4)
+    r = np.asarray(rows_of)
+    s = np.asarray(slot_of)
+    assert r[0].tolist() == [0, 2, 2, -1] and s[0].tolist() == [1, 0, 2, -1]
+    assert r[1].tolist() == [1, -1, -1, -1] and s[1].tolist() == [2, -1, -1, -1]
+    assert r[2].tolist() == [0, 1, 1, -1] and s[2].tolist() == [0, 0, 1, -1]
+    # overflow keeps the smallest (row, slot) incidences
+    rows_of, slot_of = invert_candidates(cands, 3, 2)
+    assert np.asarray(rows_of)[0].tolist() == [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# fused local join vs the retained lexsort path (compact_pairs + merge)
+# ---------------------------------------------------------------------------
+
+def _ref_local_join(x, x2, nl, cn, co, cfg):
+    """The seed pipeline (nn_descent_iteration's backend="ref" body),
+    replicated as the oracle: flatten pairs -> prefilter -> global
+    (receiver, dist) lexsort -> dense merge."""
+    n, k = nl.idx.shape
+    vn = cn >= 0
+    vo = co >= 0
+    xg_n = x[jnp.where(vn, cn, 0)]
+    xg_o = x[jnp.where(vo, co, 0)]
+    x2_n = jnp.where(vn, x2[jnp.where(vn, cn, 0)], 0.0)
+    x2_o = jnp.where(vo, x2[jnp.where(vo, co, 0)], 0.0)
+    d_nn = pair_block(xg_n, x2_n, xg_n, x2_n)
+    d_no = pair_block(xg_n, x2_n, xg_o, x2_o)
+    cn_b, co_b = cn.shape[1], co.shape[1]
+    iu = jnp.triu_indices(cn_b, k=1)
+    a_nn, b_nn = cn[:, iu[0]], cn[:, iu[1]]
+    dd_nn = d_nn[:, iu[0], iu[1]]
+    ok_nn = vn[:, iu[0]] & vn[:, iu[1]] & (a_nn != b_nn)
+    a_no = jnp.broadcast_to(cn[:, :, None], (n, cn_b, co_b)).reshape(n, -1)
+    b_no = jnp.broadcast_to(co[:, None, :], (n, cn_b, co_b)).reshape(n, -1)
+    dd_no = d_no.reshape(n, -1)
+    ok_no = (
+        jnp.broadcast_to(vn[:, :, None], (n, cn_b, co_b)).reshape(n, -1)
+        & jnp.broadcast_to(vo[:, None, :], (n, cn_b, co_b)).reshape(n, -1)
+        & (a_no != b_no)
+    )
+    a = jnp.concatenate([a_nn, b_nn, a_no, b_no], axis=1).reshape(-1)
+    b = jnp.concatenate([b_nn, a_nn, b_no, a_no], axis=1).reshape(-1)
+    dd = jnp.concatenate([dd_nn, dd_nn, dd_no, dd_no], axis=1).reshape(-1)
+    ok = jnp.concatenate([ok_nn, ok_nn, ok_no, ok_no], axis=1).reshape(-1)
+    kth = nl.dist[:, -1]
+    ok &= dd < kth[jnp.where(ok, a, 0)]
+    recv = jnp.where(ok, a, -1)
+    cand_d, cand_i = compact_pairs(recv, b, dd, n, cfg.merge_k)
+    nl, upd = heap.merge(nl, cand_d, cand_i, cand_new=True)
+    return nl, jnp.sum(upd), jnp.sum(ok_nn) + jnp.sum(ok_no)
+
+
+@pytest.mark.parametrize("n,k,chunk", [
+    (150, 8, 64),     # n not a multiple of the receiver chunk
+    (64, 6, 64),      # single exact chunk
+    (97, 5, 256),     # chunk larger than n
+])
+def test_fused_join_matches_lexsort_path(n, k, chunk):
+    """idx exact / dist within fp32 tol / upd+evals exact vs. the
+    compact_pairs oracle, including all-invalid candidate rows and
+    C < merge_k."""
+    rng = np.random.RandomState(n)
+    x = jnp.asarray(rng.randn(n, 24).astype(np.float32))
+    xp = pad_features(x)
+    x2 = jnp.sum(xp * xp, axis=1)
+    nl = heap.init_random_with_dists(jax.random.key(1), xp, k)
+    c_half = k  # C = 2k < merge_k = 3k
+    cn = rng.randint(-1, n, size=(n, c_half)).astype(np.int32)
+    co = rng.randint(-1, n, size=(n, c_half)).astype(np.int32)
+    cn[5] = -1
+    co[5] = -1                                  # all-invalid candidate row
+    co[6] = -1                                  # new-only row
+    cn, co = jnp.asarray(cn), jnp.asarray(co)
+    cfg = DescentConfig(k=k, join_chunk=chunk, join_src=4 * 2 * c_half)
+    got_nl, got_upd, got_ev = jax.jit(
+        local_join_fused, static_argnames=("cfg",)
+    )(xp, x2, nl, cn, co, cfg)
+    want_nl, want_upd, want_ev = _ref_local_join(xp, x2, nl, cn, co, cfg)
+    _assert_lists_match(got_nl.dist, got_nl.idx, want_nl.dist, want_nl.idx)
+    assert int(got_upd) == int(want_upd)
+    assert int(got_ev) == int(want_ev)
+
+
+def test_fused_iteration_matches_ref_backend():
+    """One full nn_descent_iteration, fused vs backend='ref', same key:
+    identical selection -> identical lists/counts."""
+    x = datasets.clustered(jax.random.key(0), 300, 16, 4)
+    xp = pad_features(x.astype(jnp.float32))
+    x2 = jnp.sum(xp * xp, axis=1)
+    nl0 = heap.init_random_with_dists(jax.random.key(2), xp, 8)
+    key = jax.random.key(3)
+    cfg = DescentConfig(k=8, rho=1.0, join_src=64)
+    nlf, uf, ef = nn_descent_iteration(key, xp, x2, nl0, cfg)
+    nlr, ur, er = nn_descent_iteration(
+        key, xp, x2, nl0, dataclasses.replace(cfg, backend="ref"))
+    _assert_lists_match(nlf.dist, nlf.idx, nlr.dist, nlr.idx)
+    assert int(uf) == int(ur)
+    assert int(ef) == int(er)
+
+
+def test_fused_polish_matches_ref_backend():
+    """polish_iteration fused-select vs direct full-width merge."""
+    x = datasets.gaussian(jax.random.key(4), 256, 16)
+    xp = pad_features(x.astype(jnp.float32))
+    x2 = jnp.sum(xp * xp, axis=1)
+    nl = heap.init_random_with_dists(jax.random.key(6), xp, 6)
+    nlf, uf, ef = polish_iteration(xp, x2, nl, "auto")
+    nlr, ur, er = polish_iteration(xp, x2, nl, "ref")
+    _assert_lists_match(nlf.dist, nlf.idx, nlr.dist, nlr.idx)
+    assert int(ef) == int(er)
+    assert int(uf) == int(ur)
+
+
+def test_fused_build_deterministic_and_seeded_recall():
+    """Acceptance pin: the fused build path reaches recall >= 0.993 on
+    the seeded 512-pt regression (the lexsort path's measured value),
+    and stays deterministic given the key."""
+    x = datasets.clustered(jax.random.key(11), 512, 16, 8)
+    _, ti = brute_force_knn(x, x, 10)
+    cfg = DescentConfig(k=10, rho=1.0, max_iters=15)
+    _, idx, _ = build_knn_graph(x, k=10, cfg=cfg, key=jax.random.key(5))
+    r = recall_at_k(idx, ti)
+    assert r >= 0.993, r
+    _, idx2, _ = build_knn_graph(x, k=10, cfg=cfg, key=jax.random.key(5))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))

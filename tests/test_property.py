@@ -104,6 +104,47 @@ def test_selection_buffers_valid(n, k, rho_k, seed):
         assert ((b >= -1) & (b < n)).all()
 
 
+@given(
+    n=st.integers(1, 24), w=st.integers(1, 40), c=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+@_settings
+def test_join_select_invariants(n, w, c, seed):
+    """The fused local join's in-kernel top-C selection: output is sorted
+    ascending, exactly the c best prefiltered entries (set-equal to a
+    numpy reference), padded with (inf, -1), and the blocked kernel
+    (interpret) agrees with the oracle bit-for-bit on indices."""
+    rng = np.random.RandomState(seed)
+    gd = rng.rand(n, w).astype(np.float32)
+    gd[rng.rand(n, w) < 0.15] = np.inf
+    gi = rng.randint(-1, 200, size=(n, w)).astype(np.int32)
+    kth = (rng.rand(n).astype(np.float32) * 1.5)
+    sd, si = ref.knn_join_select(
+        jnp.asarray(gd), jnp.asarray(gi), jnp.asarray(kth), c)
+    from repro.kernels.knn_join import knn_join_select_blocked
+    bd, bi = knn_join_select_blocked(
+        jnp.asarray(gd), jnp.asarray(gi), jnp.asarray(kth), c=c, tr=8,
+        interpret=True)
+    assert np.array_equal(np.asarray(si), np.asarray(bi))
+    sd_np = np.asarray(sd)
+    si_np = np.asarray(si)
+    fin = np.isfinite(sd_np)
+    # sorted ascending, padding at the tail (finite pad value: inf-inf
+    # diffs are nan and would poison the comparison)
+    padded = np.where(fin, sd_np, np.float32(3.0e38))
+    assert (np.diff(padded, axis=1) >= 0).all()
+    assert (si_np[~fin] == -1).all()
+    for r in range(n):
+        ok = (gi[r] >= 0) & (gd[r] < kth[r])
+        want = np.sort(gd[r][ok])[:c]
+        got = sd_np[r][fin[r]]
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        # the returned ids carry the selected entries' distances
+        for j in np.nonzero(fin[r])[0]:
+            assert (gd[r][gi[r] == si_np[r][j]] == sd_np[r][j]).any()
+
+
 @given(seed=st.integers(0, 999), scale=st.floats(1e-3, 1e3),
        nelem=st.integers(1, 2000))
 @_settings
