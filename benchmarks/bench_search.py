@@ -1,0 +1,177 @@
+"""Serving search benchmark: the fused batched multi-expansion beam
+search vs. the retained greedy ref loop (the tentpole receipt for
+kernels/knn_search.py + core/graph_search.py).
+
+Modes (``python benchmarks/bench_search.py --mode ...``):
+
+  * ``compare`` (default) — the acceptance receipt: builds one clustered
+    corpus graph (default n=1e5, d=64), then answers the same q=4096
+    query batch with the ref loop (``SearchConfig(backend="ref")`` — one
+    node expanded per round, per-round argsorts) and the fused batched
+    path (blocked distance tile + partial top-C select + sort-free pool
+    merge, ``expand`` nodes per round) at the SAME expansion budget.
+    Reports QPS for both, recall of both against brute force on a query
+    subsample (the gate: fused recall within 0.005 of ref), and the
+    paper §3.2 reordering claim measured on the SERVING gather path:
+    ``locality_stats`` (in-block fraction / mean gather spread) before
+    vs. after ``greedy_reorder``, plus fused QPS on the reordered graph.
+
+  * ``smoke`` — tiny fixed config for the CI benchmark lane (< ~2 min on
+    a CPU runner): one build, ref + fused search, emitting
+    ``search_recall`` / ``ref_recall`` / ``fused_qps`` / ``ref_qps``,
+    gated by benchmarks/check_gate.py (pinned search-recall floor and
+    fused QPS >= ref QPS).
+
+All rows go through benchmarks.common.Sink into results/bench/search.json;
+the CI artifact uploads the whole results/bench directory.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Sink, timeit
+from repro.core import (
+    DescentConfig,
+    NeighborLists,
+    SearchConfig,
+    apply_permutation,
+    brute_force_knn,
+    datasets,
+    greedy_reorder,
+    locality_stats,
+    recall_at_k,
+)
+from repro.core.graph_search import graph_search
+from repro.core.nn_descent import build_knn_graph
+
+
+def _qps(x, gidx, q, k_out, cfg, key, **kw):
+    t = timeit(
+        lambda: graph_search(x, gidx, q, k_out=k_out, key=key, cfg=cfg),
+        **kw,
+    )
+    return q.shape[0] / t, t
+
+
+def run_compare(n: int = 100_000, d: int = 64, q_n: int = 4096,
+                k: int = 16, k_out: int = 10, beam: int = 32,
+                rounds: int = 48, expand: int = 6, q_block: int = 512,
+                n_eval: int = 1024, sink: Sink | None = None) -> list:
+    sink = sink or Sink("search")
+    x = datasets.clustered(jax.random.key(0), n, d, 16)
+    # graph quality only needs to be good enough for both paths to search;
+    # reorder=False so the locality story is measured separately below
+    dcfg = DescentConfig(k=k, rho=0.5, max_iters=4, polish=1, reorder=False)
+    dist, idx, _ = build_knn_graph(x, k=k, cfg=dcfg, key=jax.random.key(1))
+    q = x[:q_n] + 0.01 * jax.random.normal(jax.random.key(2), (q_n, d))
+
+    # ground truth on a subsample (full brute force at 1e5 x 4096 is the
+    # point of NOT serving brute force; n_eval rows suffice for recall)
+    _, ti = brute_force_knn(x, q[:n_eval], k_out, exclude_self=False)
+
+    key = jax.random.key(3)
+    row = {"op": "search_compare", "n": n, "d": d, "q": q_n, "k": k,
+           "k_out": k_out, "beam": beam, "rounds": rounds, "expand": expand,
+           "q_block": q_block}
+    fcfg = SearchConfig(beam=beam, rounds=rounds, expand=expand,
+                        q_block=q_block)
+    for tag, cfg in (
+        ("ref", SearchConfig(beam=beam, rounds=rounds, backend="ref")),
+        ("fused", fcfg),
+    ):
+        qps, t = _qps(x, idx, q, k_out, cfg, key)
+        _, gi = graph_search(x, idx, q[:n_eval], k_out=k_out, key=key,
+                             cfg=cfg)
+        row[f"{tag}_s"] = round(t, 3)
+        row[f"{tag}_qps"] = round(qps, 1)
+        row[f"{tag}_recall"] = round(float(recall_at_k(gi, ti)), 4)
+    row["speedup"] = round(row["fused_qps"] / max(row["ref_qps"], 1e-9), 2)
+    row["recall_gap"] = round(row["ref_recall"] - row["fused_recall"], 4)
+    sink.row(**row)
+
+    # --- paper §3.2 on the serving gather path: reorder locality + QPS
+    nl = NeighborLists(dist, idx, jnp.zeros_like(idx, dtype=bool))
+    pre = locality_stats(nl)
+    sigma, sigma_inv = greedy_reorder(nl)
+    x_r, nl_r = apply_permutation(x.astype(jnp.float32), nl, sigma,
+                                  sigma_inv)
+    post = locality_stats(nl_r)
+    qps_r, _ = _qps(x_r, nl_r.idx, q, k_out, fcfg, key)
+    _, gi_r = graph_search(x_r, nl_r.idx, q[:n_eval], k_out=k_out, key=key,
+                           cfg=fcfg)
+    # returned ids are positions in the reordered array; map back for recall
+    gi_orig = jnp.where(gi_r >= 0, sigma_inv[jnp.clip(gi_r, 0, n - 1)], -1)
+    sink.row(op="search_reorder_locality",
+             in_block_pre=round(pre["in_block_fraction"], 4),
+             in_block_post=round(post["in_block_fraction"], 4),
+             spread_pre=round(pre["mean_gather_spread"], 1),
+             spread_post=round(post["mean_gather_spread"], 1),
+             block=pre["block"],
+             fused_qps_reordered=round(qps_r, 1),
+             fused_recall_reordered=round(
+                 float(recall_at_k(gi_orig, ti)), 4))
+    return sink.save()
+
+
+def run_smoke(n: int = 2048, d: int = 16, q_n: int = 512, k: int = 10,
+              k_out: int = 10, beam: int = 48, rounds: int = 24,
+              expand: int = 4) -> list:
+    """CI lane: small seeded ref-vs-fused search (search.json). beam=48
+    over an 8-cluster corpus keeps entry coverage off the critical path
+    (the K-NN graph has no inter-cluster edges), so the gated recall
+    measures the search itself."""
+    sink = Sink("search")
+    x = datasets.clustered(jax.random.key(5), n, d, 8)
+    dcfg = DescentConfig(k=k, rho=1.0, max_iters=10)
+    _, idx, _ = build_knn_graph(x, k=k, cfg=dcfg, key=jax.random.key(6))
+    q = x[:q_n] + 0.01 * jax.random.normal(jax.random.key(7), (q_n, d))
+    _, ti = brute_force_knn(x, q, k_out, exclude_self=False)
+
+    key = jax.random.key(8)
+    out = {}
+    for tag, cfg in (
+        ("ref", SearchConfig(beam=beam, rounds=rounds, backend="ref")),
+        ("fused", SearchConfig(beam=beam, rounds=rounds, expand=expand)),
+    ):
+        qps, t = _qps(x, idx, q, k_out, cfg, key, warmup=1, iters=3)
+        _, gi = graph_search(x, idx, q, k_out=k_out, key=key, cfg=cfg)
+        out[tag] = (qps, t, float(recall_at_k(gi, ti)))
+    sink.row(op="smoke_search", n=n, q=q_n, k=k, beam=beam, rounds=rounds,
+             expand=expand,
+             ref_s=round(out["ref"][1], 3),
+             fused_s=round(out["fused"][1], 3),
+             ref_qps=round(out["ref"][0], 1),
+             fused_qps=round(out["fused"][0], 1),
+             ref_recall=round(out["ref"][2], 4),
+             search_recall=round(out["fused"][2], 4),
+             speedup=round(out["fused"][0] / max(out["ref"][0], 1e-9), 2))
+    return sink.save()
+
+
+def main(argv: list | None = None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mode", choices=("compare", "smoke"), default="compare")
+    p.add_argument("--n", type=int, default=None,
+                   help="override corpus size (compare mode)")
+    p.add_argument("--q", type=int, default=None,
+                   help="override query count (compare mode)")
+    p.add_argument("--expand", type=int, default=None,
+                   help="override fused expansion width (compare mode)")
+    args = p.parse_args(argv)
+    if args.mode == "smoke":
+        return run_smoke()
+    kw = {}
+    if args.n is not None:
+        kw["n"] = args.n
+    if args.q is not None:
+        kw["q_n"] = args.q
+    if args.expand is not None:
+        kw["expand"] = args.expand
+    return run_compare(**kw)
+
+
+if __name__ == "__main__":
+    main()

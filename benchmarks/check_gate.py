@@ -13,12 +13,17 @@ when any gated metric violates its pinned floor:
     (cost-model gate; tiny slack for sampling divergence)
   * ``build_recall`` — the fused build must stay at or above
     ``--build-floor`` on the smoke corpus (quality gate)
+  * ``search_recall`` — the fused batched graph search must stay at or
+    above ``--search-floor`` on the smoke corpus, and ``fused_qps`` must
+    not drop below ``ref_qps`` (the serving hot path must never be slower
+    than the greedy oracle loop it replaced) — when ``--search`` is given
 
 See benchmarks/README.md for how the floors are pinned and when to move
 them.
 
 Usage: python benchmarks/check_gate.py results/bench/online.json \
-           --floor 0.85 --build results/bench/build.json --build-floor 0.95
+           --floor 0.85 --build results/bench/build.json --build-floor 0.95 \
+           --search results/bench/search.json --search-floor 0.92
 """
 from __future__ import annotations
 
@@ -75,6 +80,33 @@ def check_build(rows: list, floor: float) -> list:
     return failures
 
 
+def check_search(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_search"]
+    if not smoke:
+        failures.append("no smoke_search row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("search_recall", "ref_recall",
+                                   "fused_qps", "ref_qps") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(f"smoke_search row missing gated keys {missing}")
+            continue
+        recall = float(r["search_recall"])
+        if recall < floor:
+            failures.append(
+                f"search_recall {recall:.4f} below pinned floor {floor}"
+            )
+        fused = float(r["fused_qps"])
+        ref = float(r["ref_qps"])
+        if fused < ref:
+            failures.append(
+                f"fused search QPS {fused} below ref loop QPS {ref}"
+            )
+    return failures
+
+
 def main(argv: list | None = None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("results", help="path to online.json")
@@ -84,6 +116,10 @@ def main(argv: list | None = None) -> int:
                    help="path to build.json (enables the build gate)")
     p.add_argument("--build-floor", type=float, default=0.95,
                    help="pinned build_recall floor")
+    p.add_argument("--search", default=None,
+                   help="path to search.json (enables the search gate)")
+    p.add_argument("--search-floor", type=float, default=0.92,
+                   help="pinned search_recall floor")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
@@ -92,12 +128,19 @@ def main(argv: list | None = None) -> int:
         with open(args.build) as f:
             build_rows = json.load(f)
         failures += check_build(build_rows, args.build_floor)
+    if args.search is not None:
+        with open(args.search) as f:
+            search_rows = json.load(f)
+        failures += check_search(search_rows, args.search_floor)
     for msg in failures:
         print(f"GATE FAIL: {msg}", file=sys.stderr)
     if not failures:
         print(f"gate ok: insert_recall >= {args.floor}, no dangling edges"
               + ("" if args.build is None else
-                 f"; build_recall >= {args.build_floor}, fused evals <= ref"))
+                 f"; build_recall >= {args.build_floor}, fused evals <= ref")
+              + ("" if args.search is None else
+                 f"; search_recall >= {args.search_floor}, "
+                 "fused QPS >= ref QPS"))
     return 1 if failures else 0
 
 

@@ -14,6 +14,7 @@ Paper artifact map:
     kernels     -> (ours) blocked-kernel tile model
     online      -> (ours) streaming insert/delete vs. full rebuild
     build       -> (ours) fused local join vs. global-lexsort routing
+    search      -> (ours) fused batched beam search vs. greedy ref loop
 """
 from __future__ import annotations
 
@@ -35,6 +36,7 @@ def main(argv=None):
         bench_reorder,
         bench_roofline,
         bench_scaling,
+        bench_search,
         bench_selection,
     )
 
@@ -57,6 +59,9 @@ def main(argv=None):
             n_batches=2 if quick else 4),
         "build": lambda: bench_build.run_compare(
             n=4096 if quick else 20000),
+        "search": lambda: bench_search.run_compare(
+            n=8192 if quick else 100_000, q_n=512 if quick else 4096,
+            n_eval=256 if quick else 1024),
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

@@ -74,7 +74,8 @@ def main():
     lm_lp = jax.nn.log_softmax(
         lm_logits[:, :-1].reshape(-1, cfg.vocab), axis=-1)
 
-    knl = knn_logits(ds, q, cfg.vocab, k=8)
+    # thread an explicit entry key (a decode loop would fold in its step)
+    knl = knn_logits(ds, q, cfg.vocab, k=8, key=jax.random.key(11))
     for lam in (0.0, 0.25, 0.5):
         mixed = interpolate(lm_lp, knl, lam=lam) if lam else lm_lp
         nll = -jnp.take_along_axis(

@@ -14,6 +14,7 @@ from repro.core import (
     MutableKNNStore,
     NeighborLists,
     OnlineConfig,
+    SearchConfig,
     apply_permutation,
     brute_force_knn,
     build_knn_graph,
@@ -36,6 +37,7 @@ __all__ = [
     "MutableKNNStore",
     "NeighborLists",
     "OnlineConfig",
+    "SearchConfig",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",

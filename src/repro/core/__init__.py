@@ -1,7 +1,7 @@
 """The paper's contribution: fast K-NN-graph construction (NN-Descent with
 turbosampling selection, greedy memory reordering, and blocked distance
 evaluation), single-chip and mesh-sharded."""
-from repro.core.graph_search import graph_search
+from repro.core.graph_search import SearchConfig, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.nn_descent import (
     DescentConfig,
@@ -29,6 +29,7 @@ __all__ = [
     "MutableKNNStore",
     "NeighborLists",
     "OnlineConfig",
+    "SearchConfig",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",

@@ -17,6 +17,10 @@ ids are ``shard * n_local + row``. Three collective patterns:
   * reorder_sharded — the paper's greedy reorder run shard-locally on the
     locally-owned subgraph, followed by one all_gather of the per-shard
     permutations so every shard can rewrite its neighbor ids.
+  * graph_search_sharded — the serving-side entry: replicated query
+    blocks run the fused batched beam search on every shard's local
+    subgraph, and one all_gather + top-k merges the per-shard results
+    into global top-k (core/graph_search.py holds the per-shard search).
 
 The per-shard inner work reuses the exact same selection/merge/blocked
 kernels as the single-chip path. After the sampled iterations converge,
@@ -34,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import heap, selection
+from repro.core.graph_search import SearchConfig, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.nn_descent import DescentConfig, invert_candidates, pair_block
 from repro.kernels import ops
@@ -320,6 +325,7 @@ def nn_descent_sharded_iteration(
     gi = jnp.where(ok_r, got[:, 1][safe_r], -1)
     cd, ci = ops.knn_join_select(
         gd, gi, jnp.full((n_local,), jnp.inf), c=cfg.merge_k,
+        backend=cfg.backend,
     )
     nl, upd = heap.merge(nl, cd, ci, cand_new=True)
     n_evals = jnp.sum(ok_nn) + jnp.sum(ok_no)
@@ -336,6 +342,7 @@ def polish_sharded_round(
     axis: str,
     P_: int,
     merge_c: int,             # select width before the merge (<= k*k)
+    backend: str = "auto",    # kernel dispatch (DescentConfig.backend)
 ):
     """One sharded exhaustive local-join polish round (call under
     shard_map) — the port of core/nn_descent.py polish_iteration: every
@@ -384,9 +391,82 @@ def polish_sharded_round(
     evals = jnp.sum(ok)
     cd, ci = ops.knn_join_select(
         dd, jnp.where(ok, nb, -1), nl.dist[:, -1], c=merge_c,
+        backend=backend,
     )
     nl, upd = heap.merge(nl, cd, ci)
     return nl, jax.lax.psum(jnp.sum(upd), axis), jax.lax.psum(evals, axis)
+
+
+def graph_search_sharded(
+    mesh: Mesh,
+    x: jax.Array,           # (n, d) corpus, sharded by rows over ``axis``
+    graph_idx: jax.Array,   # (n, k) per-shard subgraph, LOCAL neighbor ids
+    queries: jax.Array,     # (q, d) replicated query batch
+    *,
+    k_out: int = 10,
+    cfg: SearchConfig | None = None,
+    key: jax.Array | None = None,
+    axis: str = "data",
+):
+    """Sharded serving entry for the fused batched search: corpus rows are
+    sharded over the mesh's ``axis``; each shard holds a K-NN subgraph
+    over its OWN rows (neighbor ids are shard-local — e.g. each shard's
+    slice built independently, or a global build restricted to local
+    edges). Every query block runs the shard-local fused search
+    (core/graph_search.py — the per-shard call is the same jitted blocked
+    multi-expansion path as the single-chip entry), local hits are lifted
+    to global ids (shard * n_local + row), and one all_gather + top-k
+    folds the P per-shard result lists into the global top-``k_out``.
+
+    Returns (dist (q, k_out), idx (q, k_out) global ids), replicated.
+    """
+    from repro.core.graph_search import _batch_key
+    cfg = cfg or SearchConfig()
+    # no shared-constant entry fallback (same contract as graph_search):
+    # keyless calls derive the entry key from the query batch content, so
+    # repeated serving batches don't reuse identical per-shard entries
+    key = _batch_key(queries) if key is None else key
+    P_ = mesh.shape[axis]
+    n = x.shape[0]
+    assert n % P_ == 0, (n, P_)
+    n_local = n // P_
+    # the subgraph contract is checkable and cheap to check (this is a
+    # python-level driver): GLOBAL ids — e.g. build_knn_graph_sharded
+    # output fed in directly — would be silently clipped into garbage
+    # adjacency inside the shard-local search
+    if int(jnp.max(graph_idx)) >= n_local:
+        raise ValueError(
+            f"graph_idx holds ids >= n_local ({n_local}): "
+            "graph_search_sharded expects shard-LOCAL neighbor ids (each "
+            "shard's subgraph over its own rows), not the global ids "
+            "build_knn_graph_sharded emits — subtract each shard's base "
+            "(shard * n_local) and drop cross-shard edges first"
+        )
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(axis, None), P(axis, None), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    def fn(key, x_local, gi_local, q):
+        p = jax.lax.axis_index(axis)
+        base = p * n_local
+        kk = jax.random.fold_in(key, p)
+        d, i = graph_search(x_local, gi_local, q, k_out=k_out, key=kk,
+                            cfg=cfg)
+        gi = jnp.where(i >= 0, base + i, -1)
+        ds = jax.lax.all_gather(d, axis)             # (P, q, k_out)
+        is_ = jax.lax.all_gather(gi, axis)
+        alld = jnp.moveaxis(ds, 0, 1).reshape(q.shape[0], -1)
+        alli = jnp.moveaxis(is_, 0, 1).reshape(q.shape[0], -1)
+        alld = jnp.where(alli >= 0, alld, jnp.inf)
+        neg, pos = jax.lax.top_k(-alld, k_out)
+        out_i = jnp.take_along_axis(alli, pos, axis=1)
+        return jnp.where(out_i >= 0, -neg, jnp.inf), out_i
+
+    return fn(key, x, graph_idx, queries)
 
 
 def _f32_bits(x):
@@ -569,7 +649,7 @@ def build_knn_graph_sharded(
         nl_local = NeighborLists(d_, i_, n_ > 0)
         nl2, upd, ev = polish_sharded_round(
             x_local, x2_local, nl_local, axis=axis, P_=P_,
-            merge_c=min(6 * k, k * k),
+            merge_c=min(6 * k, k * k), backend=cfg.backend,
         )
         return (nl2.dist, nl2.idx, nl2.new.astype(jnp.int8)), upd, ev
 

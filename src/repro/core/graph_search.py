@@ -1,20 +1,81 @@
-"""Query-time greedy best-first search over a built K-NN graph.
+"""Query-time search over a built K-NN graph — fused, batched, blocked.
 
 This is the serving-side consumer of the paper's artifact: given the
-NN-Descent graph, answer nearest-neighbor queries by repeatedly expanding
-the closest unexpanded pool entry and merging its graph neighbors into the
-pool (NSW/NSG-style search restricted to the K-NN graph, fixed shapes:
-bounded pool, static expansion rounds). Used by serve/knn_lm.py.
+NN-Descent graph, answer nearest-neighbor queries by beam search restricted
+to the K-NN graph (NSW/NSG-style, fixed shapes). Used by serve/knn_lm.py,
+the online store's query path, and the online insert's seeding.
+
+Two implementations behind ``SearchConfig.backend``:
+
+  * **fused** (auto | pallas | interpret) — the serving counterpart of the
+    fused build join: queries are processed in blocks of
+    ``SearchConfig.q_block``; each round expands the top-``expand``
+    unexpanded pool nodes of EVERY query in the block at once (the
+    friend-of-a-friend principle — Baron & Darling — is what lets several
+    frontier nodes expand per round without losing convergence, and Wang
+    et al.'s GPU construction shows the win of batching traversal into
+    wide fixed-shape rounds). The E·k gathered neighbor rows become one
+    (q_block, E·k) distance tile on the MXU (kernels/knn_search.py, norms
+    hoisted once per batch), the ``knn_join_select`` partial top-C
+    machinery reduces the tile under the pool's k-th-distance prefilter
+    (no per-round full argsorts), and the pool is maintained by the same
+    sort-free bounded merge as the build (``heap.merge_kernel`` /
+    ``ops.knn_merge``, dedup by id) with the NeighborLists ``new`` flag
+    reused as "not yet expanded". Sequential depth drops from ``rounds``
+    to ~``rounds/expand``, with a convergence early-out when no query in
+    the block has an unexpanded pool entry left.
+
+  * **ref** — the original one-node-per-round greedy loop, retained as
+    the parity oracle (same interface, per-query vmap, full argsorts).
+
+``rounds`` is the *expansion budget* (total pool nodes expanded per
+query) under both backends: the fused path runs ceil(rounds/expand)
+rounds of ``expand`` expansions, so with expand | rounds (the default
+and every shipped config) both backends expand exactly ``rounds`` nodes;
+otherwise the fused budget rounds UP to the next multiple of ``expand``
+(core/online.py's analytic eval bound accounts for this).
+
+Entry points: when ``entry`` is None, ``beam`` entry points are drawn
+from ``key`` (uniform over live rows) — a K-NN graph over clustered data
+has no inter-cluster edges, so search only reaches clusters holding an
+entry point. When ``key`` is also None it is derived from the *content*
+of the query batch instead of a silent constant, so repeated serving
+batches stop reusing identical entry points while identical batches stay
+deterministic; serving callers should still thread an explicit key
+(serve/knn_lm.knn_logits, core/online.knn_insert do).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import heap
+from repro.core.heap import NeighborLists
+from repro.kernels import ops
+
 
 _BIG = 3.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    beam: int = 32          # pool width per query
+    rounds: int = 24        # expansion budget: pool nodes expanded/query
+    expand: int = 4         # E: nodes expanded per round (fused path)
+    q_block: int = 256      # queries per fused block (compile-once shape)
+    backend: str = "auto"   # auto | pallas | interpret = fused kernels;
+                            # ref = the greedy one-node-per-round oracle
+    select_c: int = 0       # candidate width handed to the pool merge
+                            # (0 = beam; the top-C select reduces the E*k
+                            # tile to this before the bounded merge)
+
+    @property
+    def n_rounds(self) -> int:
+        """Fused sequential depth: ceil(rounds / expand)."""
+        return max(1, -(-self.rounds // self.expand))
 
 
 @functools.partial(jax.jit, static_argnames=("hops", "capacity"))
@@ -50,7 +111,39 @@ def expand_frontier(
     return ids, mask
 
 
-@functools.partial(jax.jit, static_argnames=("k_out", "beam", "rounds"))
+# ---------------------------------------------------------------------------
+# entry-point seeding
+# ---------------------------------------------------------------------------
+
+
+def _batch_key(queries: jax.Array) -> jax.Array:
+    """Content-derived entry key: replaces the retired silent
+    ``jax.random.key(0)`` fallback. Distinct serving batches get distinct
+    entry points; the same batch stays deterministic."""
+    h = jax.lax.bitcast_convert_type(
+        jnp.sum(queries, dtype=jnp.float32), jnp.uint32
+    )
+    return jax.random.fold_in(jax.random.key(0), h)
+
+
+def _draw_entries(
+    key: jax.Array, n: int, beam: int, alive: jax.Array | None
+) -> jax.Array:
+    """One entry per beam slot, uniform over live rows."""
+    if alive is None:
+        return jax.random.randint(key, (beam,), 0, n)
+    # uniform over live rows: top-`beam` random keys among alive (clamped
+    # to n when the pool is wider than the corpus)
+    w = jnp.where(alive, jax.random.uniform(key, (n,)), -1.0)
+    _, entry = jax.lax.top_k(w, min(beam, n))
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# public dispatcher
+# ---------------------------------------------------------------------------
+
+
 def graph_search(
     x: jax.Array,          # (n, d) corpus (feature-padded ok)
     graph_idx: jax.Array,  # (n, k) neighbor ids
@@ -62,41 +155,196 @@ def graph_search(
     entry: jax.Array | None = None,   # (e,) entry point ids
     key: jax.Array | None = None,
     alive: jax.Array | None = None,   # (n,) bool — tombstone mask
+    x2: jax.Array | None = None,      # (n,) cached squared norms
+    cfg: SearchConfig | None = None,
 ):
-    """Returns (dist (q, k_out), idx (q, k_out)) ascending.
+    """Returns (dist (q, k_out), idx (q, k_out)) ascending; empty slots
+    are (+inf/_BIG, -1).
 
+    ``cfg`` wins over the legacy ``beam``/``rounds`` kwargs when given.
     With ``alive`` given (the online store's tombstone mask), dead nodes
     are neither expanded nor returned: entry points are drawn from live
-    rows only and dead neighbors are masked out of the pool.
+    rows only and dead neighbors are masked out of the candidate tile.
+    ``x2`` lets callers with a cached norm vector (MutableKNNStore) skip
+    the per-call recomputation; queries' norms are hoisted once per batch
+    either way.
     """
-    n, k = graph_idx.shape
+    if cfg is None:
+        cfg = SearchConfig(beam=beam, rounds=rounds)
     x = x.astype(jnp.float32)
-    x2 = jnp.sum(x * x, axis=1)
+    queries = queries.astype(jnp.float32)
+    if x2 is None:
+        x2 = jnp.sum(x * x, axis=1)
+    n = graph_idx.shape[0]
     if entry is None:
-        # one entry per beam slot: a K-NN graph over clustered data has no
-        # inter-cluster edges, so search can only reach clusters that hold
-        # an entry point — spread the whole beam across the corpus
-        key = jax.random.key(0) if key is None else key
-        if alive is None:
-            entry = jax.random.randint(key, (beam,), 0, n)
-        else:
-            # uniform over live rows: top-`beam` random keys among alive
-            w = jnp.where(alive, jax.random.uniform(key, (n,)), -1.0)
-            _, entry = jax.lax.top_k(w, beam)
+        key = _batch_key(queries) if key is None else key
+        entry = _draw_entries(key, n, cfg.beam, alive)
+    entry = entry.astype(jnp.int32)
 
-    def q_dist(q, ids):
-        rows = x[ids]
-        return jnp.maximum(
-            x2[ids] - 2.0 * rows @ q + jnp.sum(q * q), 0.0
+    if cfg.backend == "ref":
+        return _graph_search_ref(
+            x, x2, graph_idx, queries, entry, alive,
+            k_out=k_out, beam=cfg.beam, rounds=cfg.rounds,
         )
 
-    def one_query(q):
+    # fused batched path: pad the batch to whole q_blocks, run the jitted
+    # block search per block, slice the pad off. Small batches (decode
+    # steps, insert seeding) clamp the block to the next power of two so
+    # pad waste stays < 2x while the compiled shape set stays bounded.
+    nq = queries.shape[0]
+    if nq == 0:     # idle serving tick / empty insert batch
+        return (jnp.zeros((0, k_out), jnp.float32),
+                jnp.full((0, k_out), -1, jnp.int32))
+    qb = max(1, min(cfg.q_block, 1 << (nq - 1).bit_length()))
+    pad = (-nq) % qb
+    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+    q2 = jnp.sum(qp * qp, axis=1)
+    outs_d, outs_i = [], []
+    for s in range(0, nq + pad, qb):
+        od, oi = _search_block(
+            x, x2, graph_idx, qp[s:s + qb], q2[s:s + qb], entry, alive,
+            k_out=k_out, cfg=cfg,
+        )
+        outs_d.append(od)
+        outs_i.append(oi)
+    out_d = outs_d[0] if len(outs_d) == 1 else jnp.concatenate(outs_d)
+    out_i = outs_i[0] if len(outs_i) == 1 else jnp.concatenate(outs_i)
+    return out_d[:nq], out_i[:nq]
+
+
+# ---------------------------------------------------------------------------
+# fused batched multi-expansion search
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "cfg"))
+def _search_block(
+    x: jax.Array,          # (n, dp) f32 corpus
+    x2: jax.Array,         # (n,) corpus squared norms (hoisted)
+    graph_idx: jax.Array,  # (n, k)
+    q: jax.Array,          # (qb, dp) f32 query block
+    q2: jax.Array,         # (qb,) query squared norms (hoisted)
+    entry: jax.Array,      # (e,) entry ids (shared across the block)
+    alive: jax.Array | None,
+    *,
+    k_out: int,
+    cfg: SearchConfig,
+):
+    """One query block of the fused search (see module docstring)."""
+    n, k = graph_idx.shape
+    qb = q.shape[0]
+    beam = cfg.beam
+    e = cfg.expand
+    c_sel = cfg.select_c or beam
+    rows = jnp.arange(qb, dtype=jnp.int32)[:, None]
+
+    # ---- seed the pool: all entry distances in ONE blocked matmul, then
+    # one bounded merge (dedups repeated entries, drops dead ones)
+    ent = jnp.clip(entry, 0, n - 1)
+    ed = jnp.maximum(
+        q2[:, None] + x2[ent][None, :] - 2.0 * q @ x[ent].T, 0.0
+    )                                                   # (qb, E0)
+    eids = jnp.broadcast_to(entry[None, :], ed.shape)
+    if alive is not None:
+        eids = jnp.where(alive[ent][None, :], eids, -1)
+    pool = NeighborLists(
+        jnp.full((qb, beam), jnp.inf, jnp.float32),
+        jnp.full((qb, beam), -1, jnp.int32),
+        jnp.zeros((qb, beam), bool),        # ``new`` == not yet expanded
+    )
+    pool, _ = heap.merge_kernel(
+        pool, jnp.where(eids >= 0, ed, jnp.inf), eids, backend=cfg.backend
+    )
+
+    inf_q = jnp.full((qb,), jnp.inf, jnp.float32)
+    slot_iota = jnp.broadcast_to(
+        jnp.arange(beam, dtype=jnp.int32)[None, :], (qb, beam)
+    )
+
+    def round_fn(state):
+        pool_d, pool_i, pool_new, r = state
+        # top-E unexpanded pool slots per query (partial top-C select —
+        # the same machinery as the build join, no full argsort)
+        _, ss = ops.knn_join_select(
+            pool_d, jnp.where(pool_new & (pool_i >= 0), slot_iota, -1),
+            inf_q, c=e, backend=cfg.backend,
+        )                                               # (qb, E) slots
+        can = ss >= 0
+        safe_s = jnp.where(can, ss, 0)
+        nodes = jnp.where(can, jnp.take_along_axis(pool_i, safe_s, 1), -1)
+        # mark expanded (disabled writes go out of bounds -> dropped)
+        pool_new = pool_new.at[rows, jnp.where(can, ss, beam)].set(
+            False, mode="drop"
+        )
+        # adjacency + feature gather for the whole block, then the fused
+        # distance tile with validity/alive masking in the epilogue
+        nbrs = graph_idx[jnp.clip(nodes, 0, n - 1)]     # (qb, E, k)
+        ok = can[:, :, None] & (nbrs >= 0)
+        if alive is not None:
+            ok &= alive[jnp.clip(nbrs, 0, n - 1)]
+        cand = jnp.where(ok, nbrs, -1).reshape(qb, e * k)
+        safe_c = jnp.where(cand >= 0, cand, 0)
+        dd = ops.knn_search_dists(
+            q, q2, x[safe_c], jnp.where(cand >= 0, x2[safe_c], 0.0), cand,
+            backend=cfg.backend,
+        )                                               # (qb, E*k)
+        # pool-k-th prefilter + partial top-C, then the sort-free bounded
+        # merge (dedup by id; accepted slots come back unexpanded)
+        cd, ci = ops.knn_join_select(
+            dd, cand, pool_d[:, -1], c=c_sel, backend=cfg.backend
+        )
+        nl, _ = heap.merge_kernel(
+            NeighborLists(pool_d, pool_i, pool_new), cd, ci,
+            backend=cfg.backend,
+        )
+        return nl.dist, nl.idx, nl.new, r + 1
+
+    def cond_fn(state):
+        pool_d, pool_i, pool_new, r = state
+        # early-out: every pool entry of every query already expanded
+        return (r < cfg.n_rounds) & jnp.any(pool_new & (pool_i >= 0))
+
+    pool_d, pool_i, _, _ = jax.lax.while_loop(
+        cond_fn, round_fn,
+        (pool.dist, pool.idx, pool.new, jnp.zeros((), jnp.int32)),
+    )
+    return pool_d[:, :k_out], pool_i[:, :k_out]
+
+
+# ---------------------------------------------------------------------------
+# reference greedy loop (parity oracle)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "beam", "rounds"))
+def _graph_search_ref(
+    x: jax.Array,          # (n, dp) f32
+    x2: jax.Array,         # (n,) corpus squared norms (hoisted)
+    graph_idx: jax.Array,  # (n, k)
+    queries: jax.Array,    # (q, dp) f32
+    entry: jax.Array,      # (e,) entry ids
+    alive: jax.Array | None,
+    *,
+    k_out: int,
+    beam: int,
+    rounds: int,
+):
+    """The original one-node-per-round greedy search, kept as the fused
+    path's parity oracle. Norms are hoisted: x2 comes in precomputed and
+    each query's norm is evaluated once per batch, not once per round."""
+    n, k = graph_idx.shape
+
+    def q_dist(q, q2s, ids):
+        rows = x[ids]
+        return jnp.maximum(x2[ids] - 2.0 * rows @ q + q2s, 0.0)
+
+    def one_query(q, q2s):
         pool_i = jnp.full((beam,), -1, dtype=jnp.int32)
         pool_d = jnp.full((beam,), _BIG, dtype=jnp.float32)
         pool_e = jnp.zeros((beam,), dtype=bool)   # expanded?
         e = entry.shape[0]
         pool_i = pool_i.at[:e].set(entry.astype(jnp.int32))
-        pool_d = pool_d.at[:e].set(q_dist(q, entry))
+        pool_d = pool_d.at[:e].set(q_dist(q, q2s, entry))
         if alive is not None:
             dead = (pool_i >= 0) & ~alive[jnp.clip(pool_i, 0, n - 1)]
             pool_d = jnp.where(dead, _BIG, pool_d)
@@ -113,7 +361,9 @@ def graph_search(
             nb_ok = (nbrs >= 0) & can
             if alive is not None:
                 nb_ok &= alive[jnp.clip(nbrs, 0, n - 1)]
-            nd = jnp.where(nb_ok, q_dist(q, jnp.clip(nbrs, 0, n - 1)), _BIG)
+            nd = jnp.where(
+                nb_ok, q_dist(q, q2s, jnp.clip(nbrs, 0, n - 1)), _BIG
+            )
             # merge pool + neighbors, dedup by id, keep best `beam`
             all_i = jnp.concatenate([pool_i, jnp.where(nb_ok, nbrs, -1)])
             all_d = jnp.concatenate([pool_d, nd])
@@ -143,4 +393,5 @@ def graph_search(
             out_i = jnp.where(out_d >= _BIG, -1, out_i)
         return out_d, out_i
 
-    return jax.vmap(one_query)(queries.astype(jnp.float32))
+    q2 = jnp.sum(queries * queries, axis=1)
+    return jax.vmap(one_query)(queries, q2)

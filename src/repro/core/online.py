@@ -57,7 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heap
-from repro.core.graph_search import expand_frontier, graph_search
+from repro.core.graph_search import SearchConfig, expand_frontier, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
 from repro.core.nn_descent import (
@@ -75,7 +75,12 @@ _FILL = 1e6   # coordinate fill for unallocated rows (cf. layout.pad_points)
 @dataclasses.dataclass(frozen=True)
 class OnlineConfig:
     beam: int = 32            # seeding graph-search pool width
-    seed_rounds: int = 24     # seeding graph-search expansion rounds
+    seed_rounds: int = 24     # seeding graph-search expansion budget
+    seed_expand: int = 4      # fused search: pool nodes expanded per round
+                              # (SearchConfig.expand for seeding + queries)
+    q_block: int = 256        # fused search: queries per block (the
+                              # serving-side compile-once quantum; see
+                              # serve/scheduler.py knn_q_block plumbing)
     refine_rounds: int = 2    # localized friend-of-a-friend rounds
     self_join: bool = True    # all-pairs join within the inserted batch
     self_join_max: int = 512  # skip the O(m^2) self-join beyond this m
@@ -183,13 +188,22 @@ class MutableKNNStore:
         beam: int = 32,
         rounds: int = 24,
         key: jax.Array | None = None,
+        cfg: SearchConfig | None = None,
     ):
-        """Batched query path: greedy graph search that never returns a
-        tombstoned or unallocated row."""
+        """Batched query path: fused blocked graph search that never
+        returns a tombstoned or unallocated row. The store's cached norm
+        vector is passed through (no per-call x2 recomputation); ``cfg``
+        overrides the default SearchConfig built from the kwargs and the
+        store's backend / expansion / query-block knobs."""
+        if cfg is None:
+            cfg = SearchConfig(
+                beam=beam, rounds=rounds, expand=self.cfg.seed_expand,
+                q_block=self.cfg.q_block, backend=self.cfg.backend,
+            )
         q = _pad_to(queries, self.x.shape[1])
         return graph_search(
-            self.x, self.nl.idx, q, k_out=k_out, beam=beam,
-            rounds=rounds, key=key, alive=self.alive,
+            self.x, self.nl.idx, q, k_out=k_out, key=key,
+            alive=self.alive, x2=self.x2, cfg=cfg,
         )
 
 
@@ -453,11 +467,20 @@ def knn_insert(
     ids = jnp.arange(store.n, store.n + m, dtype=jnp.int32)
 
     beam = max(cfg.beam, k)
-    seed_d, seed_i = graph_search(
-        store.x, store.nl.idx, q, k_out=k, beam=beam,
-        rounds=cfg.seed_rounds, key=key, alive=store.alive,
+    scfg = SearchConfig(
+        beam=beam, rounds=cfg.seed_rounds, expand=cfg.seed_expand,
+        q_block=cfg.q_block, backend=cfg.backend,
     )
-    seed_evals = m * (beam + cfg.seed_rounds * k)
+    seed_d, seed_i = graph_search(
+        store.x, store.nl.idx, q, k_out=k, key=key, alive=store.alive,
+        x2=store.x2, cfg=scfg,
+    )
+    # analytic eval bound: beam entry distances + k per expanded node (the
+    # fused path expands in chunks of seed_expand, so round the budget up
+    # to whole rounds; backend="ref" expands exactly seed_rounds nodes)
+    expanded = (cfg.seed_rounds if cfg.backend == "ref"
+                else scfg.n_rounds * cfg.seed_expand)
+    seed_evals = m * (beam + expanded * k)
 
     x, x2, nl, alive, evals, upds, f_rows, p_rows = _insert_stitch(
         store.x, store.x2, store.nl, store.alive, q, ids, seed_d, seed_i,

@@ -102,9 +102,10 @@ def locality_stats(nl: NeighborLists, block: int = 128) -> dict:
     valid = nl.idx >= 0
     same = (rows // block) == (nl.idx // block)
     frac = jnp.sum(same & valid) / jnp.maximum(jnp.sum(valid), 1)
-    spread = jnp.sum(jnp.where(valid, jnp.abs(rows - nl.idx), 0)) / jnp.maximum(
-        jnp.sum(valid), 1
-    )
+    # float accumulation: the summed |i-j| exceeds int32 past ~1e5 rows
+    spread = jnp.sum(
+        jnp.where(valid, jnp.abs(rows - nl.idx), 0).astype(jnp.float32)
+    ) / jnp.maximum(jnp.sum(valid), 1)
     return {
         "in_block_fraction": float(frac),
         "mean_gather_spread": float(spread),

@@ -2,6 +2,8 @@
 #   l2_blocked      — §3.3 blocked distance evaluations (MXU tiling)
 #   knn_join        — §3.3+§2 fused local join (pair tensor + per-receiver
 #                     prefilter/top-C selection, no global pair sort)
+#   knn_search      — query-time §3.3: blocked multi-expansion candidate
+#                     distance tile for the fused batched graph search
 #   knn_merge       — §2 bounded neighbor-list update
 #   flash_attention — LM-stack attention hotspot (blocked online softmax)
 # ops.py = jit'd dispatch wrappers, ref.py = pure-jnp oracles.
@@ -16,6 +18,7 @@ from repro.kernels.knn_merge import (
     knn_merge_blocked,
     knn_merge_rows_blocked,
 )
+from repro.kernels.knn_search import knn_search_dists_blocked
 from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
 
 __all__ = [
@@ -27,5 +30,6 @@ __all__ = [
     "knn_join_select_blocked",
     "knn_merge_blocked",
     "knn_merge_rows_blocked",
+    "knn_search_dists_blocked",
     "pairwise_sq_l2_blocked",
 ]

@@ -1,0 +1,96 @@
+"""Fused serving-search kernel (paper §3.3 blocked evaluation applied at
+QUERY time) — the distance tile of the batched multi-expansion beam search.
+
+The seed ``graph_search`` expanded ONE pool node per query per round and
+evaluated its k neighbor distances with unblocked scalar row gathers plus a
+per-round recomputation of the query norm. The fused search
+(core/graph_search.py) instead expands the top-E unexpanded pool nodes of a
+whole *block* of queries at once; the E·k gathered candidate rows per query
+form a (q_block, E·k, dp) feature tile, and this kernel turns that tile
+into the (q_block, E·k) candidate distance tile in one MXU pass:
+
+    d(q, c) = ||q||^2 + ||c||^2 - 2 q·c
+
+with both norms precomputed ONCE per batch (hoisted out of the round loop)
+and the validity mask (invalid / dead candidates arrive as id -1) folded
+into the epilogue: masked candidates come out +inf so the downstream
+``knn_join_select`` top-C selection and bounded pool merge drop them for
+free. The restriction to l2 is what makes this blocked form possible — the
+source paper's core lesson, applied to the serving path.
+
+The gather itself (adjacency rows -> candidate ids -> feature rows) stays
+outside the kernel in XLA, like every other kernel in this package
+(cf. knn_join_dists_blocked's pre-gathered ``xg``): Pallas sees only
+dense, layout-native tiles. ref.py holds the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TQ = 128    # query rows per block
+
+
+def _search_dists_kernel(q_ref, q2_ref, cg_ref, c2_ref, ids_ref, od_ref):
+    """Candidate distance tile for one query block: (TQ, dp) queries x
+    (TQ, W, dp) gathered candidate features -> (TQ, W) masked sq-l2."""
+    q = q_ref[...].astype(jnp.float32)        # (TQ, dp)
+    q2 = q2_ref[...]                          # (TQ, 1)
+    cg = cg_ref[...].astype(jnp.float32)      # (TQ, W, dp)
+    c2 = c2_ref[...]                          # (TQ, W)
+    ids = ids_ref[...]                        # (TQ, W), -1 = invalid/dead
+
+    # cross terms on the MXU (batched over the query block), fp32 accum
+    ab = jax.lax.dot_general(
+        cg, q, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                         # (TQ, W)
+    dd = q2 + c2 - 2.0 * ab
+    od_ref[...] = jnp.where(ids >= 0, jnp.maximum(dd, 0.0), jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "interpret"))
+def knn_search_dists_blocked(
+    q: jax.Array,      # (nq, dp) query block features
+    q2: jax.Array,     # (nq,) hoisted query squared norms
+    cg: jax.Array,     # (nq, W, dp) gathered candidate features
+    c2g: jax.Array,    # (nq, W) cached candidate squared norms
+    ids: jax.Array,    # (nq, W) candidate ids, -1 = invalid (incl. dead)
+    *,
+    tq: int = DEFAULT_TQ,
+    interpret: bool = False,
+):
+    """Blocked query-time candidate distances.
+
+    Returns dists (nq, W) f32 with +inf on invalid candidates. Validity
+    (including tombstone/alive masking) is encoded by the caller as
+    ``ids == -1`` and applied in the kernel epilogue.
+    """
+    nq, w, dp = cg.shape
+    npad = ((nq + tq - 1) // tq) * tq
+    pad = npad - nq
+    q = jnp.pad(q, ((0, pad), (0, 0)))
+    q2 = jnp.pad(q2, (0, pad))
+    cg = jnp.pad(cg, ((0, pad), (0, 0), (0, 0)))
+    c2g = jnp.pad(c2g, ((0, pad), (0, 0)))
+    ids = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+
+    od = pl.pallas_call(
+        _search_dists_kernel,
+        grid=(npad // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, dp), lambda i: (i, 0)),
+            pl.BlockSpec((tq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tq, w, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tq, w), lambda i: (i, 0)),
+            pl.BlockSpec((tq, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, w), jnp.float32),
+        interpret=interpret,
+    )(q, q2[:, None], cg, c2g, ids)
+    return od[:nq]

@@ -23,6 +23,7 @@ from repro.kernels.knn_merge import (
     knn_merge_blocked,
     knn_merge_rows_blocked,
 )
+from repro.kernels.knn_search import knn_search_dists_blocked
 from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
 
 
@@ -84,6 +85,26 @@ def knn_join_select(
     if backend == "interpret":
         return knn_join_select_blocked(gd, gi, kth, c=c, interpret=True)
     return ref.knn_join_select(gd, gi, kth, c)
+
+
+def knn_search_dists(
+    q: jax.Array,
+    q2: jax.Array,
+    cg: jax.Array,
+    c2g: jax.Array,
+    ids: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Fused serving search: blocked query-time candidate distance tile
+    ((nq, W, dp) gathered candidate features -> (nq, W) masked sq-l2)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_search_dists_blocked(q, q2, cg, c2g, ids)
+    if backend == "interpret":
+        return knn_search_dists_blocked(q, q2, cg, c2g, ids, interpret=True)
+    return ref.knn_search_dists(q, q2, cg, c2g, ids)
 
 
 def knn_merge(

@@ -101,6 +101,29 @@ def knn_join_select(
 
 
 # ---------------------------------------------------------------------------
+# Fused serving search (query-time §3.3) — oracle for kernels/knn_search.py
+# ---------------------------------------------------------------------------
+
+def knn_search_dists(
+    q: jax.Array,      # (nq, dp) query block features
+    q2: jax.Array,     # (nq,) hoisted query squared norms
+    cg: jax.Array,     # (nq, W, dp) gathered candidate features
+    c2g: jax.Array,    # (nq, W) cached candidate squared norms
+    ids: jax.Array,    # (nq, W) candidate ids, -1 = invalid (incl. dead)
+) -> jax.Array:
+    """Query-time candidate distance tile: per query, squared-l2 to each of
+    its W gathered candidates; invalid candidates (id -1 — unoccupied
+    neighbor slots and tombstoned rows alike) come out +inf. Oracle for
+    knn_search_dists_blocked."""
+    ab = jnp.einsum(
+        "qd,qwd->qw", q.astype(jnp.float32), cg.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    dd = q2[:, None] + c2g - 2.0 * ab
+    return jnp.where(ids >= 0, jnp.maximum(dd, 0.0), jnp.inf)
+
+
+# ---------------------------------------------------------------------------
 # Bounded top-k neighbor-list merge (paper §2 "calculate and update")
 # ---------------------------------------------------------------------------
 

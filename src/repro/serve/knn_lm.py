@@ -23,7 +23,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import DescentConfig, build_knn_graph, graph_search
+from repro.core import DescentConfig, SearchConfig, build_knn_graph, graph_search
 from repro.core.online import (
     MutableKNNStore,
     OnlineConfig,
@@ -38,6 +38,8 @@ class KNNDatastore:
     values: jax.Array       # (n,) next-token ids  (reordered alike)
     graph_idx: jax.Array    # (n, k) K-NN graph in the reordered id space
     build_stats: dict
+    # serving-search knobs (fused batched search; None = per-call default)
+    search_cfg: SearchConfig | None = None
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
@@ -65,23 +67,31 @@ class MutableKNNDatastore:
     store: MutableKNNStore
     values: jax.Array       # (cap,) next-token ids, row-aligned with store
     build_stats: dict
+    # serving-search knobs (fused batched search; None = store defaults)
+    search_cfg: SearchConfig | None = None
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
               cfg: DescentConfig | None = None,
               online_cfg: OnlineConfig | None = None,
               frontier_chunk: int | None = None,
+              q_block: int | None = None,
               key: jax.Array | None = None):
         """``frontier_chunk`` overrides the online store's frontier chunk
         size (OnlineConfig.chunk): streamed decode-time inserts touch a
         frontier proportional to the insert batch, so serving stacks tune
         the padded-chunk quantum to their stream batch size (see the
-        capture hook in serve/scheduler.py)."""
+        capture hook in serve/scheduler.py). ``q_block`` likewise
+        overrides the fused search's query-block quantum
+        (OnlineConfig.q_block): the search compiles once per block shape,
+        so serving stacks match it to their decode batch."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
         online_cfg = online_cfg or OnlineConfig()
         if frontier_chunk is not None:
             online_cfg = dataclasses.replace(online_cfg,
                                              chunk=frontier_chunk)
+        if q_block is not None:
+            online_cfg = dataclasses.replace(online_cfg, q_block=q_block)
         store, st = MutableKNNStore.build(
             keys, k=k, cfg=online_cfg, descent=cfg, key=key)
         vals = jnp.zeros((store.capacity,), values.dtype)
@@ -119,14 +129,25 @@ def knn_logits(
     temperature: float = 10.0,
     beam: int = 32,
     rounds: int = 24,
+    key: jax.Array | None = None,
+    cfg: SearchConfig | None = None,
 ) -> jax.Array:
-    """Graph-search retrieval -> (q, vocab) log-probabilities."""
+    """Graph-search retrieval -> (q, vocab) log-probabilities.
+
+    ``key`` seeds the search entry points; serving loops should thread a
+    varying key (e.g. fold_in of the decode step) so repeated batches
+    explore different entries. When None, entries derive from the query
+    batch content (see core/graph_search), never from a shared constant.
+    ``cfg`` (or the datastore's ``search_cfg``) selects the fused batched
+    search knobs; default is the fused path with legacy beam/rounds."""
+    cfg = cfg or ds.search_cfg
     if isinstance(ds, MutableKNNDatastore):
         dist, idx = ds.store.search(queries, k_out=k, beam=beam,
-                                    rounds=rounds)
+                                    rounds=rounds, key=key, cfg=cfg)
     else:
         dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
-                                 k_out=k, beam=beam, rounds=rounds)
+                                 k_out=k, beam=beam, rounds=rounds,
+                                 key=key, cfg=cfg)
     w = jax.nn.softmax(-dist / temperature, axis=-1)        # (q, k)
     vals = ds.values[jnp.clip(idx, 0, ds.values.shape[0] - 1)]
     probs = jnp.zeros((queries.shape[0], vocab))

@@ -46,26 +46,33 @@ class ContinuousBatcher:
                  knn_store: Any | None = None,
                  knn_capture: Callable | None = None,
                  knn_chunk: int = 64,
-                 knn_frontier_chunk: int | None = None):
+                 knn_frontier_chunk: int | None = None,
+                 knn_q_block: int | None = None):
         self.n_slots = n_slots
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
         self.write_slot = write_slot
         self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
-        # frontier-chunk plumbing: streamed inserts touch a frontier
-        # proportional to knn_chunk, so the store's padded-chunk quantum
-        # (OnlineConfig.chunk) can be tuned alongside the stream batch
-        # size without rebuilding the datastore
-        if (knn_frontier_chunk is not None and knn_store is not None
-                and hasattr(knn_store, "store")):
-            knn_store = dataclasses.replace(
-                knn_store,
-                store=dataclasses.replace(
-                    knn_store.store,
-                    cfg=dataclasses.replace(knn_store.store.cfg,
-                                            chunk=knn_frontier_chunk),
-                ),
-            )
+        # frontier-chunk / query-block plumbing: streamed inserts touch a
+        # frontier proportional to knn_chunk and retrieval batches are the
+        # slot count, so the store's padded-chunk quantum
+        # (OnlineConfig.chunk) and the fused search's query-block quantum
+        # (OnlineConfig.q_block) can both be tuned alongside the serving
+        # batch shape without rebuilding the datastore
+        if knn_store is not None and hasattr(knn_store, "store"):
+            store_cfg = knn_store.store.cfg
+            if knn_frontier_chunk is not None:
+                store_cfg = dataclasses.replace(store_cfg,
+                                                chunk=knn_frontier_chunk)
+            if knn_q_block is not None:
+                store_cfg = dataclasses.replace(store_cfg,
+                                                q_block=knn_q_block)
+            if store_cfg is not knn_store.store.cfg:
+                knn_store = dataclasses.replace(
+                    knn_store,
+                    store=dataclasses.replace(knn_store.store,
+                                              cfg=store_cfg),
+                )
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: list[Request] = []
         self.live: dict[int, Request] = {}

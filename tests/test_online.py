@@ -296,7 +296,10 @@ def test_mutable_datastore_append_changes_retrieval():
     newk = center + 0.05 * jax.random.normal(jax.random.key(3), (16, dk))
     ds2, _ = ds.append(newk, jnp.full((16,), 7, vals0.dtype),
                        key=jax.random.key(4))
-    lp = knn_logits(ds2, center[None], vocab, k=4)
+    # the inserted cluster sits far from the base corpus (no inbound
+    # edges), so reachability rides on the entry draw: thread an explicit
+    # entry key like a serving loop would (see graph_search's key contract)
+    lp = knn_logits(ds2, center[None], vocab, k=4, key=jax.random.key(5))
     assert int(jnp.argmax(lp[0])) == 7
 
 
@@ -316,7 +319,10 @@ def test_scheduler_capture_grows_datastore():
 
     b = ContinuousBatcher(
         2, step_fn, prefill_fn, lambda c, i, o, l: c,
-        knn_store=ds, knn_capture=lambda lg: lg @ proj, knn_chunk=8)
+        knn_store=ds, knn_capture=lambda lg: lg @ proj, knn_chunk=8,
+        knn_q_block=16)
+    # the serving query-block knob rewrites the store's search quantum
+    assert b.knn_store.store.cfg.q_block == 16
     for r in range(3):
         b.submit(Request(rid=r, prompt=np.array([1, 2, 3], np.int32),
                          max_new=8))

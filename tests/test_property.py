@@ -145,6 +145,41 @@ def test_join_select_invariants(n, w, c, seed):
             assert (gd[r][gi[r] == si_np[r][j]] == sd_np[r][j]).any()
 
 
+@given(
+    n=st.integers(8, 48), k=st.integers(2, 5), d=st.integers(2, 12),
+    nq=st.integers(1, 9), expand=st.integers(1, 6), beam=st.integers(4, 12),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_fused_search_multi_expansion_selection(n, k, d, nq, expand, beam,
+                                                seed):
+    """The fused batched search's multi-expansion selection: for ANY graph
+    (random ids, including broken/duplicate edges), query batch and alive
+    mask, the returned ids per query are unique, distance-ascending, alive,
+    and every valid id pairs with a finite distance."""
+    from repro.core.graph_search import SearchConfig, graph_search
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    idx = jnp.asarray(rng.randint(-1, n, size=(n, k)).astype(np.int32))
+    alive = jnp.asarray(rng.rand(n) < 0.7)
+    q = jnp.asarray(rng.randn(nq, d).astype(np.float32))
+    cfg = SearchConfig(beam=beam, rounds=2 * expand, expand=expand,
+                       q_block=4)
+    dd, ii = graph_search(x, idx, q, k_out=min(4, beam),
+                          key=jax.random.key(seed), alive=alive, cfg=cfg)
+    dd = np.asarray(dd)
+    ii = np.asarray(ii)
+    fin = np.isfinite(dd)
+    assert ((ii >= 0) == fin).all()
+    padded = np.where(fin, dd, np.float32(3.0e38))
+    assert (np.diff(padded, axis=1) >= 0).all()
+    a = np.asarray(alive)
+    for r in range(ii.shape[0]):
+        ids = ii[r][ii[r] >= 0]
+        assert len(set(ids.tolist())) == len(ids)
+        assert a[ids].all()
+
+
 @given(seed=st.integers(0, 999), scale=st.floats(1e-3, 1e3),
        nelem=st.integers(1, 2000))
 @_settings
