@@ -10,7 +10,10 @@ Modes (``python benchmarks/bench_build.py --mode ...``):
     ``compact_pairs``). Reports wall-clock, per-iteration time after the
     compile-bearing first build, dist_evals (must NOT increase under the
     fused path) and recall vs. brute force. Default n=20000 — the size
-    regime where the O(n*C^2) pair sort dominates the ref path.
+    regime where the O(n*C^2) pair sort dominates the ref path. A second
+    ``build_quant_compare`` row builds the same corpus with the
+    two-stage int8 path (``DescentConfig.precision``: quantized sampled
+    joins + fp32 rerank/polish) for the mixed-precision receipt.
 
   * ``smoke`` — tiny fixed config for the CI benchmark lane (< ~1 min on
     a CPU runner): one fused and one ref build on a 1024-point corpus,
@@ -78,6 +81,22 @@ def run_compare(n: int = 20000, d: int = 32, k: int = 20,
         float(recall_at_k(fused_idx[:2048], ti)), 4)
     row["speedup"] = round(row["lexsort_s"] / max(row["fused_s"], 1e-9), 2)
     sink.row(**row)
+
+    # --- the two-stage quantized build (DescentConfig.precision): the
+    # sampled joins score int8, rerank_lists + polish restore exact fp32.
+    # Receipt columns ride in a second row (same corpus, same key).
+    qrow = {"op": "build_quant_compare", "n": n, "d": d, "k": k,
+            "f32_s": row["fused_s"], "f32_recall": row["fused_recall_2048q"]}
+    for prec in ("int8",):
+        qcfg = dataclasses.replace(cfg, precision=prec)
+        qidx, qst, qdt = _build(x, k, qcfg, key)
+        qrow[f"{prec}_s"] = round(qdt, 2)
+        qrow[f"{prec}_evals"] = qst.dist_evals
+        qrow[f"{prec}_recall_2048q"] = round(
+            float(recall_at_k(qidx[:2048], ti)), 4)
+    qrow["int8_recall_gap"] = round(
+        row["fused_recall_2048q"] - qrow["int8_recall_2048q"], 4)
+    sink.row(**qrow)
     return sink.save()
 
 

@@ -22,15 +22,30 @@ Modes (``python benchmarks/bench_search.py --mode ...``):
     gated by benchmarks/check_gate.py (pinned search-recall floor and
     fused QPS >= ref QPS).
 
-All rows go through benchmarks.common.Sink into results/bench/search.json;
-the CI artifact uploads the whole results/bench directory.
+  * ``smoke --precision int8|bf16`` — the quant-parity CI step: the same
+    smoke corpus answered by the fused fp32 path and the two-stage
+    quantized path (quantized candidate scoring + fp32 re-rank, scoring
+    on a precomputed QuantizedStore — the serving-cache semantics).
+    Emits ``f32_qps`` / ``f32_recall`` / ``quant_qps`` / ``quant_recall``
+    into results/bench/search_quant.json (its own sink so it never
+    clobbers the gated smoke rows), gated by check_gate.py (pinned
+    quantized-recall floor and quant QPS >= f32 QPS).
+
+``compare`` additionally measures the two-stage quantized path (int8 and
+bf16) against fused fp32 at the same budget — the receipt for the
+mixed-precision datastore. Rows go through benchmarks.common.Sink into
+results/bench/search.json (search_quant.json for the quant smoke); the
+CI artifact uploads the whole results/bench directory.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import Sink, timeit
 from repro.core import (
@@ -41,19 +56,41 @@ from repro.core import (
     brute_force_knn,
     datasets,
     greedy_reorder,
+    heap,
     locality_stats,
+    quantize_corpus,
     recall_at_k,
 )
 from repro.core.graph_search import graph_search
+from repro.core.layout import pad_features
 from repro.core.nn_descent import build_knn_graph
+from repro.core.quantize import mirror_width
 
 
-def _qps(x, gidx, q, k_out, cfg, key, **kw):
+def _qps(x, gidx, q, k_out, cfg, key, qstore=None, x2=None, **kw):
     t = timeit(
-        lambda: graph_search(x, gidx, q, k_out=k_out, key=key, cfg=cfg),
+        lambda: graph_search(x, gidx, q, k_out=k_out, key=key, cfg=cfg,
+                             qstore=qstore, x2=x2),
         **kw,
     )
     return q.shape[0] / t, t
+
+
+def _interleaved_qps(runs: dict, qn: int, reps: int = 7) -> dict:
+    """Median wall time per tagged thunk with the reps INTERLEAVED
+    (a-b-a-b...), so slow patches of a shared/noisy runner hit every
+    path equally instead of whichever happened to run second. Returns
+    {tag: (qps, median_s)}."""
+    for fn in runs.values():             # warm every compiled path first
+        jax.block_until_ready(fn())
+    ts = {tag: [] for tag in runs}
+    for _ in range(reps):
+        for tag, fn in runs.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts[tag].append(time.perf_counter() - t0)
+    return {tag: (qn / float(np.median(v)), float(np.median(v)))
+            for tag, v in ts.items()}
 
 
 def run_compare(n: int = 100_000, d: int = 64, q_n: int = 4096,
@@ -91,6 +128,47 @@ def run_compare(n: int = 100_000, d: int = 64, q_n: int = 4096,
     row["speedup"] = round(row["fused_qps"] / max(row["ref_qps"], 1e-9), 2)
     row["recall_gap"] = round(row["ref_recall"] - row["fused_recall"], 4)
     sink.row(**row)
+
+    # --- the two-stage quantized path at the SERVING layout and the same
+    # budget: production searches go through the store (MutableKNNStore /
+    # serve), whose fp32 rows are padded to the 128-lane quantum
+    # (layout.pad_features); the quantized mirror keeps only the logical
+    # dims (quantize.mirror_width) with per-row scales — a precomputed
+    # cache, like the store keeps (never re-quantized per batch). Both
+    # paths answer the same padded store + graph; only the candidate-
+    # scoring stage differs, and the quantized pool re-ranks fp32. The
+    # acceptance claim: int8 QPS above fp32 with recall within 0.02.
+    xp = pad_features(x.astype(jnp.float32))
+    x2p = jnp.sum(xp * xp, axis=1)
+    qp = pad_features(q.astype(jnp.float32))
+    qrow = {"op": "search_quant_compare", "n": n, "d": d, "q": q_n,
+            "dp_serving": xp.shape[1], "beam": beam, "rounds": rounds,
+            "expand": expand}
+    stores = {"f32": None}
+    cfgs = {"f32": fcfg}
+    for prec in ("int8", "bf16"):
+        cfgs[prec] = dataclasses.replace(fcfg, precision=prec)
+        stores[prec] = quantize_corpus(xp, prec,
+                                       width=mirror_width(d, xp.shape[1]))
+        jax.block_until_ready(stores[prec].data)
+    res = _interleaved_qps(
+        {tag: (lambda tag=tag: graph_search(
+            xp, idx, qp, k_out=k_out, key=key, cfg=cfgs[tag],
+            qstore=stores[tag], x2=x2p))
+         for tag in ("f32", "int8", "bf16")},
+        q_n,
+    )
+    for tag in ("f32", "int8", "bf16"):
+        _, gi = graph_search(xp, idx, qp[:n_eval], k_out=k_out, key=key,
+                             cfg=cfgs[tag], qstore=stores[tag], x2=x2p)
+        qrow[f"{tag}_s"] = round(res[tag][1], 3)
+        qrow[f"{tag}_qps"] = round(res[tag][0], 1)
+        qrow[f"{tag}_recall"] = round(float(recall_at_k(gi, ti)), 4)
+    qrow["int8_speedup_vs_f32"] = round(
+        qrow["int8_qps"] / max(qrow["f32_qps"], 1e-9), 2)
+    qrow["int8_recall_gap"] = round(
+        qrow["f32_recall"] - qrow["int8_recall"], 4)
+    sink.row(**qrow)
 
     # --- paper §3.2 on the serving gather path: reorder locality + QPS
     nl = NeighborLists(dist, idx, jnp.zeros_like(idx, dtype=bool))
@@ -151,6 +229,80 @@ def run_smoke(n: int = 2048, d: int = 16, q_n: int = 512, k: int = 10,
     return sink.save()
 
 
+def run_smoke_quant(precision: str, n: int = 2048, d: int = 16,
+                    q_n: int = 512, k: int = 10, k_out: int = 10,
+                    beam: int = 48, rounds: int = 24, expand: int = 4,
+                    qps_n: int = 65536, qps_d: int = 64, qps_q: int = 1024,
+                    qps_k: int = 16) -> list:
+    """CI quant-parity lane, two sub-measurements in one row:
+
+    * ``quant_recall`` / ``f32_recall`` — end-to-end two-stage search on
+      the SAME quality smoke corpus as run_smoke (n=2048, real NN-Descent
+      graph), so the quantized recall floor is directly comparable to
+      the gated fp32 ``search_recall`` floor.
+    * ``quant_qps`` / ``f32_qps`` — serving throughput at the layout and
+      scale where the mixed-precision store matters: an n=65536 store at
+      the padded serving layout (layout.pad_features, 128 lanes) with a
+      random regular graph (graph construction is not under test and a
+      random graph maximizes gather entropy — the bandwidth-bound regime
+      the int8 mirror exists for), identical graph/budget for both
+      paths, reps interleaved so runner noise hits both paths equally.
+
+    Its own sink (search_quant.json) so the gated smoke rows in
+    search.json survive; gated by check_gate.py --quant."""
+    sink = Sink("search_quant")
+
+    # --- recall parity on the quality corpus
+    x = datasets.clustered(jax.random.key(5), n, d, 8)
+    dcfg = DescentConfig(k=k, rho=1.0, max_iters=10)
+    _, idx, _ = build_knn_graph(x, k=k, cfg=dcfg, key=jax.random.key(6))
+    q = x[:q_n] + 0.01 * jax.random.normal(jax.random.key(7), (q_n, d))
+    _, ti = brute_force_knn(x, q, k_out, exclude_self=False)
+    key = jax.random.key(8)
+    fcfg = SearchConfig(beam=beam, rounds=rounds, expand=expand)
+    qcfg = dataclasses.replace(fcfg, precision=precision)
+    qstore = quantize_corpus(x.astype(jnp.float32), precision)
+    recalls = {}
+    for tag, cfg, qst in (("f32", fcfg, None), ("quant", qcfg, qstore)):
+        _, gi = graph_search(x, idx, q, k_out=k_out, key=key, cfg=cfg,
+                             qstore=qst)
+        recalls[tag] = float(recall_at_k(gi, ti))
+
+    # --- serving-layout throughput (see docstring)
+    xb = datasets.clustered(jax.random.key(15), qps_n, qps_d, 16)
+    xbp = pad_features(xb.astype(jnp.float32))
+    x2bp = jnp.sum(xbp * xbp, axis=1)
+    gidx = heap.init_random(jax.random.key(16), qps_n, qps_k).idx
+    qb = pad_features(
+        (xb[:qps_q] + 0.01 * jax.random.normal(jax.random.key(17),
+                                               (qps_q, qps_d))
+         ).astype(jnp.float32))
+    scfg = SearchConfig(beam=32, rounds=48, expand=6, q_block=512)
+    sqcfg = dataclasses.replace(scfg, precision=precision)
+    bstore = quantize_corpus(xbp, precision,
+                             width=mirror_width(qps_d, xbp.shape[1]))
+    jax.block_until_ready(bstore.data)
+    res = _interleaved_qps(
+        {"f32": lambda: graph_search(xbp, gidx, qb, k_out=k_out, key=key,
+                                     cfg=scfg, x2=x2bp),
+         "quant": lambda: graph_search(xbp, gidx, qb, k_out=k_out, key=key,
+                                       cfg=sqcfg, qstore=bstore, x2=x2bp)},
+        qps_q,
+    )
+    sink.row(op="smoke_search_quant", precision=precision, n=n, q=q_n,
+             k=k, beam=beam, rounds=rounds, expand=expand,
+             qps_n=qps_n, qps_d=qps_d, qps_q=qps_q,
+             f32_s=round(res["f32"][1], 3),
+             quant_s=round(res["quant"][1], 3),
+             f32_qps=round(res["f32"][0], 1),
+             quant_qps=round(res["quant"][0], 1),
+             f32_recall=round(recalls["f32"], 4),
+             quant_recall=round(recalls["quant"], 4),
+             quant_speedup=round(res["quant"][0] /
+                                 max(res["f32"][0], 1e-9), 2))
+    return sink.save()
+
+
 def main(argv: list | None = None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--mode", choices=("compare", "smoke"), default="compare")
@@ -160,8 +312,14 @@ def main(argv: list | None = None):
                    help="override query count (compare mode)")
     p.add_argument("--expand", type=int, default=None,
                    help="override fused expansion width (compare mode)")
+    p.add_argument("--precision", choices=("int8", "bf16"), default=None,
+                   help="smoke mode: run the two-stage quantized parity "
+                        "lane (search_quant.json) instead of the fp32 "
+                        "smoke; compare mode measures both regardless")
     args = p.parse_args(argv)
     if args.mode == "smoke":
+        if args.precision is not None:
+            return run_smoke_quant(args.precision)
         return run_smoke()
     kw = {}
     if args.n is not None:

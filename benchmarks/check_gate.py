@@ -17,18 +17,31 @@ when any gated metric violates its pinned floor:
     above ``--search-floor`` on the smoke corpus, and ``fused_qps`` must
     not drop below ``ref_qps`` (the serving hot path must never be slower
     than the greedy oracle loop it replaced) — when ``--search`` is given
+  * ``quant_recall`` — the two-stage quantized search (int8 scoring +
+    fp32 re-rank) must stay at or above ``--quant-floor`` (pinned <= 0.02
+    below the fp32 search floor: quantization may cost bounded candidate
+    recall, never more), and ``quant_qps`` must not drop below
+    ``f32_qps`` (quantized scoring exists to be FASTER; parity or worse
+    means the two-stage plumbing regressed) — when ``--quant`` is given
+
+When running under GitHub Actions (``GITHUB_STEP_SUMMARY`` set) a
+markdown metrics table (recall / QPS / evals per gate, fp32 vs
+quantized) is appended to the step summary, so bench trends are readable
+from the run page without downloading the JSON artifact.
 
 See benchmarks/README.md for how the floors are pinned and when to move
 them.
 
 Usage: python benchmarks/check_gate.py results/bench/online.json \
            --floor 0.85 --build results/bench/build.json --build-floor 0.95 \
-           --search results/bench/search.json --search-floor 0.92
+           --search results/bench/search.json --search-floor 0.92 \
+           --quant results/bench/search_quant.json --quant-floor 0.90
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -107,6 +120,92 @@ def check_search(rows: list, floor: float) -> list:
     return failures
 
 
+def check_quant(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_search_quant"]
+    if not smoke:
+        failures.append("no smoke_search_quant row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("quant_recall", "f32_recall",
+                                   "quant_qps", "f32_qps") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(
+                f"smoke_search_quant row missing gated keys {missing}")
+            continue
+        recall = float(r["quant_recall"])
+        if recall < floor:
+            failures.append(
+                f"quant_recall {recall:.4f} below pinned floor {floor}"
+            )
+        quant = float(r["quant_qps"])
+        f32 = float(r["f32_qps"])
+        if quant < f32:
+            failures.append(
+                f"quantized search QPS {quant} below fp32 QPS {f32}"
+            )
+    return failures
+
+
+# rows rendered into the step-summary table: (gate, metric, source op,
+# row key, floor text). "vs" floors compare against another key.
+_SUMMARY_SPEC = (
+    ("online", "insert_recall", "smoke_insert", "insert_recall",
+     "floor"),
+    ("online", "dangling_edges", "smoke_delete", "dangling_edges",
+     "== 0"),
+    ("build", "build_recall", "smoke_build", "build_recall",
+     "build_floor"),
+    ("build", "fused_evals", "smoke_build", "fused_evals",
+     "<= 1.02x lexsort_evals"),
+    ("build", "lexsort_evals", "smoke_build", "lexsort_evals", ""),
+    ("search", "search_recall (fused)", "smoke_search", "search_recall",
+     "search_floor"),
+    ("search", "ref_recall (fp32 oracle)", "smoke_search", "ref_recall",
+     ""),
+    ("search", "fused_qps", "smoke_search", "fused_qps", ">= ref_qps"),
+    ("search", "ref_qps", "smoke_search", "ref_qps", ""),
+    ("quant", "quant_recall (int8 two-stage)", "smoke_search_quant",
+     "quant_recall", "quant_floor"),
+    ("quant", "f32_recall (same budget)", "smoke_search_quant",
+     "f32_recall", ""),
+    ("quant", "quant_qps", "smoke_search_quant", "quant_qps",
+     ">= f32_qps"),
+    ("quant", "f32_qps", "smoke_search_quant", "f32_qps", ""),
+)
+
+
+def write_step_summary(row_sets: dict, floors: dict, failures: list):
+    """Append a markdown metrics table to $GITHUB_STEP_SUMMARY (no-op
+    outside GitHub Actions): one row per gated/contextual metric, so the
+    fp32-vs-quantized trend is readable from the run page."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    by_op = {}
+    for rows in row_sets.values():
+        for r in rows or []:
+            by_op.setdefault(r.get("op"), r)     # first row per op
+    lines = [
+        "## bench-smoke gates",
+        "",
+        "| gate | metric | value | requirement |",
+        "|---|---|---|---|",
+    ]
+    for gate, metric, op, rkey, req in _SUMMARY_SPEC:
+        r = by_op.get(op)
+        if r is None or rkey not in r:
+            continue
+        req_txt = (f">= {floors[req]}" if req in floors else req) or "—"
+        lines.append(f"| {gate} | {metric} | {r[rkey]} | {req_txt} |")
+    lines.append("")
+    lines.append("**GATE FAIL:** " + "; ".join(failures) if failures
+                 else "All gates passed.")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 def main(argv: list | None = None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("results", help="path to online.json")
@@ -120,18 +219,39 @@ def main(argv: list | None = None) -> int:
                    help="path to search.json (enables the search gate)")
     p.add_argument("--search-floor", type=float, default=0.92,
                    help="pinned search_recall floor")
+    p.add_argument("--quant", default=None,
+                   help="path to search_quant.json (enables the "
+                        "quantized-search gate)")
+    p.add_argument("--quant-floor", type=float, default=0.90,
+                   help="pinned quant_recall floor (<= 0.02 below the "
+                        "fp32 search floor)")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
+    row_sets = {"online": rows}
     failures = check(rows, args.floor)
     if args.build is not None:
         with open(args.build) as f:
             build_rows = json.load(f)
+        row_sets["build"] = build_rows
         failures += check_build(build_rows, args.build_floor)
     if args.search is not None:
         with open(args.search) as f:
             search_rows = json.load(f)
+        row_sets["search"] = search_rows
         failures += check_search(search_rows, args.search_floor)
+    if args.quant is not None:
+        with open(args.quant) as f:
+            quant_rows = json.load(f)
+        row_sets["quant"] = quant_rows
+        failures += check_quant(quant_rows, args.quant_floor)
+    write_step_summary(
+        row_sets,
+        {"floor": args.floor, "build_floor": args.build_floor,
+         "search_floor": args.search_floor,
+         "quant_floor": args.quant_floor},
+        failures,
+    )
     for msg in failures:
         print(f"GATE FAIL: {msg}", file=sys.stderr)
     if not failures:
@@ -140,7 +260,10 @@ def main(argv: list | None = None) -> int:
                  f"; build_recall >= {args.build_floor}, fused evals <= ref")
               + ("" if args.search is None else
                  f"; search_recall >= {args.search_floor}, "
-                 "fused QPS >= ref QPS"))
+                 "fused QPS >= ref QPS")
+              + ("" if args.quant is None else
+                 f"; quant_recall >= {args.quant_floor}, "
+                 "quant QPS >= f32 QPS"))
     return 1 if failures else 0
 
 

@@ -15,6 +15,12 @@ from repro.core.online import (
     knn_delete,
     knn_insert,
 )
+from repro.core.quantize import (
+    QuantizedStore,
+    dequantize,
+    quantize_corpus,
+    quantize_sym_int8,
+)
 from repro.core.recall import brute_force_knn, distance_recall, recall_at_k
 from repro.core.reorder import (
     apply_permutation,
@@ -29,11 +35,15 @@ __all__ = [
     "MutableKNNStore",
     "NeighborLists",
     "OnlineConfig",
+    "QuantizedStore",
     "SearchConfig",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",
+    "dequantize",
     "distance_recall",
+    "quantize_corpus",
+    "quantize_sym_int8",
     "graph_search",
     "greedy_reorder",
     "knn_delete",

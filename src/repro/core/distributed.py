@@ -418,6 +418,14 @@ def graph_search_sharded(
     to global ids (shard * n_local + row), and one all_gather + top-k
     folds the P per-shard result lists into the global top-``k_out``.
 
+    ``cfg.precision`` threads straight through: with "int8"/"bf16" each
+    shard quantizes its LOCAL rows inside the shard_map body and runs the
+    two-stage scoring + fp32 re-rank per shard, so the gathered per-shard
+    distances are already exact fp32 and the global top-k merge needs no
+    precision awareness at all. (Serving loops that re-search a static
+    sharded corpus should hoist the per-shard quantization into a cached
+    mirror like MutableKNNStore does; this entry re-quantizes per call.)
+
     Returns (dist (q, k_out), idx (q, k_out) global ids), replicated.
     """
     from repro.core.graph_search import _batch_key

@@ -52,8 +52,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import heap
+from repro.core import heap, quantize
 from repro.core.heap import NeighborLists
+from repro.core.quantize import QuantizedStore
 from repro.kernels import ops
 
 
@@ -71,6 +72,15 @@ class SearchConfig:
     select_c: int = 0       # candidate width handed to the pool merge
                             # (0 = beam; the top-C select reduces the E*k
                             # tile to this before the bounded merge)
+    precision: str = "f32"  # f32 | bf16 | int8 — candidate-SCORING dtype
+                            # (kernels/l2_quant.py). Quantized modes run
+                            # the whole beam traversal on the quantized
+                            # store and re-rank the final pool with the
+                            # exact fp32 kernel before returning, so the
+                            # output distances stay exact; quantization
+                            # costs bounded candidate-recall noise only.
+                            # backend="ref" (the parity oracle) is always
+                            # fp32 and ignores this knob.
 
     @property
     def n_rounds(self) -> int:
@@ -157,6 +167,7 @@ def graph_search(
     alive: jax.Array | None = None,   # (n,) bool — tombstone mask
     x2: jax.Array | None = None,      # (n,) cached squared norms
     cfg: SearchConfig | None = None,
+    qstore: QuantizedStore | None = None,   # cached quantized corpus
 ):
     """Returns (dist (q, k_out), idx (q, k_out)) ascending; empty slots
     are (+inf/_BIG, -1).
@@ -168,6 +179,12 @@ def graph_search(
     ``x2`` lets callers with a cached norm vector (MutableKNNStore) skip
     the per-call recomputation; queries' norms are hoisted once per batch
     either way.
+
+    With ``cfg.precision`` "int8"/"bf16" the traversal scores candidates
+    on the quantized corpus mirror and re-ranks the final pool fp32 (see
+    SearchConfig). ``qstore`` passes a cached mirror (MutableKNNStore /
+    KNNDatastore keep one); without it the mirror is quantized here, once
+    per call — fine for one-shot searches, wasteful for serving loops.
     """
     if cfg is None:
         cfg = SearchConfig(beam=beam, rounds=rounds)
@@ -180,6 +197,13 @@ def graph_search(
         key = _batch_key(queries) if key is None else key
         entry = _draw_entries(key, n, cfg.beam, alive)
     entry = entry.astype(jnp.int32)
+    if cfg.precision == "f32" or cfg.backend == "ref":
+        qstore = None
+    elif qstore is None or qstore.mode != cfg.precision:
+        # a cached mirror of the WRONG mode (e.g. an int8 store searched
+        # with precision="bf16") would be scored as raw codes by the
+        # other kernel — silently garbage. Quantize fresh instead.
+        qstore = quantize.quantize_corpus(x, cfg.precision)
 
     if cfg.backend == "ref":
         return _graph_search_ref(
@@ -203,7 +227,7 @@ def graph_search(
     for s in range(0, nq + pad, qb):
         od, oi = _search_block(
             x, x2, graph_idx, qp[s:s + qb], q2[s:s + qb], entry, alive,
-            k_out=k_out, cfg=cfg,
+            qstore, k_out=k_out, cfg=cfg,
         )
         outs_d.append(od)
         outs_i.append(oi)
@@ -226,6 +250,7 @@ def _search_block(
     q2: jax.Array,         # (qb,) query squared norms (hoisted)
     entry: jax.Array,      # (e,) entry ids (shared across the block)
     alive: jax.Array | None,
+    qstore: QuantizedStore | None,   # quantized corpus mirror (quant only)
     *,
     k_out: int,
     cfg: SearchConfig,
@@ -238,12 +263,33 @@ def _search_block(
     c_sel = cfg.select_c or beam
     rows = jnp.arange(qb, dtype=jnp.int32)[:, None]
 
+    # quantized scoring stage: the query block is quantized ONCE per block
+    # (the serving twin of the hoisted norms) at the MIRROR's width — the
+    # mirror drops the fp32 layout's zero feature padding (quantize.
+    # mirror_width) — and the whole traversal (seeds, candidate tiles,
+    # pool-kth prefilter) runs on quantized distances so comparisons stay
+    # self-consistent; the exact fp32 re-rank of the final pool happens
+    # after the round loop
+    quant = cfg.precision != "f32" and qstore is not None
+    if quant:
+        qq = quantize.quantize_corpus(q, cfg.precision,
+                                      width=qstore.data.shape[1])
+
     # ---- seed the pool: all entry distances in ONE blocked matmul, then
     # one bounded merge (dedups repeated entries, drops dead ones)
     ent = jnp.clip(entry, 0, n - 1)
-    ed = jnp.maximum(
-        q2[:, None] + x2[ent][None, :] - 2.0 * q @ x[ent].T, 0.0
-    )                                                   # (qb, E0)
+    if quant:
+        ab = qq.data.astype(jnp.float32) @ (
+            qstore.data[ent].astype(jnp.float32).T
+        )
+        ab = (qq.scale[:, None] * qstore.scale[ent][None, :]) * ab
+        ed = jnp.maximum(
+            qq.x2[:, None] + qstore.x2[ent][None, :] - 2.0 * ab, 0.0
+        )                                               # (qb, E0)
+    else:
+        ed = jnp.maximum(
+            q2[:, None] + x2[ent][None, :] - 2.0 * q @ x[ent].T, 0.0
+        )                                               # (qb, E0)
     eids = jnp.broadcast_to(entry[None, :], ed.shape)
     if alive is not None:
         eids = jnp.where(alive[ent][None, :], eids, -1)
@@ -284,10 +330,25 @@ def _search_block(
             ok &= alive[jnp.clip(nbrs, 0, n - 1)]
         cand = jnp.where(ok, nbrs, -1).reshape(qb, e * k)
         safe_c = jnp.where(cand >= 0, cand, 0)
-        dd = ops.knn_search_dists(
-            q, q2, x[safe_c], jnp.where(cand >= 0, x2[safe_c], 0.0), cand,
-            backend=cfg.backend,
-        )                                               # (qb, E*k)
+        if quant:
+            # quantized scoring tile: int8/bf16 gathered rows (2-4x fewer
+            # HBM bytes), scales + norm expansion fused in the epilogue
+            c2q = jnp.where(cand >= 0, qstore.x2[safe_c], 0.0)
+            if cfg.precision == "int8":
+                dd = ops.knn_search_dists_q8(
+                    qq.data, qq.scale, qq.x2, qstore.data[safe_c],
+                    qstore.scale[safe_c], c2q, cand, backend=cfg.backend,
+                )                                       # (qb, E*k)
+            else:
+                dd = ops.knn_search_dists_bf16(
+                    qq.data, qq.x2, qstore.data[safe_c], c2q, cand,
+                    backend=cfg.backend,
+                )                                       # (qb, E*k)
+        else:
+            dd = ops.knn_search_dists(
+                q, q2, x[safe_c], jnp.where(cand >= 0, x2[safe_c], 0.0),
+                cand, backend=cfg.backend,
+            )                                           # (qb, E*k)
         # pool-k-th prefilter + partial top-C, then the sort-free bounded
         # merge (dedup by id; accepted slots come back unexpanded)
         cd, ci = ops.knn_join_select(
@@ -308,6 +369,19 @@ def _search_block(
         cond_fn, round_fn,
         (pool.dist, pool.idx, pool.new, jnp.zeros((), jnp.int32)),
     )
+    if quant:
+        # stage two: exact fp32 re-rank of the surviving pool with the
+        # EXISTING fp32 kernel — quantization decided pool membership
+        # (bounded recall noise), never the returned distances/order
+        safe_p = jnp.clip(pool_i, 0, n - 1)
+        dex = ops.knn_search_dists(
+            q, q2, x[safe_p], jnp.where(pool_i >= 0, x2[safe_p], 0.0),
+            pool_i, backend=cfg.backend,
+        )                                               # (qb, beam)
+        return ops.knn_join_select(
+            dex, pool_i, jnp.full((qb,), jnp.inf, jnp.float32), c=k_out,
+            backend=cfg.backend,
+        )
     return pool_d[:, :k_out], pool_i[:, :k_out]
 
 

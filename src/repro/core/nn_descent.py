@@ -36,9 +36,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import heap, selection
+from repro.core import heap, quantize, selection
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
+from repro.core.quantize import QuantizedStore
 from repro.core.reorder import apply_permutation, greedy_reorder
 from repro.kernels import ops
 
@@ -70,6 +71,16 @@ class DescentConfig:
                                # buffer (0 = 2*C); overflow beyond it is
                                # dropped (bounded-buffer sampling noise,
                                # like every other buffer in NN-Descent)
+    precision: str = "f32"     # f32 | bf16 | int8 — candidate-SCORING
+                               # dtype of the sampled local joins
+                               # (kernels/l2_quant.py over a quantized
+                               # corpus mirror). Quantized builds re-rank
+                               # every surviving list fp32 after the
+                               # sampled iterations (rerank_lists) and run
+                               # the terminal polish rounds fp32, so the
+                               # returned graph distances stay exact.
+                               # backend="ref" (the lexsort parity oracle)
+                               # is always fp32 and ignores this knob.
 
     @property
     def rho_k(self) -> int:
@@ -163,22 +174,41 @@ def local_join_fused(
     cn: jax.Array,         # (n, Cn) new candidates
     co: jax.Array,         # (n, Co) old candidates
     cfg: DescentConfig,
+    qs: QuantizedStore | None = None,   # quantized corpus mirror
 ):
     """Fused local join + update routing (no flattened pair list, no
     global lexsort): blocked pair-distance kernel -> incidence inversion
     -> per-receiver gather + prefiltered top-merge_k select kernel ->
-    chunked block merge. Returns (nl, accepted, evals)."""
+    chunked block merge. Returns (nl, accepted, evals).
+
+    With ``qs`` given and ``cfg.precision`` quantized, the pair tensor is
+    scored by the int8/bf16 kernel over the quantized rows (2-4x fewer
+    gathered bytes per candidate) — the build face of the two-stage path;
+    the driver re-ranks the final lists fp32 (``rerank_lists``)."""
     n, k = nl.idx.shape
     cands = jnp.concatenate([cn, co], axis=1)        # (n, C)
     c_all = cands.shape[1]
     valid = cands >= 0
     safe = jnp.where(valid, cands, 0)
-    xg = x[safe]                                     # (n, C, dp)
-    x2g = jnp.where(valid, x2[safe], 0.0)
     ids = jnp.where(valid, cands, -1)
-    dists, ev = ops.knn_join_dists(
-        xg, x2g, ids, cn=cn.shape[1], backend=cfg.backend
-    )                                                # (n, C, C), (n,)
+    if cfg.precision != "f32" and qs is not None:
+        x2g = jnp.where(valid, qs.x2[safe], 0.0)
+        if cfg.precision == "int8":
+            dists, ev = ops.knn_join_dists_q8(
+                qs.data[safe], qs.scale[safe], x2g, ids, cn=cn.shape[1],
+                backend=cfg.backend,
+            )                                        # (n, C, C), (n,)
+        else:
+            dists, ev = ops.knn_join_dists_bf16(
+                qs.data[safe], x2g, ids, cn=cn.shape[1],
+                backend=cfg.backend,
+            )
+    else:
+        xg = x[safe]                                 # (n, C, dp)
+        x2g = jnp.where(valid, x2[safe], 0.0)
+        dists, ev = ops.knn_join_dists(
+            xg, x2g, ids, cn=cn.shape[1], backend=cfg.backend
+        )                                            # (n, C, C), (n,)
 
     kth = nl.dist[:, -1]
     s_cap = cfg.join_src or 2 * c_all
@@ -231,6 +261,7 @@ def nn_descent_iteration(
     x2: jax.Array,         # (n,) cached squared norms (beyond-paper reuse)
     nl: NeighborLists,
     cfg: DescentConfig,
+    qs: QuantizedStore | None = None,   # quantized mirror (precision != f32)
 ):
     n, k = nl.idx.shape
     cands = _SELECT[cfg.selection](key, nl, cfg.rho_k)
@@ -239,7 +270,7 @@ def nn_descent_iteration(
     cn = cands.new_idx          # (n, Cn)
     co = cands.old_idx          # (n, Co)
     if cfg.backend != "ref":
-        return local_join_fused(x, x2, nl, cn, co, cfg)
+        return local_join_fused(x, x2, nl, cn, co, cfg, qs)
     vn = cn >= 0
     vo = co >= 0
     xg_n = x[jnp.where(vn, cn, 0)]
@@ -335,6 +366,33 @@ def polish_iteration(
     return nl, jnp.sum(upd), evals
 
 
+@functools.partial(jax.jit, static_argnames=("backend",))
+def rerank_lists(
+    x: jax.Array,          # (n, d) — feature-padded
+    x2: jax.Array,         # (n,) cached squared norms
+    nl: NeighborLists,
+    backend: str = "auto",
+):
+    """Exact fp32 re-rank of every neighbor list: recompute d(row, idx)
+    with the EXISTING fp32 serving kernel (one (n, k) blocked tile) and
+    re-sort each row. The second stage of a quantized build — quantized
+    scoring decides which edges survive (bounded recall noise), this pass
+    makes the stored distances and within-row order exact before the fp32
+    polish rounds extend them. Cost: n*k distance evaluations."""
+    n, k = nl.idx.shape
+    safe = jnp.clip(nl.idx, 0, n - 1)
+    dd = ops.knn_search_dists(
+        x, x2, x[safe], jnp.where(nl.idx >= 0, x2[safe], 0.0), nl.idx,
+        backend=backend,
+    )                                                 # (n, k)
+    order = jnp.argsort(dd, axis=1, stable=True)      # +inf (invalid) last
+    return NeighborLists(
+        jnp.take_along_axis(dd, order, axis=1),
+        jnp.take_along_axis(nl.idx, order, axis=1),
+        jnp.take_along_axis(nl.new, order, axis=1),
+    )
+
+
 def build_knn_graph(
     x: jax.Array,
     k: int = 20,
@@ -356,6 +414,16 @@ def build_knn_graph(
     xp = pad_features(x.astype(jnp.float32))
     x2 = jnp.sum(xp * xp, axis=1)
 
+    # two-stage quantized build: the sampled joins score on a quantized
+    # corpus mirror (at the mirror's own width — the fp32 layout's zero
+    # feature padding is dropped); rerank_lists + the polish rounds
+    # restore exact fp32
+    quant = cfg.precision != "f32" and cfg.backend != "ref"
+    qs = (quantize.quantize_corpus(
+        xp, cfg.precision,
+        width=quantize.mirror_width(x.shape[1], xp.shape[1]))
+        if quant else None)
+
     k_init, key = jax.random.split(key)
     nl = heap.init_random_with_dists(k_init, xp, cfg.k)
     stats = DescentStats(dist_evals=n * cfg.k)
@@ -365,7 +433,7 @@ def build_knn_graph(
     updates = []
     for it in range(cfg.max_iters):
         key, k_it = jax.random.split(key)
-        nl, upd, ev = nn_descent_iteration(k_it, xp, x2, nl, cfg)
+        nl, upd, ev = nn_descent_iteration(k_it, xp, x2, nl, cfg, qs)
         upd = int(upd)
         stats.dist_evals += int(ev)
         updates.append(upd)
@@ -377,10 +445,22 @@ def build_knn_graph(
             xp, nl = apply_permutation(xp, nl, sigma, sigma_inv)
             x2 = x2[sigma_inv]
             perm = perm[sigma_inv]
+            if quant:
+                # per-row quantization permutes exactly — no requantize
+                qs = QuantizedStore(qs.data[sigma_inv],
+                                    qs.scale[sigma_inv],
+                                    qs.x2[sigma_inv])
             stats.reordered = True
         if upd <= cfg.delta * n * cfg.k:
             break
     stats.updates = tuple(updates)
+
+    # stage two of a quantized build: exact fp32 re-rank of the surviving
+    # lists, so the polish rounds below merge against exact distances and
+    # the returned graph never carries a quantized value
+    if quant:
+        nl = rerank_lists(xp, x2, nl, cfg.backend)
+        stats.dist_evals += n * cfg.k
 
     # terminal polish (see DescentConfig.polish / polish_iteration)
     polish_updates = []

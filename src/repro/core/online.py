@@ -56,10 +56,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import heap
+from repro.core import heap, quantize
 from repro.core.graph_search import SearchConfig, expand_frontier, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
+from repro.core.quantize import QuantizedStore
 from repro.core.nn_descent import (
     DescentConfig,
     DescentStats,
@@ -100,6 +101,18 @@ class OnlineConfig:
                               # source-incidence buffer (0 = 2*merge_mult*k;
                               # overflow is dropped — bounded-buffer
                               # sampling noise, cf. DescentConfig.join_src)
+    precision: str = "f32"    # f32 | bf16 | int8 — the store keeps a
+                              # quantized mirror (core/quantize.py) that
+                              # candidate SCORING reads on the query and
+                              # insert-seeding search paths (two-stage:
+                              # the final pool re-ranks fp32, so returned
+                              # distances stay exact). The mirror updates
+                              # incrementally with inserts and grows with
+                              # the capacity doubling; the localized
+                              # refinement joins stay fp32 (they touch
+                              # O(frontier) rows — bandwidth is not their
+                              # bottleneck; the graph's stored distances
+                              # stay exact for free).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +127,8 @@ class MutableKNNStore:
     n: int                # allocation high-water mark
     d: int                # logical (unpadded) feature dim
     cfg: OnlineConfig
+    qs: QuantizedStore | None = None  # quantized mirror of ``x``
+                                      # (cfg.precision != "f32" only)
 
     @property
     def capacity(self) -> int:
@@ -159,9 +174,18 @@ class MutableKNNStore:
             d=d,
             cfg=cfg,
         )
-        return dataclasses.replace(
+        store = dataclasses.replace(
             store, x2=jnp.sum(store.x * store.x, axis=1)
         )
+        if cfg.precision != "f32":
+            store = dataclasses.replace(
+                store,
+                qs=quantize.quantize_corpus(
+                    store.x, cfg.precision,
+                    width=quantize.mirror_width(d, store.x.shape[1]),
+                ),
+            )
+        return store
 
     @classmethod
     def build(
@@ -199,11 +223,12 @@ class MutableKNNStore:
             cfg = SearchConfig(
                 beam=beam, rounds=rounds, expand=self.cfg.seed_expand,
                 q_block=self.cfg.q_block, backend=self.cfg.backend,
+                precision=self.cfg.precision,
             )
         q = _pad_to(queries, self.x.shape[1])
         return graph_search(
             self.x, self.nl.idx, q, k_out=k_out, key=key,
-            alive=self.alive, x2=self.x2, cfg=cfg,
+            alive=self.alive, x2=self.x2, cfg=cfg, qstore=self.qs,
         )
 
 
@@ -242,6 +267,8 @@ def _grown(store: MutableKNNStore, need: int) -> MutableKNNStore:
     dp = store.x.shape[1]
     return dataclasses.replace(
         store,
+        qs=(None if store.qs is None
+            else quantize.grow(store.qs, new_cap, _FILL)),
         x=jnp.concatenate(
             [store.x, jnp.full((pad, dp), _FILL, jnp.float32)]
         ),
@@ -470,21 +497,27 @@ def knn_insert(
     scfg = SearchConfig(
         beam=beam, rounds=cfg.seed_rounds, expand=cfg.seed_expand,
         q_block=cfg.q_block, backend=cfg.backend,
+        precision=cfg.precision,
     )
     seed_d, seed_i = graph_search(
         store.x, store.nl.idx, q, k_out=k, key=key, alive=store.alive,
-        x2=store.x2, cfg=scfg,
+        x2=store.x2, cfg=scfg, qstore=store.qs,
     )
     # analytic eval bound: beam entry distances + k per expanded node (the
     # fused path expands in chunks of seed_expand, so round the budget up
-    # to whole rounds; backend="ref" expands exactly seed_rounds nodes)
-    expanded = (cfg.seed_rounds if cfg.backend == "ref"
-                else scfg.n_rounds * cfg.seed_expand)
-    seed_evals = m * (beam + expanded * k)
+    # to whole rounds; backend="ref" expands exactly seed_rounds nodes);
+    # a quantized seeding search re-ranks its final pool fp32 — beam more
+    scfg_quant = scfg.precision != "f32" and scfg.backend != "ref"
+    seed_evals = m * ((2 if scfg_quant else 1) * beam
+                     + (cfg.seed_rounds if cfg.backend == "ref"
+                        else scfg.n_rounds * cfg.seed_expand) * k)
 
     x, x2, nl, alive, evals, upds, f_rows, p_rows = _insert_stitch(
         store.x, store.x2, store.nl, store.alive, q, ids, seed_d, seed_i,
         cfg,
+    )
+    qs = store.qs if store.qs is None else quantize.update_rows(
+        store.qs, ids, q
     )
     stats = DescentStats(
         iters=cfg.refine_rounds,
@@ -495,7 +528,7 @@ def knn_insert(
     )
     return (
         dataclasses.replace(
-            store, x=x, x2=x2, nl=nl, alive=alive, n=store.n + m
+            store, x=x, x2=x2, nl=nl, alive=alive, n=store.n + m, qs=qs
         ),
         stats,
     )

@@ -1,0 +1,168 @@
+"""Mixed-precision datastore for the two-stage distance path.
+
+The paper's restriction to l2 makes blocked distance evaluation possible
+(§3.3); storing the corpus in int8 or bf16 makes the same blocks 2-4x
+denser in arithmetic and 2-4x lighter in memory traffic — the GPU-scale
+kNN-graph trick (Wang et al.) applied to this repo's serving, build and
+online hot paths. The contract everywhere is **two-stage**: candidate
+*scoring* runs on the quantized rows (kernels/l2_quant.py), and the
+surviving candidates are re-ranked with the exact fp32 kernel before
+anything is returned — quantization can cost a bounded sliver of recall
+(a true neighbor missing the candidate pool) but never a wrong distance.
+
+Quantization is symmetric per-row int8 — the same scheme as the gradient
+compressor (train/compression.py), generalized here to row-blocked scales
+(``quantize_sym_int8``; the compressor's flat per-block layout is the
+``block=None`` case applied to its reshaped buffer). bf16 is the second
+mode: no scales, half the bytes of fp32, and native MXU inputs.
+
+A ``QuantizedStore`` is the quantized mirror of a feature array (corpus
+rows or a query block): stored rows, per-row dequant scales, and cached
+squared norms OF THE STORED (quantized) values. The norms must come from
+the quantized values, not the fp32 originals, so the norm-expansion form
+``q2 + c2 - 2*s_q*s_c*(q_i8 . c_i8)`` is self-consistent: the quantized
+distance of a point to itself is exactly 0 and near-identical points
+cannot go negative beyond rounding (the cancellation guard, cf.
+kernels/ref.py pairwise_sq_l2).
+
+The store is capacity-doubling compatible with core/online.py's
+``MutableKNNStore``: rows scatter-update in place (``update_rows``) and
+capacity grows by quantizing the same ``_FILL`` rows the fp32 arrays pad
+with (``grow``) — shapes change only on a doubling, so jitted consumers
+recompile only when the fp32 store does.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import ceil_to
+
+
+_EPS = 1e-30     # scale floor: all-zero rows dequantize to zero, not NaN
+
+
+def mirror_width(d: int, dp: int) -> int:
+    """Feature width of a quantized mirror of a (n, dp) fp32 array whose
+    logical dim is ``d`` (columns d..dp are the zero padding of
+    layout.pad_features, which contributes nothing to any distance).
+
+    The fp32 serving layout pads to the 128-lane quantum (layout.py); the
+    mirror keeps only the logical dims padded to the int8 tile quantum —
+    the full 128 lanes on TPU (Pallas int8 tiles are (32, 128)
+    layout-native), a 32-column quantum elsewhere (the oracle path has no
+    lane constraint, and narrower rows are pure bandwidth/flop savings —
+    at d=64 the fp32 path tiles 128 columns, the mirror 64: the scoring
+    stage does half the arithmetic on top of the 4x byte cut). Never
+    wider than the fp32 array itself.
+    """
+    quantum = 128 if jax.default_backend() == "tpu" else 32
+    return min(dp, ceil_to(max(d, 1), quantum))
+
+
+def quantize_sym_int8(x: jax.Array, *, block: int | None = None):
+    """Symmetric int8 quantization of (n, d) rows in feature-axis blocks.
+
+    ``block=None`` uses one block per row (per-row scales, the datastore
+    layout); otherwise ``block`` must divide d and scales are per
+    (row, feature-block). Returns (q (n, d) int8, scale (n, d/block) f32)
+    with scale = max|x| / 127 per block (floored at 1e-30) — the same
+    scheme as train/compression.py's flat gradient quantizer, which is
+    this function applied per row of its (n_blocks, block) buffer.
+    """
+    x = x.astype(jnp.float32)
+    n, d = x.shape
+    if block is None:
+        block = d
+    if d % block:
+        raise ValueError(f"block {block} does not divide feature dim {d}")
+    xb = x.reshape(n, d // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=2) / 127.0           # (n, d/block)
+    scale = jnp.maximum(scale, _EPS)
+    q = jnp.clip(jnp.round(xb / scale[:, :, None]), -127, 127)
+    return q.reshape(n, d).astype(jnp.int8), scale
+
+
+class QuantizedStore(NamedTuple):
+    """Quantized mirror of a feature array (see module docstring).
+
+    ``data`` dtype selects the mode: int8 rows carry per-row fp32 dequant
+    scales; bf16 rows carry all-ones scales (kept so both modes share one
+    epilogue formula and one pytree shape). ``x2`` is the squared norm of
+    the stored (quantized) rows, NOT of the fp32 originals.
+    """
+
+    data: jax.Array    # (cap, dp) int8 | bfloat16 stored rows
+    scale: jax.Array   # (cap,) f32 per-row dequant scale (ones for bf16)
+    x2: jax.Array      # (cap,) f32 squared norms of the STORED rows
+
+    @property
+    def mode(self) -> str:
+        return "int8" if self.data.dtype == jnp.int8 else "bf16"
+
+
+def quantize_corpus(x: jax.Array, mode: str,
+                    width: int | None = None) -> QuantizedStore:
+    """Quantize feature rows (n, dp) into a QuantizedStore. jit-safe.
+
+    ``width`` (see ``mirror_width``) stores only the leading ``width``
+    columns — callers that know the logical dim drop the fp32 layout's
+    zero padding; columns beyond ``width`` MUST be zero on rows whose
+    distances matter (true for layout.pad_features padding; the online
+    store's fill rows violate it harmlessly — they are masked everywhere
+    and stay enormous at any width)."""
+    x = x.astype(jnp.float32)
+    if width is not None and width < x.shape[1]:
+        x = x[:, :width]
+    if mode == "int8":
+        q, scale = quantize_sym_int8(x)
+        scale = scale[:, 0]
+        qf = q.astype(jnp.float32)
+        x2 = (scale * scale) * jnp.sum(qf * qf, axis=1)
+        return QuantizedStore(q, scale, x2)
+    if mode == "bf16":
+        b = x.astype(jnp.bfloat16)
+        bf = b.astype(jnp.float32)
+        return QuantizedStore(
+            b, jnp.ones((x.shape[0],), jnp.float32), jnp.sum(bf * bf, axis=1)
+        )
+    raise ValueError(f"unknown quantization mode {mode!r} (int8 | bf16)")
+
+
+def dequantize(qs: QuantizedStore) -> jax.Array:
+    """Stored rows back to f32 (the value the quantized kernels 'see')."""
+    return qs.data.astype(jnp.float32) * qs.scale[:, None]
+
+
+def update_rows(qs: QuantizedStore, rows: jax.Array,
+                x_new: jax.Array) -> QuantizedStore:
+    """Scatter-quantize ``x_new`` (m, dp) into the store at ``rows`` (m,)
+    — the online insert's incremental mirror update (rows are sliced to
+    the mirror's width). jit-safe; -1 rows are dropped."""
+    upd = quantize_corpus(x_new, qs.mode, width=qs.data.shape[1])
+    tgt = jnp.where(rows >= 0, rows, qs.data.shape[0])
+    return QuantizedStore(
+        qs.data.at[tgt].set(upd.data, mode="drop"),
+        qs.scale.at[tgt].set(upd.scale, mode="drop"),
+        qs.x2.at[tgt].set(upd.x2, mode="drop"),
+    )
+
+
+def grow(qs: QuantizedStore, new_cap: int, fill: float) -> QuantizedStore:
+    """Capacity-double alongside MutableKNNStore: pad to ``new_cap`` rows
+    holding the quantized form of the fp32 store's ``fill`` coordinates
+    (far-away rows that are never anyone's neighbor; masked by alive/ids
+    everywhere regardless)."""
+    cap, w = qs.data.shape
+    if new_cap <= cap:
+        return qs
+    pad = quantize_corpus(
+        jnp.full((new_cap - cap, w), fill, jnp.float32), qs.mode
+    )
+    return QuantizedStore(
+        jnp.concatenate([qs.data, pad.data]),
+        jnp.concatenate([qs.scale, pad.scale]),
+        jnp.concatenate([qs.x2, pad.x2]),
+    )

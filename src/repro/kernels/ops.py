@@ -25,6 +25,12 @@ from repro.kernels.knn_merge import (
 )
 from repro.kernels.knn_search import knn_search_dists_blocked
 from repro.kernels.l2_blocked import pairwise_sq_l2_blocked
+from repro.kernels.l2_quant import (
+    knn_join_dists_bf16_blocked,
+    knn_join_dists_q8_blocked,
+    knn_search_dists_bf16_blocked,
+    knn_search_dists_q8_blocked,
+)
 
 
 def _on_tpu() -> bool:
@@ -105,6 +111,94 @@ def knn_search_dists(
     if backend == "interpret":
         return knn_search_dists_blocked(q, q2, cg, c2g, ids, interpret=True)
     return ref.knn_search_dists(q, q2, cg, c2g, ids)
+
+
+def knn_search_dists_q8(
+    qq: jax.Array,
+    qscale: jax.Array,
+    q2: jax.Array,
+    cq: jax.Array,
+    cscale: jax.Array,
+    c2g: jax.Array,
+    ids: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Quantized serving scoring tile (int8 rows + per-row fp32 scales):
+    (nq, W, dp) int8 gathered candidates -> (nq, W) masked sq-l2 with the
+    scale application and norm expansion fused into the epilogue."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_search_dists_q8_blocked(qq, qscale, q2, cq, cscale, c2g,
+                                           ids)
+    if backend == "interpret":
+        return knn_search_dists_q8_blocked(qq, qscale, q2, cq, cscale, c2g,
+                                           ids, interpret=True)
+    return ref.knn_search_dists_q8(qq, qscale, q2, cq, cscale, c2g, ids)
+
+
+def knn_search_dists_bf16(
+    q: jax.Array,
+    q2: jax.Array,
+    cg: jax.Array,
+    c2g: jax.Array,
+    ids: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """bf16 serving scoring tile: same contract as knn_search_dists with
+    bf16 operands fed to the MXU (fp32 accumulation)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_search_dists_bf16_blocked(q, q2, cg, c2g, ids)
+    if backend == "interpret":
+        return knn_search_dists_bf16_blocked(q, q2, cg, c2g, ids,
+                                             interpret=True)
+    return ref.knn_search_dists_bf16(q, q2, cg, c2g, ids)
+
+
+def knn_join_dists_q8(
+    xq: jax.Array,
+    xscale: jax.Array,
+    x2g: jax.Array,
+    ids: jax.Array,
+    *,
+    cn: int,
+    backend: str = "auto",
+):
+    """Quantized local-join scoring tensor (int8): (n, C, dp) int8
+    gathered candidates -> ((n, C, C) masked sq-l2, (n,) valid-pair
+    counts). Same mask/evals contract as knn_join_dists."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_join_dists_q8_blocked(xq, xscale, x2g, ids, cn=cn)
+    if backend == "interpret":
+        return knn_join_dists_q8_blocked(xq, xscale, x2g, ids, cn=cn,
+                                         interpret=True)
+    return ref.knn_join_dists_q8(xq, xscale, x2g, ids, cn)
+
+
+def knn_join_dists_bf16(
+    xg: jax.Array,
+    x2g: jax.Array,
+    ids: jax.Array,
+    *,
+    cn: int,
+    backend: str = "auto",
+):
+    """bf16 local-join scoring tensor: same contract as knn_join_dists
+    with bf16 operands fed to the MXU (fp32 accumulation)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return knn_join_dists_bf16_blocked(xg, x2g, ids, cn=cn)
+    if backend == "interpret":
+        return knn_join_dists_bf16_blocked(xg, x2g, ids, cn=cn,
+                                           interpret=True)
+    return ref.knn_join_dists_bf16(xg, x2g, ids, cn)
 
 
 def knn_merge(

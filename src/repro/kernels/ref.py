@@ -48,6 +48,19 @@ def pairwise_sq_l2(a: jax.Array, b: jax.Array) -> jax.Array:
 _BIG = float(jnp.finfo(jnp.float32).max)
 
 
+def _join_ok(ids: jax.Array, cn: int) -> jax.Array:
+    """Join validity, shared by every join-distance oracle: at least one
+    "new" endpoint, distinct slots, both occupied, distinct node ids."""
+    c = ids.shape[1]
+    slot = jnp.arange(c)
+    ok = (slot[:, None] < cn) | (slot[None, :] < cn)
+    ok &= slot[:, None] != slot[None, :]
+    ok = ok[None]
+    ok &= (ids[:, :, None] >= 0) & (ids[:, None, :] >= 0)
+    ok &= ids[:, :, None] != ids[:, None, :]
+    return ok
+
+
 def knn_join_dists(
     xg: jax.Array,     # (n, C, dp) gathered candidate features
     x2g: jax.Array,    # (n, C) cached squared norms (0 on invalid slots)
@@ -59,18 +72,12 @@ def knn_join_dists(
     distinct ids; invalid pairs are +inf. Returns (dists (n, C, C),
     evals (n,) int32 — valid unordered pairs). Oracle for
     knn_join_dists_blocked."""
-    c = ids.shape[1]
     ab = jnp.einsum(
         "ncd,ned->nce", xg.astype(jnp.float32), xg.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
     dd = x2g[:, :, None] + x2g[:, None, :] - 2.0 * ab
-    slot = jnp.arange(c)
-    ok = (slot[:, None] < cn) | (slot[None, :] < cn)
-    ok &= slot[:, None] != slot[None, :]
-    ok = ok[None]
-    ok &= (ids[:, :, None] >= 0) & (ids[:, None, :] >= 0)
-    ok &= ids[:, :, None] != ids[:, None, :]
+    ok = _join_ok(ids, cn)
     out = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
     evals = jnp.sum(ok.astype(jnp.int32), axis=(1, 2)) // 2
     return out, evals
@@ -121,6 +128,81 @@ def knn_search_dists(
     )
     dd = q2[:, None] + c2g - 2.0 * ab
     return jnp.where(ids >= 0, jnp.maximum(dd, 0.0), jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Quantized scoring tiles (two-stage distance path) — oracles for
+# kernels/l2_quant.py. The int8 cross terms accumulate in fp32 here (the
+# fast CPU path: the products are integers, exact in fp32 while the
+# running sum stays under 2^24 — dp <= 1040, every shipped dim), which is
+# bit-identical to the kernels' int32 MXU accumulation in that regime.
+# ---------------------------------------------------------------------------
+
+def knn_search_dists_q8(
+    qq: jax.Array,     # (nq, dp) int8 query rows
+    qscale: jax.Array,  # (nq,) query dequant scales
+    q2: jax.Array,     # (nq,) quantized-query squared norms
+    cq: jax.Array,     # (nq, W, dp) int8 gathered candidate rows
+    cscale: jax.Array,  # (nq, W) candidate dequant scales
+    c2g: jax.Array,    # (nq, W) cached quantized-candidate squared norms
+    ids: jax.Array,    # (nq, W) candidate ids, -1 = invalid (incl. dead)
+) -> jax.Array:
+    """int8 query-time candidate distance tile with the dequant scales
+    and norm expansion in the epilogue. Oracle for
+    knn_search_dists_q8_blocked."""
+    ab = jnp.einsum(
+        "qd,qwd->qw", qq.astype(jnp.float32), cq.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    dd = q2[:, None] + c2g - 2.0 * (qscale[:, None] * cscale) * ab
+    return jnp.where(ids >= 0, jnp.maximum(dd, 0.0), jnp.inf)
+
+
+def knn_search_dists_bf16(
+    q: jax.Array,      # (nq, dp) bf16 query rows
+    q2: jax.Array,     # (nq,) bf16-rounded-query squared norms (f32)
+    cg: jax.Array,     # (nq, W, dp) bf16 gathered candidate rows
+    c2g: jax.Array,    # (nq, W) cached bf16-candidate squared norms
+    ids: jax.Array,    # (nq, W) candidate ids, -1 = invalid (incl. dead)
+) -> jax.Array:
+    """bf16 query-time candidate distance tile, fp32 accumulation: the
+    fp32 oracle applied to bf16-rounded rows (the oracle upcasts its
+    operands anyway — only the kernel's MXU operand dtype differs).
+    Oracle for knn_search_dists_bf16_blocked."""
+    return knn_search_dists(q, q2, cg, c2g, ids)
+
+
+def knn_join_dists_q8(
+    xq: jax.Array,     # (n, C, dp) int8 gathered candidate rows
+    xscale: jax.Array,  # (n, C) candidate dequant scales
+    x2g: jax.Array,    # (n, C) cached quantized squared norms (0 invalid)
+    ids: jax.Array,    # (n, C) candidate node ids, -1 = invalid slot
+    cn: int,           # width of the "new" candidate prefix
+) -> tuple[jax.Array, jax.Array]:
+    """int8 local-join pair-distance tensor. Oracle for
+    knn_join_dists_q8_blocked; same mask/evals contract as
+    knn_join_dists."""
+    xf = xq.astype(jnp.float32)
+    ab = jnp.einsum("ncd,ned->nce", xf, xf,
+                    preferred_element_type=jnp.float32)
+    dd = x2g[:, :, None] + x2g[:, None, :] - 2.0 * (
+        xscale[:, :, None] * xscale[:, None, :]
+    ) * ab
+    ok = _join_ok(ids, cn)
+    out = jnp.where(ok, jnp.maximum(dd, 0.0), jnp.inf)
+    return out, jnp.sum(ok.astype(jnp.int32), axis=(1, 2)) // 2
+
+
+def knn_join_dists_bf16(
+    xg: jax.Array,     # (n, C, dp) bf16 gathered candidate rows
+    x2g: jax.Array,    # (n, C) cached bf16 squared norms (0 invalid)
+    ids: jax.Array,    # (n, C) candidate node ids, -1 = invalid slot
+    cn: int,
+) -> tuple[jax.Array, jax.Array]:
+    """bf16 local-join pair-distance tensor: the fp32 oracle applied to
+    bf16-rounded rows (see knn_search_dists_bf16). Oracle for
+    knn_join_dists_bf16_blocked."""
+    return knn_join_dists(xg, x2g, ids, cn)
 
 
 # ---------------------------------------------------------------------------

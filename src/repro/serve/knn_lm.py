@@ -30,6 +30,7 @@ from repro.core.online import (
     knn_delete,
     knn_insert,
 )
+from repro.core.quantize import QuantizedStore, quantize_corpus
 
 
 @dataclasses.dataclass
@@ -40,19 +41,33 @@ class KNNDatastore:
     build_stats: dict
     # serving-search knobs (fused batched search; None = per-call default)
     search_cfg: SearchConfig | None = None
+    # cached quantized mirror of ``keys`` for the two-stage scoring path
+    # (built when ``build(precision=...)`` is quantized; the search
+    # re-ranks fp32, so retrieval distances stay exact)
+    qstore: QuantizedStore | None = None
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
               cfg: DescentConfig | None = None,
+              precision: str = "f32",
               key: jax.Array | None = None):
+        """``precision`` selects the serving-time candidate-scoring dtype
+        (SearchConfig.precision): quantized modes precompute the corpus
+        mirror here so every knn_logits call scores on int8/bf16 rows.
+        The precision is carried by the mirror itself (knn_logits derives
+        a quantized SearchConfig from it per call), NOT by pinning
+        ``search_cfg`` — so per-call ``beam``/``rounds`` keep working."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
         dist, idx, st = build_knn_graph(keys, k=k, cfg=cfg, key=key)
+        keys = keys.astype(jnp.float32)
         return cls(
-            keys=keys.astype(jnp.float32),
+            keys=keys,
             values=values,
             graph_idx=idx,
             build_stats={"iters": st.iters, "dist_evals": st.dist_evals,
                          "reordered": st.reordered},
+            qstore=(None if precision == "f32"
+                    else quantize_corpus(keys, precision)),
         )
 
 
@@ -76,6 +91,7 @@ class MutableKNNDatastore:
               online_cfg: OnlineConfig | None = None,
               frontier_chunk: int | None = None,
               q_block: int | None = None,
+              precision: str | None = None,
               key: jax.Array | None = None):
         """``frontier_chunk`` overrides the online store's frontier chunk
         size (OnlineConfig.chunk): streamed decode-time inserts touch a
@@ -84,7 +100,10 @@ class MutableKNNDatastore:
         capture hook in serve/scheduler.py). ``q_block`` likewise
         overrides the fused search's query-block quantum
         (OnlineConfig.q_block): the search compiles once per block shape,
-        so serving stacks match it to their decode batch."""
+        so serving stacks match it to their decode batch. ``precision``
+        overrides OnlineConfig.precision: quantized modes make the store
+        keep an int8/bf16 mirror that the query and insert-seeding
+        searches score on (fp32 re-rank — exact retrieval distances)."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
         online_cfg = online_cfg or OnlineConfig()
         if frontier_chunk is not None:
@@ -92,6 +111,9 @@ class MutableKNNDatastore:
                                              chunk=frontier_chunk)
         if q_block is not None:
             online_cfg = dataclasses.replace(online_cfg, q_block=q_block)
+        if precision is not None:
+            online_cfg = dataclasses.replace(online_cfg,
+                                             precision=precision)
         store, st = MutableKNNStore.build(
             keys, k=k, cfg=online_cfg, descent=cfg, key=key)
         vals = jnp.zeros((store.capacity,), values.dtype)
@@ -139,15 +161,21 @@ def knn_logits(
     explore different entries. When None, entries derive from the query
     batch content (see core/graph_search), never from a shared constant.
     ``cfg`` (or the datastore's ``search_cfg``) selects the fused batched
-    search knobs; default is the fused path with legacy beam/rounds."""
+    search knobs; default is the fused path with legacy beam/rounds. A
+    datastore built with a quantized ``precision`` carries the mode on
+    its cached mirror: with no pinned cfg, the two-stage search runs at
+    the CALL's beam/rounds (nothing is silently overridden)."""
     cfg = cfg or ds.search_cfg
+    if cfg is None and getattr(ds, "qstore", None) is not None:
+        cfg = SearchConfig(beam=beam, rounds=rounds,
+                           precision=ds.qstore.mode)
     if isinstance(ds, MutableKNNDatastore):
         dist, idx = ds.store.search(queries, k_out=k, beam=beam,
                                     rounds=rounds, key=key, cfg=cfg)
     else:
         dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
                                  k_out=k, beam=beam, rounds=rounds,
-                                 key=key, cfg=cfg)
+                                 key=key, cfg=cfg, qstore=ds.qstore)
     w = jax.nn.softmax(-dist / temperature, axis=-1)        # (q, k)
     vals = ds.values[jnp.clip(idx, 0, ds.values.shape[0] - 1)]
     probs = jnp.zeros((queries.shape[0], vocab))

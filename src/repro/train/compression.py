@@ -23,6 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import quantize_sym_int8
+
 
 BLOCK = 256
 
@@ -36,12 +38,14 @@ def _pad_flat(x: jax.Array, block: int) -> tuple[jax.Array, int]:
 
 
 def quantize_int8(x: jax.Array, block: int = BLOCK):
-    """x (any shape) -> (q int8 (nb, block), scales f32 (nb, 1), meta)."""
+    """x (any shape) -> (q int8 (nb, block), scales f32 (nb, 1), meta).
+
+    The scale/round/clip core is the shared symmetric quantizer
+    (core/quantize.py) applied per row of the flattened (nb, block)
+    buffer — one block per row is exactly the per-block layout here.
+    """
     flat, pad = _pad_flat(x.astype(jnp.float32), block)
-    blocks = flat.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-30)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    q, scale = quantize_sym_int8(flat.reshape(-1, block))
     return q, scale, (x.shape, pad)
 
 

@@ -1,0 +1,455 @@
+"""Mixed-precision datastore + two-stage distance path (core/quantize.py,
+kernels/l2_quant.py, SearchConfig/DescentConfig/OnlineConfig.precision):
+quantize/dequantize round-trip error bounds, int8/bf16 kernel-vs-oracle
+parity on odd shapes and near-identical points (cancellation guard),
+two-stage search parity vs backend="ref" fp32 under tombstones, the
+returned-distances-stay-exact contract, and seeded int8 recall pins."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DescentConfig,
+    SearchConfig,
+    brute_force_knn,
+    build_knn_graph,
+    datasets,
+    dequantize,
+    quantize_corpus,
+    quantize_sym_int8,
+    recall_at_k,
+)
+from repro.core.graph_search import graph_search
+from repro.core.online import MutableKNNStore, OnlineConfig, knn_delete, knn_insert
+from repro.core.quantize import QuantizedStore, grow, update_rows
+from repro.kernels import ref
+from repro.kernels.l2_quant import (
+    knn_join_dists_bf16_blocked,
+    knn_join_dists_q8_blocked,
+    knn_search_dists_bf16_blocked,
+    knn_search_dists_q8_blocked,
+)
+
+K = 10
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize round-trip
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    """Symmetric per-row int8: |x - deq(q)| <= scale/2 elementwise, with
+    scale = max|row| / 127 (round-to-nearest), and the cached norms match
+    the dequantized rows exactly."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(37, 24).astype(np.float32) * 10.0)
+    qs = quantize_corpus(x, "int8")
+    deq = np.asarray(dequantize(qs))
+    scale = np.abs(np.asarray(x)).max(axis=1) / 127.0
+    err = np.abs(deq - np.asarray(x))
+    assert (err <= scale[:, None] * 0.5 + 1e-6).all(), err.max()
+    # norms are of the STORED rows (self-consistency of the expansion)
+    np.testing.assert_allclose(
+        np.asarray(qs.x2), (deq * deq).sum(axis=1), rtol=1e-5)
+
+
+def test_int8_roundtrip_blockwise_and_compression_layout():
+    """quantize_sym_int8 with feature blocks bounds error per block; the
+    gradient compressor's flat layout is the per-row case."""
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(8, 32).astype(np.float32))
+    q, scale = quantize_sym_int8(x, block=8)
+    assert q.shape == (8, 32) and scale.shape == (8, 4)
+    deq = np.asarray(q, np.float32).reshape(8, 4, 8) * np.asarray(
+        scale)[:, :, None]
+    err = np.abs(deq.reshape(8, 32) - np.asarray(x))
+    assert (err <= np.asarray(scale).repeat(8, axis=1) * 0.5 + 1e-6).all()
+    with pytest.raises(ValueError):
+        quantize_sym_int8(x, block=7)
+
+
+def test_bf16_roundtrip_error_bound():
+    """bf16 keeps 8 mantissa bits: relative error <= 2^-8 per element."""
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(16, 16).astype(np.float32) * 100.0)
+    qs = quantize_corpus(x, "bf16")
+    assert qs.mode == "bf16"
+    deq = np.asarray(dequantize(qs))
+    rel = np.abs(deq - np.asarray(x)) / np.maximum(np.abs(np.asarray(x)),
+                                                   1e-6)
+    assert rel.max() <= 2.0 ** -8, rel.max()
+
+
+def test_zero_rows_quantize_finite():
+    """All-zero rows hit the scale floor, not a division by zero."""
+    qs = quantize_corpus(jnp.zeros((4, 8)), "int8")
+    assert np.isfinite(np.asarray(qs.scale)).all()
+    np.testing.assert_array_equal(np.asarray(dequantize(qs)),
+                                  np.zeros((4, 8)))
+
+
+def test_update_rows_and_grow():
+    """The online-store mirror contract: scatter-quantize in place,
+    capacity growth pads with the fp32 store's fill rows."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(8, 16).astype(np.float32))
+    qs = quantize_corpus(x, "int8")
+    xn = jnp.asarray(rng.randn(2, 16).astype(np.float32))
+    qs2 = update_rows(qs, jnp.asarray([1, 5]), xn)
+    ref_rows = quantize_corpus(xn, "int8")
+    np.testing.assert_array_equal(np.asarray(qs2.data[1]),
+                                  np.asarray(ref_rows.data[0]))
+    np.testing.assert_array_equal(np.asarray(qs2.data[5]),
+                                  np.asarray(ref_rows.data[1]))
+    np.testing.assert_array_equal(np.asarray(qs2.data[0]),
+                                  np.asarray(qs.data[0]))
+    # -1 rows are dropped, not scattered
+    qs3 = update_rows(qs, jnp.asarray([-1, 2]), xn)
+    np.testing.assert_array_equal(np.asarray(qs3.data[0]),
+                                  np.asarray(qs.data[0]))
+    g = grow(qs, 16, 1e6)
+    assert g.data.shape == (16, 16)
+    np.testing.assert_array_equal(np.asarray(g.data[:8]),
+                                  np.asarray(qs.data))
+    assert float(g.x2[12]) > 1e11     # fill rows stay far away
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity (interpret mode), odd shapes + cancellation
+# ---------------------------------------------------------------------------
+
+def _quant_rows(rng, n, dp):
+    x = rng.randn(n, dp).astype(np.float32)
+    return quantize_corpus(jnp.asarray(x), "int8")
+
+
+@pytest.mark.parametrize("nq,w,dp,tq", [
+    (37, 23, 16, 16),    # nq not a multiple of the query block, odd W
+    (16, 64, 32, 16),    # exact blocks
+    (5, 7, 8, 8),        # single padded block
+])
+def test_search_q8_kernel_matches_oracle(nq, w, dp, tq):
+    rng = np.random.RandomState(nq + w)
+    qq = _quant_rows(rng, nq, dp)
+    cr = _quant_rows(rng, nq * w, dp)
+    ids = jnp.asarray(rng.randint(-1, 99, size=(nq, w)).astype(np.int32))
+    ids = ids.at[2 % nq].set(-1)
+    lin = jnp.arange(nq * w).reshape(nq, w)
+    cq, cs = cr.data[lin], cr.scale[lin]
+    c2 = jnp.where(ids >= 0, cr.x2[lin], 0.0)
+    rd = ref.knn_search_dists_q8(qq.data, qq.scale, qq.x2, cq, cs, c2, ids)
+    kd = knn_search_dists_q8_blocked(qq.data, qq.scale, qq.x2, cq, cs, c2,
+                                     ids, tq=tq, interpret=True)
+    np.testing.assert_array_equal(np.isinf(rd), np.isinf(kd))
+    np.testing.assert_allclose(np.where(np.isinf(rd), 0.0, rd),
+                               np.where(np.isinf(kd), 0.0, kd),
+                               rtol=1e-5, atol=1e-4)
+    assert bool(jnp.isinf(kd[2 % nq]).all())
+
+
+@pytest.mark.parametrize("nq,w,dp,tq", [(37, 23, 16, 16), (5, 7, 8, 8)])
+def test_search_bf16_kernel_matches_oracle(nq, w, dp, tq):
+    rng = np.random.RandomState(nq)
+    q = quantize_corpus(jnp.asarray(rng.randn(nq, dp).astype(np.float32)),
+                        "bf16")
+    cr = quantize_corpus(
+        jnp.asarray(rng.randn(nq * w, dp).astype(np.float32)), "bf16")
+    ids = jnp.asarray(rng.randint(-1, 99, size=(nq, w)).astype(np.int32))
+    lin = jnp.arange(nq * w).reshape(nq, w)
+    cg = cr.data[lin]
+    c2 = jnp.where(ids >= 0, cr.x2[lin], 0.0)
+    rd = ref.knn_search_dists_bf16(q.data, q.x2, cg, c2, ids)
+    kd = knn_search_dists_bf16_blocked(q.data, q.x2, cg, c2, ids, tq=tq,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.isinf(rd), np.isinf(kd))
+    np.testing.assert_allclose(np.where(np.isinf(rd), 0.0, rd),
+                               np.where(np.isinf(kd), 0.0, kd),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,c,cn,dp,tb", [
+    (13, 9, 4, 16, 8),    # odd everything
+    (8, 6, 6, 8, 8),      # all-new prefix
+])
+def test_join_q8_kernel_matches_oracle(n, c, cn, dp, tb):
+    rng = np.random.RandomState(n + c)
+    rows = _quant_rows(rng, n * c, dp)
+    ids = jnp.asarray(rng.randint(-1, 50, size=(n, c)).astype(np.int32))
+    ids = ids.at[1].set(-1)                     # an all-invalid row
+    lin = jnp.arange(n * c).reshape(n, c)
+    xq, xs = rows.data[lin], rows.scale[lin]
+    x2g = jnp.where(ids >= 0, rows.x2[lin], 0.0)
+    rd, rev = ref.knn_join_dists_q8(xq, xs, x2g, ids, cn)
+    kd, kev = knn_join_dists_q8_blocked(xq, xs, x2g, ids, cn=cn, tb=tb,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(rev), np.asarray(kev))
+    np.testing.assert_array_equal(np.isinf(rd), np.isinf(kd))
+    np.testing.assert_allclose(np.where(np.isinf(rd), 0.0, rd),
+                               np.where(np.isinf(kd), 0.0, kd),
+                               rtol=1e-5, atol=1e-4)
+    assert int(kev[1]) == 0
+
+
+def test_join_bf16_kernel_matches_oracle():
+    rng = np.random.RandomState(7)
+    n, c, cn, dp = 11, 7, 3, 16
+    rows = quantize_corpus(
+        jnp.asarray(rng.randn(n * c, dp).astype(np.float32)), "bf16")
+    ids = jnp.asarray(rng.randint(-1, 40, size=(n, c)).astype(np.int32))
+    lin = jnp.arange(n * c).reshape(n, c)
+    xg = rows.data[lin]
+    x2g = jnp.where(ids >= 0, rows.x2[lin], 0.0)
+    rd, rev = ref.knn_join_dists_bf16(xg, x2g, ids, cn)
+    kd, kev = knn_join_dists_bf16_blocked(xg, x2g, ids, cn=cn, tb=8,
+                                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(rev), np.asarray(kev))
+    np.testing.assert_allclose(np.where(np.isinf(rd), 0.0, rd),
+                               np.where(np.isinf(kd), 0.0, kd),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_near_identical_points_cancellation_guard():
+    """Near-identical high-norm rows: the quantized expansion must come
+    out finite, >= 0 (clamped), tiny for the near-duplicate pair, and
+    kernel == oracle. Self-distance (same stored row) must be exactly 0
+    before masking — the reason norms are cached from the QUANTIZED rows.
+    """
+    base = np.full((1, 16), 1000.0, np.float32)
+    pts = np.concatenate([base, base + 1e-3, base * -1.0], axis=0)
+    qs = quantize_corpus(jnp.asarray(pts), "int8")
+    ids = jnp.asarray([[0, 1, 2]], np.int32)
+    lin = jnp.arange(3)[None]
+    xq, xs = qs.data[lin], qs.scale[lin]
+    x2g = qs.x2[lin]
+    rd, _ = ref.knn_join_dists_q8(xq, xs, x2g, ids, 3)
+    kd, _ = knn_join_dists_q8_blocked(xq, xs, x2g, ids, cn=3, tb=8,
+                                      interpret=True)
+    valid = np.isfinite(np.asarray(rd))
+    assert (np.asarray(rd)[valid] >= 0.0).all()
+    np.testing.assert_allclose(np.where(valid, np.asarray(rd), 0.0),
+                               np.where(valid, np.asarray(kd), 0.0),
+                               rtol=1e-5, atol=1e-4)
+    # rows 0/1 quantize to the same int8 codes at this scale: the
+    # quantized distance must be exactly 0, never negative garbage
+    assert float(rd[0, 0, 1]) < 1e-3
+    # the search tile agrees: d(q, q) == 0 for a row scored against itself
+    sd = ref.knn_search_dists_q8(
+        qs.data[:1], qs.scale[:1], qs.x2[:1], xq, xs, x2g,
+        jnp.asarray([[0, 1, 2]], np.int32))
+    assert float(sd[0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# two-stage search: parity with the fp32 ref oracle + exact distances
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built_store():
+    x = datasets.clustered(jax.random.key(0), 512, 16, 4)
+    cfg = OnlineConfig(precision="int8")
+    store, _ = MutableKNNStore.build(
+        x, k=K, cfg=cfg, descent=DescentConfig(k=K, rho=1.0, max_iters=15))
+    return x, store
+
+
+def test_two_stage_tombstone_parity_with_ref(built_store):
+    """int8 two-stage search on a store with tombstones: never returns a
+    dead or unallocated row, recall stays within 0.03 of the fp32
+    backend="ref" oracle at the same budget, and every returned distance
+    is the EXACT fp32 distance (the re-rank contract)."""
+    x, store = built_store
+    store, _ = knn_delete(store, jnp.arange(40, 80))
+    q = x[:128] + 0.02 * jax.random.normal(jax.random.key(1), (128, 16))
+    key = jax.random.key(2)
+    scfg = SearchConfig(beam=32, rounds=24, expand=4, precision="int8")
+    d_q, i_q = store.search(q, k_out=K, key=key, cfg=scfg)
+    rcfg = SearchConfig(beam=32, rounds=24, backend="ref")
+    _, i_r = store.search(q, k_out=K, key=key, cfg=rcfg)
+
+    alive = np.asarray(store.alive)
+    i_qn = np.asarray(i_q)
+    assert (i_qn < store.capacity).all()
+    assert alive[np.where(i_qn >= 0, i_qn, 0)][i_qn >= 0].all()
+    assert not np.isin(i_qn, np.arange(40, 80)).any()
+
+    # ground truth over live rows only
+    live = np.where(alive[:512])[0]
+    _, ti = brute_force_knn(x[jnp.asarray(live)], q, K,
+                            exclude_self=False)
+    ti = jnp.asarray(live)[ti]
+    r_quant = float(recall_at_k(i_q, ti))
+    r_ref = float(recall_at_k(i_r, ti))
+    assert r_quant >= r_ref - 0.03, (r_quant, r_ref)
+
+    # the re-rank contract: returned distances are exact fp32
+    xs = np.asarray(store.x)
+    qp = np.zeros((128, xs.shape[1]), np.float32)
+    qp[:, :16] = np.asarray(q)
+    sel = i_qn >= 0
+    true_d = ((qp[:, None, :] - xs[np.where(sel, i_qn, 0)]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(d_q)[sel], true_d[sel],
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_two_stage_all_precisions_shapes(built_store):
+    """Odd batch sizes through every precision return valid shapes and
+    ascending distances."""
+    x, store = built_store
+    for prec in ("int8", "bf16"):
+        cfg = SearchConfig(beam=16, rounds=8, expand=4, precision=prec)
+        d, i = store.search(x[:37] + 0.01, k_out=5, key=jax.random.key(3),
+                            cfg=cfg)
+        assert d.shape == (37, 5) and i.shape == (37, 5)
+        dn = np.asarray(d)
+        assert (np.diff(np.where(np.isfinite(dn), dn, 1e30), axis=1)
+                >= -1e-6).all()
+
+
+def test_insert_updates_quantized_mirror(built_store):
+    """knn_insert keeps the int8 mirror row-aligned with the fp32 store
+    (including across a capacity doubling)."""
+    x, store = built_store
+    new = datasets.clustered(jax.random.key(4), 600, 16, 4) + 5.0
+    store2, _ = knn_insert(store, new, key=jax.random.key(5))
+    assert store2.qs is not None
+    assert store2.qs.data.shape[0] == store2.capacity
+    deq = np.asarray(store2.qs.data, np.float32) * np.asarray(
+        store2.qs.scale)[:, None]
+    # the mirror stores only the logical dims (zero feature padding
+    # dropped — quantize.mirror_width); compare on the mirror's width
+    w = store2.qs.data.shape[1]
+    xs = np.asarray(store2.x)[:, :w]
+    scale = np.abs(xs).max(axis=1) / 127.0
+    err = np.abs(deq[:store2.n] - xs[:store2.n])
+    assert (err <= scale[:store2.n, None] * 0.5 + 1e-5).all()
+
+
+def test_seeded_512pt_int8_recall_pin():
+    """Seeded end-to-end pin: int8 two-stage search on a 512-pt clustered
+    corpus. The fp32 fused pin (test_search) is 0.97; quantized scoring
+    may cost a bounded sliver — pin at 0.96."""
+    x = datasets.clustered(jax.random.key(11), 512, 32, 4)
+    dist, idx, _ = build_knn_graph(
+        x, k=K, cfg=DescentConfig(k=K, rho=1.0, max_iters=15),
+        key=jax.random.key(12))
+    q = x + 0.01 * jax.random.normal(jax.random.key(13), x.shape)
+    _, ti = brute_force_knn(x, q, K, exclude_self=False)
+    cfg = SearchConfig(beam=32, rounds=24, expand=4, precision="int8")
+    _, gi = graph_search(x, idx, q, k_out=K, key=jax.random.key(14),
+                         cfg=cfg)
+    assert float(recall_at_k(gi, ti)) >= 0.96
+
+
+def test_quantized_build_recall_and_exact_distances():
+    """DescentConfig.precision="int8": the two-stage build stays within
+    0.02 recall of the fp32 build on the same corpus/key, and the
+    returned graph distances are exact fp32 (rerank_lists + fp32 polish).
+    """
+    x = datasets.clustered(jax.random.key(21), 512, 16, 4)
+    _, ti = brute_force_knn(x, x, K)
+    base = DescentConfig(k=K, rho=1.0, max_iters=12)
+    _, idx_f, _ = build_knn_graph(x, k=K, cfg=base, key=jax.random.key(22))
+    qcfg = dataclasses.replace(base, precision="int8")
+    dist_q, idx_q, _ = build_knn_graph(x, k=K, cfg=qcfg,
+                                       key=jax.random.key(22))
+    r_f = float(recall_at_k(idx_f, ti))
+    r_q = float(recall_at_k(idx_q, ti))
+    assert r_q >= r_f - 0.02, (r_q, r_f)
+
+    xs = np.asarray(x)
+    i_n = np.asarray(idx_q)
+    d_n = np.asarray(dist_q)
+    sel = i_n >= 0
+    true_d = ((xs[:, None, :] - xs[np.where(sel, i_n, 0)]) ** 2).sum(-1)
+    np.testing.assert_allclose(d_n[sel], true_d[sel], rtol=1e-4, atol=1e-3)
+
+
+def test_ref_backend_ignores_precision():
+    """backend="ref" is the fp32 oracle: precision must be a no-op."""
+    x = datasets.clustered(jax.random.key(31), 256, 8, 2)
+    _, idx, _ = build_knn_graph(
+        x, k=K, cfg=DescentConfig(k=K, rho=1.0, max_iters=8),
+        key=jax.random.key(32))
+    q = x[:32]
+    key = jax.random.key(33)
+    d0, i0 = graph_search(x, idx, q, k_out=5, key=key,
+                          cfg=SearchConfig(backend="ref"))
+    d1, i1 = graph_search(x, idx, q, k_out=5, key=key,
+                          cfg=SearchConfig(backend="ref", precision="int8"))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_knn_lm_precision_datastores():
+    """KNNDatastore.build(precision=...) caches a quantized mirror whose
+    mode drives knn_logits' two-stage search — at the CALL's beam/rounds
+    (no pinned cfg silently overriding the budget) — and returns finite
+    log-probs."""
+    from repro.serve.knn_lm import KNNDatastore, knn_logits
+    x = datasets.clustered(jax.random.key(41), 256, 16, 2)
+    vals = jax.random.randint(jax.random.key(42), (256,), 0, 50)
+    ds = KNNDatastore.build(x, vals, k=8, precision="int8",
+                            cfg=DescentConfig(k=8, rho=1.0, max_iters=6))
+    assert ds.qstore is not None and ds.qstore.mode == "int8"
+    assert ds.search_cfg is None     # precision rides on the mirror
+    lp = knn_logits(ds, x[:16], vocab=50, k=4, beam=24, rounds=16,
+                    key=jax.random.key(43))
+    assert lp.shape == (16, 50)
+    assert bool(jnp.isfinite(lp).all())
+
+
+def test_search_wrong_mode_cache_requantizes():
+    """A cached mirror of the WRONG mode must not be scored as raw codes
+    by the other kernel: graph_search re-quantizes fresh, so recall
+    matches a cache-free quantized search exactly."""
+    x = datasets.clustered(jax.random.key(61), 256, 8, 2)
+    _, idx, _ = build_knn_graph(
+        x, k=8, cfg=DescentConfig(k=8, rho=1.0, max_iters=8),
+        key=jax.random.key(62))
+    key = jax.random.key(63)
+    cfg = SearchConfig(beam=16, rounds=16, expand=4, precision="bf16")
+    wrong = quantize_corpus(x, "int8")       # int8 cache, bf16 search
+    d0, i0 = graph_search(x, idx, x[:32], k_out=5, key=key, cfg=cfg)
+    d1, i1 = graph_search(x, idx, x[:32], k_out=5, key=key, cfg=cfg,
+                          qstore=wrong)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.slow
+def test_graph_search_sharded_threads_precision():
+    """cfg.precision flows through the sharded serving entry: each shard
+    quantizes its local rows inside the shard_map body and re-ranks fp32,
+    so the merged global top-k carries exact distances. Single-device
+    mesh — the tracing/threading is what is under test. Slow tier like
+    every shard_map test (the dev container's jax lacks jax.shard_map)."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import graph_search_sharded
+    x = datasets.clustered(jax.random.key(51), 256, 8, 2)
+    _, idx, _ = build_knn_graph(
+        x, k=8, cfg=DescentConfig(k=8, rho=1.0, max_iters=6),
+        key=jax.random.key(52))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    q = x[:16] + 0.01
+    cfg = SearchConfig(beam=16, rounds=8, expand=4, precision="int8")
+    d, i = graph_search_sharded(mesh, x, idx, q, k_out=5, cfg=cfg,
+                                key=jax.random.key(53))
+    assert d.shape == (16, 5) and i.shape == (16, 5)
+    xs, i_n, d_n = np.asarray(x), np.asarray(i), np.asarray(d)
+    sel = i_n >= 0
+    true_d = ((np.asarray(q)[:, None, :] - xs[np.where(sel, i_n, 0)]) ** 2
+              ).sum(-1)
+    np.testing.assert_allclose(d_n[sel], true_d[sel], rtol=1e-4, atol=1e-3)
+
+
+def test_pytree_roundtrip():
+    """QuantizedStore must pass through jit as a pytree."""
+    qs = quantize_corpus(jnp.ones((4, 8)), "int8")
+    out = jax.jit(lambda s: QuantizedStore(s.data, s.scale * 2.0, s.x2))(qs)
+    assert out.mode == "int8"
+    np.testing.assert_allclose(np.asarray(out.scale),
+                               np.asarray(qs.scale) * 2.0)
