@@ -51,9 +51,11 @@ from benchmarks.common import Sink, timeit
 from repro.core import (
     DescentConfig,
     NeighborLists,
+    RouterConfig,
     SearchConfig,
     apply_permutation,
     brute_force_knn,
+    build_router,
     datasets,
     greedy_reorder,
     heap,
@@ -67,10 +69,11 @@ from repro.core.nn_descent import build_knn_graph
 from repro.core.quantize import mirror_width
 
 
-def _qps(x, gidx, q, k_out, cfg, key, qstore=None, x2=None, **kw):
+def _qps(x, gidx, q, k_out, cfg, key, qstore=None, x2=None, router=None,
+         **kw):
     t = timeit(
         lambda: graph_search(x, gidx, q, k_out=k_out, key=key, cfg=cfg,
-                             qstore=qstore, x2=x2),
+                             qstore=qstore, x2=x2, router=router),
         **kw,
     )
     return q.shape[0] / t, t
@@ -127,6 +130,26 @@ def run_compare(n: int = 100_000, d: int = 64, q_n: int = 4096,
         row[f"{tag}_recall"] = round(float(recall_at_k(gi, ti)), 4)
     row["speedup"] = round(row["fused_qps"] / max(row["ref_qps"], 1e-9), 2)
     row["recall_gap"] = round(row["ref_recall"] - row["fused_recall"], 4)
+
+    # --- routed entry seeding at the SAME budget (the large-n receipt):
+    # uniform-random beam entries strand the search far from the query at
+    # this scale, so fused recall collapses; the router's hierarchical
+    # entries (nearest members of the query's top centroids) start the
+    # beam inside the answer's neighborhood and recover it
+    # wide member lists (IVF-style: the top-t cells are enumerated nearly
+    # in full as seed candidates) because the cheap compare-bench graph is
+    # itself the recall ceiling for pure traversal at this n
+    router = build_router(
+        x, cfg=RouterConfig(n_centroids=512, iters=6, members=256),
+        key=jax.random.key(4))
+    rcfg = dataclasses.replace(fcfg, router_t=16)
+    qps_rt, t_rt = _qps(x, idx, q, k_out, rcfg, key, router=router)
+    _, gi_rt = graph_search(x, idx, q[:n_eval], k_out=k_out, key=key,
+                            cfg=rcfg, router=router)
+    row["routed_s"] = round(t_rt, 3)
+    row["routed_qps"] = round(qps_rt, 1)
+    row["routed_recall"] = round(float(recall_at_k(gi_rt, ti)), 4)
+    row["routed_gain"] = round(row["routed_recall"] - row["fused_recall"], 4)
     sink.row(**row)
 
     # --- the two-stage quantized path at the SERVING layout and the same
@@ -303,6 +326,51 @@ def run_smoke_quant(precision: str, n: int = 2048, d: int = 16,
     return sink.save()
 
 
+def run_smoke_router(n: int = 4096, d: int = 16, n_clusters: int = 32,
+                     q_n: int = 512, k: int = 10, k_out: int = 10,
+                     beam: int = 16, rounds: int = 24,
+                     expand: int = 4) -> list:
+    """CI router lane: the unit-scale large-n collapse. 32 clusters with
+    a beam of 16 means uniform-random entries cover only ~40% of the
+    clusters (the K-NN graph has no inter-cluster edges — uncovered
+    clusters are unreachable), while the routed entries seed every query
+    inside its own cluster at the SAME budget. Emits ``routed_recall`` /
+    ``random_recall`` / ``routed_qps`` / ``random_qps`` into
+    results/bench/search_router.json (its own sink so the gated fp32
+    smoke rows survive), gated by check_gate.py --router."""
+    sink = Sink("search_router")
+    x = datasets.clustered(jax.random.key(5), n, d, n_clusters)
+    dcfg = DescentConfig(k=k, rho=1.0, max_iters=10)
+    _, idx, _ = build_knn_graph(x, k=k, cfg=dcfg, key=jax.random.key(6))
+    q = x[:q_n] + 0.01 * jax.random.normal(jax.random.key(7), (q_n, d))
+    _, ti = brute_force_knn(x, q, k_out, exclude_self=False)
+    router = build_router(
+        x, cfg=RouterConfig(n_centroids=2 * n_clusters),
+        key=jax.random.key(9))
+
+    key = jax.random.key(8)
+    cfg = SearchConfig(beam=beam, rounds=rounds, expand=expand)
+    out = {}
+    for tag, rt in (("random", None), ("routed", router)):
+        qps, t = _qps(x, idx, q, k_out, cfg, key, router=rt,
+                      warmup=1, iters=3)
+        _, gi = graph_search(x, idx, q, k_out=k_out, key=key, cfg=cfg,
+                             router=rt)
+        out[tag] = (qps, t, float(recall_at_k(gi, ti)))
+    sink.row(op="smoke_search_router", n=n, q=q_n, k=k, beam=beam,
+             rounds=rounds, expand=expand,
+             n_clusters=n_clusters,
+             n_centroids=router.centroids.shape[0],
+             random_s=round(out["random"][1], 3),
+             routed_s=round(out["routed"][1], 3),
+             random_qps=round(out["random"][0], 1),
+             routed_qps=round(out["routed"][0], 1),
+             random_recall=round(out["random"][2], 4),
+             routed_recall=round(out["routed"][2], 4),
+             routed_gain=round(out["routed"][2] - out["random"][2], 4))
+    return sink.save()
+
+
 def main(argv: list | None = None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--mode", choices=("compare", "smoke"), default="compare")
@@ -316,8 +384,14 @@ def main(argv: list | None = None):
                    help="smoke mode: run the two-stage quantized parity "
                         "lane (search_quant.json) instead of the fp32 "
                         "smoke; compare mode measures both regardless")
+    p.add_argument("--router", action="store_true",
+                   help="smoke mode: run the routed-vs-random entry lane "
+                        "(search_router.json) instead of the fp32 smoke; "
+                        "compare mode measures the routed path regardless")
     args = p.parse_args(argv)
     if args.mode == "smoke":
+        if args.router:
+            return run_smoke_router()
         if args.precision is not None:
             return run_smoke_quant(args.precision)
         return run_smoke()

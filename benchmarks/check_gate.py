@@ -23,6 +23,12 @@ when any gated metric violates its pinned floor:
     recall, never more), and ``quant_qps`` must not drop below
     ``f32_qps`` (quantized scoring exists to be FASTER; parity or worse
     means the two-stage plumbing regressed) — when ``--quant`` is given
+  * ``routed_recall`` — the router-seeded search must stay at or above
+    ``--router-floor`` on the adversarial router smoke shape (32
+    clusters, beam 16: uniform-random entries reach only ~0.4 recall
+    there, so the floor pins the routing win itself) and must never drop
+    below ``random_recall`` at the same budget — when ``--router`` is
+    given
 
 When running under GitHub Actions (``GITHUB_STEP_SUMMARY`` set) a
 markdown metrics table (recall / QPS / evals per gate, fp32 vs
@@ -35,7 +41,8 @@ them.
 Usage: python benchmarks/check_gate.py results/bench/online.json \
            --floor 0.85 --build results/bench/build.json --build-floor 0.95 \
            --search results/bench/search.json --search-floor 0.92 \
-           --quant results/bench/search_quant.json --quant-floor 0.90
+           --quant results/bench/search_quant.json --quant-floor 0.90 \
+           --router results/bench/search_router.json --router-floor 0.90
 """
 from __future__ import annotations
 
@@ -148,6 +155,38 @@ def check_quant(rows: list, floor: float) -> list:
     return failures
 
 
+def check_router(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_search_router"]
+    if not smoke:
+        failures.append("no smoke_search_router row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("routed_recall", "random_recall",
+                                   "routed_qps", "random_qps")
+                   if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(
+                f"smoke_search_router row missing gated keys {missing}")
+            continue
+        routed = float(r["routed_recall"])
+        random = float(r["random_recall"])
+        if routed < floor:
+            failures.append(
+                f"routed_recall {routed:.4f} below pinned floor {floor}"
+            )
+        # the routed floor must sit ABOVE what random entries reach on
+        # this adversarial shape — and routed may never be worse than
+        # random at the same budget (the router would be pure overhead)
+        if routed < random:
+            failures.append(
+                f"routed_recall {routed:.4f} below random-entry recall "
+                f"{random:.4f} at the same budget"
+            )
+    return failures
+
+
 # rows rendered into the step-summary table: (gate, metric, source op,
 # row key, floor text). "vs" floors compare against another key.
 _SUMMARY_SPEC = (
@@ -173,6 +212,12 @@ _SUMMARY_SPEC = (
     ("quant", "quant_qps", "smoke_search_quant", "quant_qps",
      ">= f32_qps"),
     ("quant", "f32_qps", "smoke_search_quant", "f32_qps", ""),
+    ("router", "routed_recall (hierarchical entries)",
+     "smoke_search_router", "routed_recall", "router_floor"),
+    ("router", "random_recall (uniform entries)", "smoke_search_router",
+     "random_recall", "<= routed_recall"),
+    ("router", "routed_qps", "smoke_search_router", "routed_qps", ""),
+    ("router", "random_qps", "smoke_search_router", "random_qps", ""),
 )
 
 
@@ -225,6 +270,13 @@ def main(argv: list | None = None) -> int:
     p.add_argument("--quant-floor", type=float, default=0.90,
                    help="pinned quant_recall floor (<= 0.02 below the "
                         "fp32 search floor)")
+    p.add_argument("--router", default=None,
+                   help="path to search_router.json (enables the routed-"
+                        "entry gate)")
+    p.add_argument("--router-floor", type=float, default=0.90,
+                   help="pinned routed_recall floor — sits ABOVE what "
+                        "uniform-random entries reach on the adversarial "
+                        "router smoke shape (~0.4)")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
@@ -245,11 +297,17 @@ def main(argv: list | None = None) -> int:
             quant_rows = json.load(f)
         row_sets["quant"] = quant_rows
         failures += check_quant(quant_rows, args.quant_floor)
+    if args.router is not None:
+        with open(args.router) as f:
+            router_rows = json.load(f)
+        row_sets["router"] = router_rows
+        failures += check_router(router_rows, args.router_floor)
     write_step_summary(
         row_sets,
         {"floor": args.floor, "build_floor": args.build_floor,
          "search_floor": args.search_floor,
-         "quant_floor": args.quant_floor},
+         "quant_floor": args.quant_floor,
+         "router_floor": args.router_floor},
         failures,
     )
     for msg in failures:
@@ -263,7 +321,10 @@ def main(argv: list | None = None) -> int:
                  "fused QPS >= ref QPS")
               + ("" if args.quant is None else
                  f"; quant_recall >= {args.quant_floor}, "
-                 "quant QPS >= f32 QPS"))
+                 "quant QPS >= f32 QPS")
+              + ("" if args.router is None else
+                 f"; routed_recall >= {args.router_floor} "
+                 "and >= random-entry recall"))
     return 1 if failures else 0
 
 

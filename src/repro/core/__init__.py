@@ -12,6 +12,7 @@ from repro.core.nn_descent import (
 from repro.core.online import (
     MutableKNNStore,
     OnlineConfig,
+    ensure_router,
     knn_delete,
     knn_insert,
 )
@@ -28,6 +29,7 @@ from repro.core.reorder import (
     locality_stats,
     window_cluster_purity,
 )
+from repro.core.router import Router, RouterConfig, build_router
 
 __all__ = [
     "DescentConfig",
@@ -36,12 +38,16 @@ __all__ = [
     "NeighborLists",
     "OnlineConfig",
     "QuantizedStore",
+    "Router",
+    "RouterConfig",
     "SearchConfig",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",
+    "build_router",
     "dequantize",
     "distance_recall",
+    "ensure_router",
     "quantize_corpus",
     "quantize_sym_int8",
     "graph_search",

@@ -39,6 +39,19 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import heap, selection
 from repro.core.graph_search import SearchConfig, graph_search
+
+# jax.shard_map landed in 0.5; fall back to the experimental module on
+# 0.4.x (same semantics — check_vma was called check_rep there)
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _xp_shard_map
+
+    def shard_map(f=None, /, **kw):
+        kw["check_rep"] = kw.pop("check_vma", False)
+        if f is None:
+            return functools.partial(_xp_shard_map, **kw)
+        return _xp_shard_map(f, **kw)
 from repro.core.heap import NeighborLists
 from repro.core.nn_descent import DescentConfig, invert_candidates, pair_block
 from repro.kernels import ops
@@ -88,7 +101,7 @@ def exact_knn_sharded(mesh: Mesh, x: jax.Array, k: int, *, axis: str = "data"):
         )
         return nl_d, nl_i
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=P(axis, None),
@@ -313,12 +326,14 @@ def nn_descent_sharded_iteration(
     rl = jnp.where(valid_r, r - base, -1)
     dd_r = jnp.where(valid_r, _bits_f32(got[:, 2]), jnp.inf)
     # per-receiver source buffer: 2x the expected load (cap_u routes
-    # ~4*merge_k rows per receiver on average). Position-biased on
-    # overflow like every bounded buffer here — hub-heavy meshes can
-    # raise DescentConfig.join_src to widen it (cf. the ROADMAP note on
-    # distance-prioritized drops).
+    # ~4*merge_k rows per receiver on average). Overflow drops the
+    # FARTHEST incoming rows per receiver (distance-prioritized, closing
+    # the ROADMAP watch item); hub-heavy meshes can still raise
+    # DescentConfig.join_src to widen the buffer.
     s_cap = cfg.join_src or 8 * cfg.merge_k
-    rows_of, _ = invert_candidates(rl[:, None], n_local, s_cap)
+    rows_of, _ = invert_candidates(
+        rl[:, None], n_local, s_cap, prio=dd_r[:, None]
+    )
     ok_r = rows_of >= 0
     safe_r = jnp.where(ok_r, rows_of, 0)
     gd = jnp.where(ok_r, dd_r[safe_r], jnp.inf)
@@ -407,6 +422,10 @@ def graph_search_sharded(
     cfg: SearchConfig | None = None,
     key: jax.Array | None = None,
     axis: str = "data",
+    router=None,            # core/router.Router over the GLOBAL corpus
+    route_p: int = 0,       # shards searched per query (0 = all: legacy)
+    route_cap: int = 0,     # per-shard routed-query buffer (0 = auto)
+    with_stats: bool = False,
 ):
     """Sharded serving entry for the fused batched search: corpus rows are
     sharded over the mesh's ``axis``; each shard holds a K-NN subgraph
@@ -415,8 +434,26 @@ def graph_search_sharded(
     edges). Every query block runs the shard-local fused search
     (core/graph_search.py — the per-shard call is the same jitted blocked
     multi-expansion path as the single-chip entry), local hits are lifted
-    to global ids (shard * n_local + row), and one all_gather + top-k
-    folds the P per-shard result lists into the global top-``k_out``.
+    to global ids (shard * n_local + row).
+
+    **Replicated dispatch** (``route_p=0`` or no ``router``): every query
+    searches every shard, one all_gather + top-k folds the P per-shard
+    lists — per-query work is O(P).
+
+    **Routed dispatch** (``router`` over the global corpus + 0 < route_p
+    < P): centroid→shard affinity (the minimum query-centroid distance
+    among each shard's centroids, shard of a centroid = majority shard of
+    its member rows) picks the top-``route_p`` shards per query; each
+    shard searches only the queries routed to it, from a compacted
+    (route_cap, ·) buffer, seeded with the router's member rows that live
+    on that shard (holes fall back to a shard-local random draw). The
+    all_gather moves (P, route_cap, k_out) compacted buffers instead of
+    (P, q, k_out), and the partial merge folds only each query's
+    ``route_p`` shard lists — per-query distance work drops from P shards
+    to p. ``route_cap`` bounds per-shard load (default ~4x the balanced
+    expectation); overflow queries lose that shard's contribution
+    (bounded-buffer sampling noise; ``with_stats`` exposes the drop
+    count).
 
     ``cfg.precision`` threads straight through: with "int8"/"bf16" each
     shard quantizes its LOCAL rows inside the shard_map body and runs the
@@ -426,7 +463,9 @@ def graph_search_sharded(
     sharded corpus should hoist the per-shard quantization into a cached
     mirror like MutableKNNStore does; this entry re-quantizes per call.)
 
-    Returns (dist (q, k_out), idx (q, k_out) global ids), replicated.
+    Returns (dist (q, k_out), idx (q, k_out) global ids), replicated —
+    plus a stats dict (fanout/shards/routed/searched/dropped queries)
+    when ``with_stats``.
     """
     from repro.core.graph_search import _batch_key
     cfg = cfg or SearchConfig()
@@ -450,31 +489,139 @@ def graph_search_sharded(
             "build_knn_graph_sharded emits — subtract each shard's base "
             "(shard * n_local) and drop cross-shard edges first"
         )
+    routed = router is not None and 0 < route_p < P_
+    if not routed:
+        @functools.partial(
+            shard_map,
+            mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis, None), P()),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        def fn(key, x_local, gi_local, q):
+            p = jax.lax.axis_index(axis)
+            base = p * n_local
+            kk = jax.random.fold_in(key, p)
+            d, i = graph_search(x_local, gi_local, q, k_out=k_out, key=kk,
+                                cfg=cfg)
+            gi = jnp.where(i >= 0, base + i, -1)
+            ds = jax.lax.all_gather(d, axis)             # (P, q, k_out)
+            is_ = jax.lax.all_gather(gi, axis)
+            alld = jnp.moveaxis(ds, 0, 1).reshape(q.shape[0], -1)
+            alli = jnp.moveaxis(is_, 0, 1).reshape(q.shape[0], -1)
+            alld = jnp.where(alli >= 0, alld, jnp.inf)
+            neg, pos = jax.lax.top_k(-alld, k_out)
+            out_i = jnp.take_along_axis(alli, pos, axis=1)
+            return jnp.where(out_i >= 0, -neg, jnp.inf), out_i
+
+        out_d, out_i = fn(key, x, graph_idx, queries)
+        if with_stats:
+            q_n = queries.shape[0]
+            return out_d, out_i, {
+                "fanout": P_, "shards": P_, "routed_queries": q_n * P_,
+                "searched_queries": q_n * P_, "dropped_queries": 0,
+            }
+        return out_d, out_i
+
+    # ---- routed dispatch: replicated precompute (one small centroid
+    # tile per batch), then a compacted per-shard search + partial merge
+    q_n = queries.shape[0]
+    qf = queries.astype(jnp.float32)
+    dqc = ops.pairwise_sq_l2(qf, router.centroids, backend=cfg.backend)
+    # shard of a centroid = majority shard of its member rows (centroids
+    # live in feature space, not the id space — members pin them down)
+    mem = router.members.idx                              # (c, m)
+    ms = jnp.where(mem >= 0, mem // n_local, -1)
+    votes = (ms[:, :, None] == jnp.arange(P_)[None, None, :]).sum(1)
+    shard_of = jnp.argmax(votes, axis=1)                  # (c,)
+    # query→shard affinity: best centroid distance among the shard's
+    # centroids (+inf for shards that own no centroid)
+    aff = jax.ops.segment_min(dqc.T, shard_of, num_segments=P_).T  # (q, P)
+    _, top_shards = jax.lax.top_k(-aff, route_p)          # (q, p)
+    t = min(cfg.router_t, router.centroids.shape[0])
+    _, top_cent = jax.lax.top_k(-dqc, t)                  # (q, t)
+    # per-query entry candidates, nearest-member-major (global ids)
+    entg = jnp.moveaxis(mem[top_cent], 1, 2).reshape(q_n, -1)  # (q, t*m)
+    e_w = min(cfg.beam, n_local)
+    cap_q = route_cap or min(
+        q_n, max(32, -((-4 * q_n * route_p) // P_))
+    )
+    cap_q = min(cap_q, q_n)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
-        in_specs=(P(), P(axis, None), P(axis, None), P()),
-        out_specs=(P(), P()),
+        in_specs=(P(), P(axis, None), P(axis, None), P(), P(), P()),
+        out_specs=(P(), P(), P(), P()),
         check_vma=False,
     )
-    def fn(key, x_local, gi_local, q):
+    def fn_routed(key, x_local, gi_local, q, tsh, eg):
         p = jax.lax.axis_index(axis)
         base = p * n_local
         kk = jax.random.fold_in(key, p)
-        d, i = graph_search(x_local, gi_local, q, k_out=k_out, key=kk,
-                            cfg=cfg)
-        gi = jnp.where(i >= 0, base + i, -1)
-        ds = jax.lax.all_gather(d, axis)             # (P, q, k_out)
+        # queries routed to this shard, compacted into a cap_q buffer
+        mine = (tsh == p).any(axis=1)                     # (q,)
+        qids = jnp.nonzero(mine, size=cap_q, fill_value=-1)[0]
+        qids = qids.astype(jnp.int32)
+        ok_q = qids >= 0
+        safe_q = jnp.where(ok_q, qids, 0)
+        qsel = q[safe_q]                                  # (cap_q, d)
+        # this shard's slice of the routed entry candidates, local ids,
+        # valid entries compacted to the front (stable argsort)
+        egl = eg[safe_q] - base                           # (cap_q, t*m)
+        w = egl.shape[1]
+        ve = ok_q[:, None] & (eg[safe_q] >= 0) & (egl >= 0) & (egl < n_local)
+        ar = jnp.arange(w, dtype=jnp.int32)[None, :]
+        order = jnp.argsort(jnp.where(ve, ar, w + ar), axis=1)
+        ent = jnp.take_along_axis(jnp.where(ve, egl, -1), order, axis=1)
+        if w >= e_w:
+            ent = ent[:, :e_w]
+        else:
+            ent = jnp.pad(ent, ((0, 0), (0, e_w - w)), constant_values=-1)
+        # holes (few/no router members on this shard) fall back to a
+        # shard-local keyed draw — same no-replacement draw as the
+        # single-chip path
+        rnd = jax.lax.top_k(
+            jax.random.uniform(kk, (n_local,)), e_w
+        )[1].astype(jnp.int32)
+        ent = jnp.where(ent >= 0, ent, rnd[None, :])
+        d, i = graph_search(x_local, gi_local, qsel, k_out=k_out,
+                            entry=ent, key=kk, cfg=cfg)
+        gi = jnp.where((i >= 0) & ok_q[:, None], base + i, -1)
+        d = jnp.where(gi >= 0, d, jnp.inf)
+        # inverse map: query id -> its slot in this shard's buffer
+        gpos = jnp.full((q_n,), -1, jnp.int32).at[
+            jnp.where(ok_q, qids, q_n)
+        ].set(jnp.arange(cap_q, dtype=jnp.int32), mode="drop")
+        ds = jax.lax.all_gather(d, axis)                  # (P, cap_q, k)
         is_ = jax.lax.all_gather(gi, axis)
-        alld = jnp.moveaxis(ds, 0, 1).reshape(q.shape[0], -1)
-        alli = jnp.moveaxis(is_, 0, 1).reshape(q.shape[0], -1)
-        alld = jnp.where(alli >= 0, alld, jnp.inf)
-        neg, pos = jax.lax.top_k(-alld, k_out)
-        out_i = jnp.take_along_axis(alli, pos, axis=1)
-        return jnp.where(out_i >= 0, -neg, jnp.inf), out_i
+        gp = jax.lax.all_gather(gpos, axis)               # (P, q)
+        # partial merge: each query folds ONLY its route_p shard lists
+        pp = gp[tsh, jnp.arange(q_n)[:, None]]            # (q, p)
+        ppc = jnp.clip(pp, 0, cap_q - 1)
+        cd = ds[tsh, ppc]                                 # (q, p, k_out)
+        ci = is_[tsh, ppc]
+        hit = (pp >= 0)[:, :, None] & (ci >= 0)
+        cd = jnp.where(hit, cd, jnp.inf).reshape(q_n, -1)
+        ci = jnp.where(hit, ci, -1).reshape(q_n, -1)
+        neg, pos = jax.lax.top_k(-cd, k_out)
+        out_i = jnp.take_along_axis(ci, pos, axis=1)
+        out_d = jnp.where(out_i >= 0, -neg, jnp.inf)
+        searched = jax.lax.psum(jnp.sum(ok_q.astype(jnp.int32)), axis)
+        routed_q = jax.lax.psum(jnp.sum(mine.astype(jnp.int32)), axis)
+        return out_d, out_i, searched, routed_q
 
-    return fn(key, x, graph_idx, queries)
+    out_d, out_i, searched, routed_q = fn_routed(
+        key, x, graph_idx, queries, top_shards, entg
+    )
+    if with_stats:
+        return out_d, out_i, {
+            "fanout": route_p, "shards": P_,
+            "routed_queries": int(routed_q),
+            "searched_queries": int(searched),
+            "dropped_queries": int(routed_q) - int(searched),
+        }
+    return out_d, out_i
 
 
 def _f32_bits(x):
@@ -524,7 +671,7 @@ def make_sharded_iteration_lowerable(mesh: Mesh, *, n: int, d: int, k: int,
     cfg = DescentConfig(k=k, rho=rho, reorder=False)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=flat,
         in_specs=(P(), P("data", None), P("data", None), P("data", None),
                   P("data", None)),
@@ -575,7 +722,7 @@ def build_knn_graph_sharded(
     n_local = n // P_
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(), P(axis, None)),
         out_specs=(P(axis, None), P(axis, None), P()),
@@ -607,7 +754,7 @@ def build_knn_graph_sharded(
     nl = NeighborLists(dist0, idx0, jnp.ones_like(idx0, dtype=bool))
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(
             P(), P(axis, None), P(axis, None), P(axis, None), P(axis, None),
@@ -643,7 +790,7 @@ def build_knn_graph_sharded(
     # terminal polish rounds (quality parity with the single-chip build:
     # see DescentConfig.polish / nn_descent.polish_iteration)
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
         out_specs=(

@@ -81,6 +81,12 @@ class SearchConfig:
                             # costs bounded candidate-recall noise only.
                             # backend="ref" (the parity oracle) is always
                             # fp32 and ignores this knob.
+    router: str = "auto"    # auto = seed the beam from the router's
+                            # centroid member lists when a router is
+                            # passed; off = always random entries.
+                            # backend="ref" keeps random entries either
+                            # way (the parity oracle predates the router).
+    router_t: int = 4       # centroids probed per query when routing
 
     @property
     def n_rounds(self) -> int:
@@ -103,21 +109,39 @@ def expand_frontier(
     propagate along this closure — the friend-of-a-friend principle).
 
     Returns (ids (capacity,) int32 ascending with -1 padding at the tail,
-    mask (n,) bool). When the closure exceeds ``capacity`` the smallest
-    ``capacity`` ids are kept (the mask is exact either way). The mask
-    passes are O(n*k) bitwise work — no distance evaluations; the point is
-    that the *expensive* per-row kernels then run on the compacted ids.
+    mask (n,) bool). When the closure exceeds ``capacity`` the rows
+    NEAREST the seeds (fewest hops, ids breaking ties) are kept — the
+    old smallest-id truncation systematically dropped late rows on
+    hub-heavy closures (ROADMAP watch item). The mask is exact either
+    way. The hop passes are O(n*k) bitwise work — no distance
+    evaluations; the point is that the *expensive* per-row kernels then
+    run on the compacted ids.
     """
     n, _ = graph_idx.shape
-    mask = jnp.zeros((n,), bool)
-    mask = mask.at[jnp.where(seeds >= 0, seeds, n)].set(True, mode="drop")
-    for _h in range(hops):
-        hit = mask[:, None] & (graph_idx >= 0)
+    # scatter-min BFS: hop[i] = fewest hops from any seed (hops+1 = unseen)
+    hop = jnp.full((n,), hops + 1, jnp.int32)
+    hop = hop.at[jnp.where(seeds >= 0, seeds, n)].min(0, mode="drop")
+    for h in range(1, hops + 1):
+        hit = (hop[:, None] < h) & (graph_idx >= 0)
         tgt = jnp.where(hit, graph_idx, n).reshape(-1)
-        mask = mask.at[tgt].set(True, mode="drop")
+        hop = hop.at[tgt].min(h, mode="drop")
+    mask = hop <= hops
     if alive is not None:
         mask &= alive
-    ids = jnp.nonzero(mask, size=capacity, fill_value=-1)[0].astype(jnp.int32)
+    big = jnp.iinfo(jnp.int32).max
+    kcap = min(capacity, n)
+    # lexicographic (hop, id) packed into one key — (hops+2)*n stays well
+    # inside int32 for every supported store size
+    score = jnp.where(mask, hop * n + jnp.arange(n, dtype=jnp.int32), big)
+    sel = jnp.sort(score)[:kcap]
+    # recover ids and re-sort ascending (the -1 tail sorts last via the
+    # n sentinel) — _frontier_slots searchsorts over this buffer
+    ids = jnp.sort(jnp.where(sel < big, sel % n, n))
+    ids = jnp.where(ids < n, ids, -1).astype(jnp.int32)
+    if kcap < capacity:
+        ids = jnp.concatenate(
+            [ids, jnp.full((capacity - kcap,), -1, jnp.int32)]
+        )
     return ids, mask
 
 
@@ -128,25 +152,30 @@ def expand_frontier(
 
 def _batch_key(queries: jax.Array) -> jax.Array:
     """Content-derived entry key: replaces the retired silent
-    ``jax.random.key(0)`` fallback. Distinct serving batches get distinct
-    entry points; the same batch stays deterministic."""
-    h = jax.lax.bitcast_convert_type(
-        jnp.sum(queries, dtype=jnp.float32), jnp.uint32
-    )
-    return jax.random.fold_in(jax.random.key(0), h)
+    ``jax.random.key(0)`` fallback. Two folds: the plain feature sum plus
+    a position-weighted sum (bounded cos weights, so the positional term
+    survives f32 accumulation at any batch size) — permuted batches share
+    the first hash but not the second, so shuffled copies of a batch no
+    longer reuse identical entry points."""
+    flat = queries.astype(jnp.float32).reshape(-1)
+    w = jnp.cos(jnp.arange(flat.shape[0], dtype=jnp.float32) * 1.6180339)
+    h1 = jax.lax.bitcast_convert_type(jnp.sum(flat), jnp.uint32)
+    h2 = jax.lax.bitcast_convert_type(jnp.sum(flat * w), jnp.uint32)
+    return jax.random.fold_in(jax.random.fold_in(jax.random.key(0), h1), h2)
 
 
 def _draw_entries(
     key: jax.Array, n: int, beam: int, alive: jax.Array | None
 ) -> jax.Array:
-    """One entry per beam slot, uniform over live rows."""
-    if alive is None:
-        return jax.random.randint(key, (beam,), 0, n)
-    # uniform over live rows: top-`beam` random keys among alive (clamped
-    # to n when the pool is wider than the corpus)
-    w = jnp.where(alive, jax.random.uniform(key, (n,)), -1.0)
+    """One entry per beam slot, uniform over live rows. Both branches use
+    the keyed top-k draw — sampling WITHOUT replacement (the retired
+    ``randint`` draw produced duplicate ids that the pool merge then
+    dedup'd away, silently wasting beam slots). Width is min(beam, n)."""
+    w = jax.random.uniform(key, (n,))
+    if alive is not None:
+        w = jnp.where(alive, w, -1.0)
     _, entry = jax.lax.top_k(w, min(beam, n))
-    return entry
+    return entry.astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -168,11 +197,19 @@ def graph_search(
     x2: jax.Array | None = None,      # (n,) cached squared norms
     cfg: SearchConfig | None = None,
     qstore: QuantizedStore | None = None,   # cached quantized corpus
+    router=None,                            # core/router.Router — routed seeds
 ):
     """Returns (dist (q, k_out), idx (q, k_out)) ascending; empty slots
     are (+inf/_BIG, -1).
 
     ``cfg`` wins over the legacy ``beam``/``rounds`` kwargs when given.
+    ``entry`` may be (e,) shared across the batch or (q, e) per-query
+    (-1 = hole). With ``router`` given (and ``cfg.router != "off"``) the
+    beam is seeded per-query from the member rows of the query's top
+    ``cfg.router_t`` centroids — the hierarchical entry points that fix
+    the large-n recall collapse of uniform-random seeding; holes (dead or
+    missing members) fall back to the random draw. ``backend="ref"``
+    keeps random entries (the parity oracle).
     With ``alive`` given (the online store's tombstone mask), dead nodes
     are neither expanded nor returned: entry points are drawn from live
     rows only and dead neighbors are masked out of the candidate tile.
@@ -195,7 +232,28 @@ def graph_search(
     n = graph_idx.shape[0]
     if entry is None:
         key = _batch_key(queries) if key is None else key
-        entry = _draw_entries(key, n, cfg.beam, alive)
+        if (router is not None and cfg.router != "off"
+                and cfg.backend != "ref" and queries.shape[0] > 0):
+            from repro.core.router import route_entries
+            # probe the FULL member set of the top-t centroids (IVF-style:
+            # up to t*m candidates), not just beam of them — the seed tile
+            # scores every candidate against the query and the bounded
+            # merge keeps the best ``beam``, so wider probing costs one
+            # wider seed tile, never a wider traversal
+            t = min(cfg.router_t, router.centroids.shape[0])
+            width = min(max(cfg.beam, t * router.members.idx.shape[1]), n)
+            ent = route_entries(
+                router, queries, width, t=cfg.router_t, backend=cfg.backend,
+            )                                           # (q, e), -1 holes
+            if alive is not None:
+                ent = jnp.where(
+                    (ent >= 0) & alive[jnp.clip(ent, 0, n - 1)], ent, -1
+                )
+            # holes (dead or missing members) fall back to a random draw
+            rnd = _draw_entries(key, n, width, alive)
+            entry = jnp.where(ent >= 0, ent, rnd[None, :])
+        else:
+            entry = _draw_entries(key, n, cfg.beam, alive)
     entry = entry.astype(jnp.int32)
     if cfg.precision == "f32" or cfg.backend == "ref":
         qstore = None
@@ -223,10 +281,13 @@ def graph_search(
     pad = (-nq) % qb
     qp = jnp.pad(queries, ((0, pad), (0, 0)))
     q2 = jnp.sum(qp * qp, axis=1)
+    if entry.ndim == 2:     # per-query seeds ride along with their block
+        entry = jnp.pad(entry, ((0, pad), (0, 0)), constant_values=-1)
     outs_d, outs_i = [], []
     for s in range(0, nq + pad, qb):
+        ent_b = entry if entry.ndim == 1 else entry[s:s + qb]
         od, oi = _search_block(
-            x, x2, graph_idx, qp[s:s + qb], q2[s:s + qb], entry, alive,
+            x, x2, graph_idx, qp[s:s + qb], q2[s:s + qb], ent_b, alive,
             qstore, k_out=k_out, cfg=cfg,
         )
         outs_d.append(od)
@@ -248,7 +309,7 @@ def _search_block(
     graph_idx: jax.Array,  # (n, k)
     q: jax.Array,          # (qb, dp) f32 query block
     q2: jax.Array,         # (qb,) query squared norms (hoisted)
-    entry: jax.Array,      # (e,) entry ids (shared across the block)
+    entry: jax.Array,      # (e,) shared or (qb, e) per-query entry ids
     alive: jax.Array | None,
     qstore: QuantizedStore | None,   # quantized corpus mirror (quant only)
     *,
@@ -278,7 +339,31 @@ def _search_block(
     # ---- seed the pool: all entry distances in ONE blocked matmul, then
     # one bounded merge (dedups repeated entries, drops dead ones)
     ent = jnp.clip(entry, 0, n - 1)
-    if quant:
+    if entry.ndim == 2:
+        # per-query (routed) seeds: the gathered (qb, e, dp) rows go
+        # through the same masked search tile as candidate scoring, so
+        # -1 holes come back +inf and vanish in the merge
+        eids = entry
+        if alive is not None:
+            eids = jnp.where(alive[ent], eids, -1)
+        if quant:
+            c2q = jnp.where(eids >= 0, qstore.x2[ent], 0.0)
+            if cfg.precision == "int8":
+                ed = ops.knn_search_dists_q8(
+                    qq.data, qq.scale, qq.x2, qstore.data[ent],
+                    qstore.scale[ent], c2q, eids, backend=cfg.backend,
+                )                                       # (qb, E0)
+            else:
+                ed = ops.knn_search_dists_bf16(
+                    qq.data, qq.x2, qstore.data[ent], c2q, eids,
+                    backend=cfg.backend,
+                )                                       # (qb, E0)
+        else:
+            ed = ops.knn_search_dists(
+                q, q2, x[ent], jnp.where(eids >= 0, x2[ent], 0.0), eids,
+                backend=cfg.backend,
+            )                                           # (qb, E0)
+    elif quant:
         ab = qq.data.astype(jnp.float32) @ (
             qstore.data[ent].astype(jnp.float32).T
         )
@@ -286,13 +371,16 @@ def _search_block(
         ed = jnp.maximum(
             qq.x2[:, None] + qstore.x2[ent][None, :] - 2.0 * ab, 0.0
         )                                               # (qb, E0)
+        eids = jnp.broadcast_to(entry[None, :], ed.shape)
+        if alive is not None:
+            eids = jnp.where(alive[ent][None, :], eids, -1)
     else:
         ed = jnp.maximum(
             q2[:, None] + x2[ent][None, :] - 2.0 * q @ x[ent].T, 0.0
         )                                               # (qb, E0)
-    eids = jnp.broadcast_to(entry[None, :], ed.shape)
-    if alive is not None:
-        eids = jnp.where(alive[ent][None, :], eids, -1)
+        eids = jnp.broadcast_to(entry[None, :], ed.shape)
+        if alive is not None:
+            eids = jnp.where(alive[ent][None, :], eids, -1)
     pool = NeighborLists(
         jnp.full((qb, beam), jnp.inf, jnp.float32),
         jnp.full((qb, beam), -1, jnp.int32),
@@ -396,7 +484,7 @@ def _graph_search_ref(
     x2: jax.Array,         # (n,) corpus squared norms (hoisted)
     graph_idx: jax.Array,  # (n, k)
     queries: jax.Array,    # (q, dp) f32
-    entry: jax.Array,      # (e,) entry ids
+    entry: jax.Array,      # (e,) shared or (q, e) per-query entry ids
     alive: jax.Array | None,
     *,
     k_out: int,
@@ -407,18 +495,25 @@ def _graph_search_ref(
     path's parity oracle. Norms are hoisted: x2 comes in precomputed and
     each query's norm is evaluated once per batch, not once per round."""
     n, k = graph_idx.shape
+    if entry.ndim == 1:
+        entry = jnp.broadcast_to(
+            entry[None, :], (queries.shape[0], entry.shape[0])
+        )
 
     def q_dist(q, q2s, ids):
         rows = x[ids]
         return jnp.maximum(x2[ids] - 2.0 * rows @ q + q2s, 0.0)
 
-    def one_query(q, q2s):
+    def one_query(q, q2s, ent):
         pool_i = jnp.full((beam,), -1, dtype=jnp.int32)
         pool_d = jnp.full((beam,), _BIG, dtype=jnp.float32)
         pool_e = jnp.zeros((beam,), dtype=bool)   # expanded?
-        e = entry.shape[0]
-        pool_i = pool_i.at[:e].set(entry.astype(jnp.int32))
-        pool_d = pool_d.at[:e].set(q_dist(q, q2s, entry))
+        e = ent.shape[0]
+        ve = ent >= 0
+        pool_i = pool_i.at[:e].set(jnp.where(ve, ent, -1).astype(jnp.int32))
+        pool_d = pool_d.at[:e].set(
+            jnp.where(ve, q_dist(q, q2s, jnp.clip(ent, 0, n - 1)), _BIG)
+        )
         if alive is not None:
             dead = (pool_i >= 0) & ~alive[jnp.clip(pool_i, 0, n - 1)]
             pool_d = jnp.where(dead, _BIG, pool_d)
@@ -461,11 +556,10 @@ def _graph_search_ref(
             0, rounds, round_fn, (pool_d, pool_i, pool_e)
         )
         out_d, out_i = pool_d[:k_out], pool_i[:k_out]
-        if alive is not None:
-            # dead entry points survive in the pool at distance _BIG;
-            # never surface them
-            out_i = jnp.where(out_d >= _BIG, -1, out_i)
+        # dead / hole entry points survive in the pool at distance _BIG;
+        # never surface them
+        out_i = jnp.where(out_d >= _BIG, -1, out_i)
         return out_d, out_i
 
     q2 = jnp.sum(queries * queries, axis=1)
-    return jax.vmap(one_query)(queries, q2)
+    return jax.vmap(one_query)(queries, q2, entry)

@@ -143,20 +143,31 @@ def compact_pairs(recv, cand, dist, n: int, c: int):
     return out_d, out_i
 
 
-def invert_candidates(cands: jax.Array, n_univ: int, src_cap: int):
+def invert_candidates(
+    cands: jax.Array, n_univ: int, src_cap: int,
+    prio: jax.Array | None = None,
+):
     """Invert (row -> candidate) incidences: for every candidate id in
     [0, n_univ), the (row, slot) positions that list it, compacted into
-    (n_univ, src_cap) padded buffers (-1 tail). Overflow beyond src_cap
-    keeps the smallest (row, slot) incidences — deterministic, and
-    bounded-buffer sampling noise like every other buffer here.
+    (n_univ, src_cap) padded buffers (-1 tail). Overflow beyond src_cap:
+    with ``prio`` (same shape as ``cands``, e.g. a distance) the LOWEST
+    priority incidences are kept per candidate — the old smallest-
+    (row, slot) policy was a systematic bias against late rows on
+    hub-heavy buffers; without ``prio`` the old deterministic id order
+    is preserved (pure adjacency inversions have no distance to rank by).
 
-    One stable argsort of the n*C incidence ids — the only sort left in
-    the fused build hot path, ~pairs/C times smaller than the retired
-    global pair sort."""
+    One stable (arg|lex)sort of the n*C incidence ids — the only sort
+    left in the fused build hot path, ~pairs/C times smaller than the
+    retired global pair sort."""
     nr, c = cands.shape
     flat = cands.reshape(-1)
     key = jnp.where(flat >= 0, flat, n_univ)
-    order = jnp.argsort(key, stable=True).astype(jnp.int32)
+    if prio is None:
+        order = jnp.argsort(key, stable=True).astype(jnp.int32)
+    else:
+        # candidate-major, priority-minor; lexsort is stable so equal
+        # priorities still fall back to the old (row, slot) order
+        order = jnp.lexsort((prio.reshape(-1), key)).astype(jnp.int32)
     rs = key[order]
     first = jnp.searchsorted(rs, jnp.arange(n_univ + 1))
     pos = jnp.arange(nr * c) - first[jnp.clip(rs, 0, n_univ)]
@@ -212,7 +223,12 @@ def local_join_fused(
 
     kth = nl.dist[:, -1]
     s_cap = cfg.join_src or 2 * c_all
-    rows_of, slot_of = invert_candidates(cands, n, s_cap)
+    # overflow priority: each (row, slot) incidence contributes the row's
+    # pair distances to the candidate — rank it by the best distance it
+    # can offer, so buffer overflow drops the least useful incidences
+    # instead of the highest (row, slot)
+    inc_prio = dists.min(axis=2)                     # (n, C)
+    rows_of, slot_of = invert_candidates(cands, n, s_cap, prio=inc_prio)
 
     # receiver chunks: pad everything to a chunk multiple so every merge
     # is a full in-bounds block (padding rows have no incidences -> no-op)

@@ -68,6 +68,14 @@ from repro.core.nn_descent import (
     compact_pairs,
     invert_candidates,
 )
+from repro.core.router import (
+    Router,
+    RouterConfig,
+    build_router,
+    needs_rebuild,
+    router_delete,
+    router_insert,
+)
 from repro.kernels import ops
 
 _FILL = 1e6   # coordinate fill for unallocated rows (cf. layout.pad_points)
@@ -113,6 +121,15 @@ class OnlineConfig:
                               # O(frontier) rows — bandwidth is not their
                               # bottleneck; the graph's stored distances
                               # stay exact for free).
+    router: RouterConfig | None = None
+                              # coarse routing layer (core/router.py):
+                              # when set, the store keeps a centroid
+                              # router that seeds every search with
+                              # hierarchical entry points, maintained
+                              # incrementally on insert/delete and
+                              # rebuilt lazily past the drift threshold.
+                              # Frozen (hashable) — OnlineConfig is a
+                              # static jit argument of the stitch path.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +146,8 @@ class MutableKNNStore:
     cfg: OnlineConfig
     qs: QuantizedStore | None = None  # quantized mirror of ``x``
                                       # (cfg.precision != "f32" only)
+    router: Router | None = None      # coarse routing layer
+                                      # (cfg.router is not None only)
 
     @property
     def capacity(self) -> int:
@@ -185,6 +204,14 @@ class MutableKNNStore:
                     width=quantize.mirror_width(d, store.x.shape[1]),
                 ),
             )
+        if cfg.router is not None:
+            store = dataclasses.replace(
+                store,
+                router=build_router(
+                    store.x, cfg=cfg.router, key=jax.random.key(29),
+                    alive=store.alive, x2=store.x2, backend=cfg.backend,
+                ),
+            )
         return store
 
     @classmethod
@@ -229,6 +256,7 @@ class MutableKNNStore:
         return graph_search(
             self.x, self.nl.idx, q, k_out=k_out, key=key,
             alive=self.alive, x2=self.x2, cfg=cfg, qstore=self.qs,
+            router=self.router,
         )
 
 
@@ -269,6 +297,11 @@ def _grown(store: MutableKNNStore, need: int) -> MutableKNNStore:
         store,
         qs=(None if store.qs is None
             else quantize.grow(store.qs, new_cap, _FILL)),
+        router=(None if store.router is None
+                else store.router._replace(assign=jnp.concatenate(
+                    [store.router.assign,
+                     jnp.full((pad,), -1, jnp.int32)]
+                ))),
         x=jnp.concatenate(
             [store.x, jnp.full((pad, dp), _FILL, jnp.float32)]
         ),
@@ -321,7 +354,10 @@ def _route_reverse(
     f = fids.shape[0]
     m, w = recv.shape
     lrecv = _frontier_slots(fids, recv.reshape(-1)).reshape(m, w)
-    rows_of, slot_of = invert_candidates(lrecv, f, s_cap)
+    # overflow keeps the closest incoming edges per receiver, not the
+    # smallest (row, slot) — hub receivers on hub-heavy inserts no longer
+    # systematically drop late sources
+    rows_of, slot_of = invert_candidates(lrecv, f, s_cap, prio=dd)
     ok = rows_of >= 0
     lin = jnp.where(ok, rows_of * w + slot_of, 0)
     gd = jnp.where(ok, dd.reshape(-1)[lin], jnp.inf)        # (f, s_cap)
@@ -501,7 +537,7 @@ def knn_insert(
     )
     seed_d, seed_i = graph_search(
         store.x, store.nl.idx, q, k_out=k, key=key, alive=store.alive,
-        x2=store.x2, cfg=scfg, qstore=store.qs,
+        x2=store.x2, cfg=scfg, qstore=store.qs, router=store.router,
     )
     # analytic eval bound: beam entry distances + k per expanded node (the
     # fused path expands in chunks of seed_expand, so round the budget up
@@ -519,6 +555,12 @@ def knn_insert(
     qs = store.qs if store.qs is None else quantize.update_rows(
         store.qs, ids, q
     )
+    router = store.router
+    if router is not None:
+        router = router_insert(router, ids, q, backend=cfg.backend)
+        router = _maybe_rebuild_router(
+            router, x, x2, alive, cfg, jax.random.fold_in(key, 911)
+        )
     stats = DescentStats(
         iters=cfg.refine_rounds,
         dist_evals=seed_evals + int(evals),
@@ -528,9 +570,52 @@ def knn_insert(
     )
     return (
         dataclasses.replace(
-            store, x=x, x2=x2, nl=nl, alive=alive, n=store.n + m, qs=qs
+            store, x=x, x2=x2, nl=nl, alive=alive, n=store.n + m, qs=qs,
+            router=router,
         ),
         stats,
+    )
+
+
+def _maybe_rebuild_router(
+    router: Router,
+    x: jax.Array,
+    x2: jax.Array,
+    alive: jax.Array,
+    cfg: OnlineConfig,
+    key: jax.Array,
+) -> Router:
+    """Lazy drift rebuild: incremental maintenance keeps the router exact
+    w.r.t. assignments/members, but the CENTROIDS slowly stop describing
+    the data as the corpus churns — past the drift threshold, refit."""
+    rcfg = cfg.router or RouterConfig()
+    if needs_rebuild(router, int(jnp.sum(alive)), rcfg):
+        return build_router(
+            x, cfg=rcfg, key=key, alive=alive, x2=x2, backend=cfg.backend,
+        )
+    return router
+
+
+def ensure_router(
+    store: MutableKNNStore,
+    rcfg: RouterConfig | None = None,
+    *,
+    key: jax.Array | None = None,
+) -> MutableKNNStore:
+    """Idempotently attach a router to an existing store (serving-side
+    plumbing: ContinuousBatcher / MutableKNNDatastore opt in without
+    rebuilding the store)."""
+    if store.router is not None:
+        return store
+    rcfg = rcfg or store.cfg.router or RouterConfig()
+    return dataclasses.replace(
+        store,
+        cfg=dataclasses.replace(store.cfg, router=rcfg),
+        router=build_router(
+            store.x, cfg=rcfg,
+            key=jax.random.key(29) if key is None else key,
+            alive=store.alive, x2=store.x2, backend=store.cfg.backend,
+        ),
     )
 
 
@@ -677,12 +762,22 @@ def knn_delete(
     cap = store.capacity
     chunk = max(1, min(cfg.chunk, cap))
 
+    router = store.router
+    if router is not None:
+        # the alive mask changed on EVERY return path below — maintain
+        # the router here, before the early no-frontier exit
+        router = router_delete(router, ids, alive, backend=cfg.backend)
+        router = _maybe_rebuild_router(
+            router, store.x, store.x2, alive, cfg,
+            jax.random.fold_in(jax.random.key(31), int(ids.shape[0])),
+        )
+
     if cfg.frontier:
         need = _delete_need(store.nl.idx, alive)
         f = int(jnp.sum(need))
         if f == 0:
             return (
-                dataclasses.replace(store, alive=alive),
+                dataclasses.replace(store, alive=alive, router=router),
                 DescentStats(iters=0, dist_evals=0, frontier_rows=0,
                              padded_rows=0),
             )
@@ -728,4 +823,7 @@ def knn_delete(
         iters=1, dist_evals=int(evals), updates=(int(upd),),
         frontier_rows=f, padded_rows=n_chunks * chunk,
     )
-    return dataclasses.replace(store, nl=nl, alive=alive), stats
+    return (
+        dataclasses.replace(store, nl=nl, alive=alive, router=router),
+        stats,
+    )

@@ -56,6 +56,29 @@ def pairwise_sq_l2(
     return ref.pairwise_sq_l2(a, b)
 
 
+def centroid_assign(
+    q: jax.Array,
+    q2: jax.Array,
+    cent: jax.Array,
+    c2: jax.Array,
+    *,
+    t: int = 1,
+    backend: str = "auto",
+):
+    """Router centroid assignment: top-``t`` nearest centroids per row,
+    (m, dp) x (c, dp) -> (dist (m, t) ascending, idx (m, t)). The distance
+    tile reuses the blocked pairwise-l2 kernel (pallas/interpret) or its
+    norm-expansion oracle (ref); the partial top-k reduction is shared."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend in ("pallas", "interpret"):
+        d = pairwise_sq_l2_blocked(q, cent, interpret=backend == "interpret")
+        neg, idx = jax.lax.top_k(-d, t)
+        import jax.numpy as _jnp
+        return _jnp.maximum(-neg, 0.0), idx.astype(_jnp.int32)
+    return ref.centroid_assign(q, q2, cent, c2, t)
+
+
 def knn_join_dists(
     xg: jax.Array,
     x2g: jax.Array,

@@ -41,6 +41,27 @@ def pairwise_sq_l2(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.maximum(out, 0.0)
 
 
+def centroid_assign(
+    q: jax.Array,      # (m, dp) rows to assign
+    q2: jax.Array,     # (m,) cached squared norms
+    cent: jax.Array,   # (c, dp) centroids
+    c2: jax.Array,     # (c,) centroid squared norms
+    t: int,            # top-t nearest centroids returned per row
+) -> tuple[jax.Array, jax.Array]:
+    """Top-``t`` nearest centroids per row: one norm-expansion distance
+    tile + partial top-k. Returns (dist (m, t) ascending, idx (m, t)).
+    Oracle for the router's centroid-assignment dispatch (kernels/ops.py
+    routes the pallas/interpret backends through the blocked l2 kernel +
+    the same top-k reduction)."""
+    d = jnp.maximum(
+        q2[:, None] + c2[None, :]
+        - 2.0 * q.astype(jnp.float32) @ cent.astype(jnp.float32).T,
+        0.0,
+    )
+    neg, idx = jax.lax.top_k(-d, t)
+    return jnp.maximum(-neg, 0.0), idx.astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # Fused local join (paper §3.3 + §2 fused) — oracles for kernels/knn_join.py
 # ---------------------------------------------------------------------------

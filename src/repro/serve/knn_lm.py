@@ -31,6 +31,7 @@ from repro.core.online import (
     knn_insert,
 )
 from repro.core.quantize import QuantizedStore, quantize_corpus
+from repro.core.router import Router, RouterConfig, build_router
 
 
 @dataclasses.dataclass
@@ -45,18 +46,24 @@ class KNNDatastore:
     # (built when ``build(precision=...)`` is quantized; the search
     # re-ranks fp32, so retrieval distances stay exact)
     qstore: QuantizedStore | None = None
+    # coarse routing layer (core/router.py): hierarchical entry points
+    # for every knn_logits search (built when ``build(router=...)``)
+    router: Router | None = None
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
               cfg: DescentConfig | None = None,
               precision: str = "f32",
+              router: RouterConfig | None = None,
               key: jax.Array | None = None):
         """``precision`` selects the serving-time candidate-scoring dtype
         (SearchConfig.precision): quantized modes precompute the corpus
         mirror here so every knn_logits call scores on int8/bf16 rows.
         The precision is carried by the mirror itself (knn_logits derives
         a quantized SearchConfig from it per call), NOT by pinning
-        ``search_cfg`` — so per-call ``beam``/``rounds`` keep working."""
+        ``search_cfg`` — so per-call ``beam``/``rounds`` keep working.
+        ``router`` builds the coarse routing layer over the keys so every
+        retrieval seeds its beam from the query's nearest centroids."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
         dist, idx, st = build_knn_graph(keys, k=k, cfg=cfg, key=key)
         keys = keys.astype(jnp.float32)
@@ -68,6 +75,11 @@ class KNNDatastore:
                          "reordered": st.reordered},
             qstore=(None if precision == "f32"
                     else quantize_corpus(keys, precision)),
+            router=(None if router is None
+                    else build_router(
+                        keys, cfg=router,
+                        key=jax.random.key(29) if key is None else key,
+                    )),
         )
 
 
@@ -92,6 +104,7 @@ class MutableKNNDatastore:
               frontier_chunk: int | None = None,
               q_block: int | None = None,
               precision: str | None = None,
+              router: RouterConfig | None = None,
               key: jax.Array | None = None):
         """``frontier_chunk`` overrides the online store's frontier chunk
         size (OnlineConfig.chunk): streamed decode-time inserts touch a
@@ -103,7 +116,10 @@ class MutableKNNDatastore:
         so serving stacks match it to their decode batch. ``precision``
         overrides OnlineConfig.precision: quantized modes make the store
         keep an int8/bf16 mirror that the query and insert-seeding
-        searches score on (fp32 re-rank — exact retrieval distances)."""
+        searches score on (fp32 re-rank — exact retrieval distances).
+        ``router`` overrides OnlineConfig.router: the store builds and
+        maintains the coarse routing layer (hierarchical entry points for
+        every query and insert-seeding search)."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
         online_cfg = online_cfg or OnlineConfig()
         if frontier_chunk is not None:
@@ -114,6 +130,8 @@ class MutableKNNDatastore:
         if precision is not None:
             online_cfg = dataclasses.replace(online_cfg,
                                              precision=precision)
+        if router is not None:
+            online_cfg = dataclasses.replace(online_cfg, router=router)
         store, st = MutableKNNStore.build(
             keys, k=k, cfg=online_cfg, descent=cfg, key=key)
         vals = jnp.zeros((store.capacity,), values.dtype)
@@ -175,7 +193,8 @@ def knn_logits(
     else:
         dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
                                  k_out=k, beam=beam, rounds=rounds,
-                                 key=key, cfg=cfg, qstore=ds.qstore)
+                                 key=key, cfg=cfg, qstore=ds.qstore,
+                                 router=getattr(ds, "router", None))
     w = jax.nn.softmax(-dist / temperature, axis=-1)        # (q, k)
     vals = ds.values[jnp.clip(idx, 0, ds.values.shape[0] - 1)]
     probs = jnp.zeros((queries.shape[0], vocab))

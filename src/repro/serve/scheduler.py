@@ -47,7 +47,8 @@ class ContinuousBatcher:
                  knn_capture: Callable | None = None,
                  knn_chunk: int = 64,
                  knn_frontier_chunk: int | None = None,
-                 knn_q_block: int | None = None):
+                 knn_q_block: int | None = None,
+                 knn_router: Any | None = None):
         self.n_slots = n_slots
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -72,6 +73,16 @@ class ContinuousBatcher:
                     knn_store,
                     store=dataclasses.replace(knn_store.store,
                                               cfg=store_cfg),
+                )
+            if knn_router is not None:
+                # attach the coarse routing layer (idempotent): every
+                # retrieval and insert-seeding search gets hierarchical
+                # entry points; the store maintains the router across the
+                # capture-hook inserts. True = default RouterConfig.
+                from repro.core.online import ensure_router
+                rcfg = None if knn_router is True else knn_router
+                knn_store = dataclasses.replace(
+                    knn_store, store=ensure_router(knn_store.store, rcfg)
                 )
         self.slots = [SlotState() for _ in range(n_slots)]
         self.queue: list[Request] = []

@@ -227,3 +227,25 @@ def test_fused_build_deterministic_and_seeded_recall():
     assert r >= 0.993, r
     _, idx2, _ = build_knn_graph(x, k=10, cfg=cfg, key=jax.random.key(5))
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+
+
+def test_invert_candidates_overflow_prefers_near_pairs():
+    """Distance-prioritized overflow: when a candidate's incidence buffer
+    overflows, the kept incidences must be the NEAREST sources, not the
+    smallest (row, slot) — the id-biased policy systematically dropped
+    late close pairs on hub-heavy rounds."""
+    # 8 rows all propose candidate 0; priorities DECREASE with row id, so
+    # the id-biased policy keeps exactly the wrong half
+    cands = jnp.zeros((8, 1), jnp.int32)
+    prio = jnp.asarray(np.arange(8, 0, -1, dtype=np.float32)).reshape(8, 1)
+    rows_of, _ = invert_candidates(cands, 1, 4)
+    assert sorted(np.asarray(rows_of)[0].tolist()) == [0, 1, 2, 3]
+    rows_of, slot_of = invert_candidates(cands, 1, 4, prio=prio)
+    kept = np.asarray(rows_of)[0]
+    assert sorted(kept.tolist()) == [4, 5, 6, 7], kept
+    assert (np.asarray(slot_of)[0] == 0).all()
+    # no-overflow behavior is unchanged by a prio argument
+    r1, s1 = invert_candidates(cands, 1, 8)
+    r2, s2 = invert_candidates(cands, 1, 8, prio=prio)
+    assert sorted(np.asarray(r1)[0].tolist()) == sorted(
+        np.asarray(r2)[0].tolist())

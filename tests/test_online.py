@@ -330,3 +330,21 @@ def test_scheduler_capture_grows_datastore():
     # 3 requests x 8 tokens, minus the un-captured prefill token each
     assert b.knn_store.store.n == ds.store.n + 21
     assert b.knn_store.store.live_count() == ds.store.n + 21
+
+
+def test_expand_frontier_overflow_prefers_near_hops():
+    """Overflow regression for the frontier truncation: the kept rows
+    must be the ones FEWEST hops from the seeds — the old smallest-id
+    policy dropped the whole 1-hop ring here in favor of far 2-hop rows
+    that happened to carry small ids."""
+    idx = jnp.full((10, 2), -1, jnp.int32)
+    idx = idx.at[0].set(jnp.asarray([8, 9]))     # seed -> high-id 1-hop
+    idx = idx.at[8].set(jnp.asarray([1, 2]))     # ... -> low-id 2-hop
+    idx = idx.at[9].set(jnp.asarray([3, -1]))
+    seeds = jnp.asarray([0], jnp.int32)
+    ids, mask = expand_frontier(idx, seeds, hops=2, capacity=3)
+    # closure is {0, 8, 9, 1, 2, 3}; id-biased truncation kept {0, 1, 2}
+    assert np.asarray(ids).tolist() == [0, 8, 9]
+    # the mask stays exact regardless of truncation
+    assert bool(mask[1]) and bool(mask[2]) and bool(mask[3])
+    assert int(mask.sum()) == 6

@@ -1,0 +1,264 @@
+"""Coarse routing layer (core/router.py): build invariants, routed
+entry seeding vs the uniform-random draw (the large-n recall pin),
+parity knobs (router="off", backend="ref"), and incremental
+insert/delete maintenance with the lazy drift rebuild."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    OnlineConfig,
+    RouterConfig,
+    SearchConfig,
+    brute_force_knn,
+    build_knn_graph,
+    build_router,
+    datasets,
+    knn_delete,
+    knn_insert,
+    recall_at_k,
+)
+from repro.core.graph_search import graph_search
+from repro.core.online import MutableKNNStore
+from repro.core.router import (
+    needs_rebuild,
+    resolve_centroids,
+    route_entries,
+    router_delete,
+    router_insert,
+    top_centroids,
+)
+
+
+# ---------------------------------------------------------------------------
+# build invariants
+# ---------------------------------------------------------------------------
+
+def test_router_build_invariants():
+    x = datasets.clustered(jax.random.key(0), 1024, 16, 8)
+    cfg = RouterConfig(n_centroids=32, sample=1024, members=16, graph_k=4)
+    r = build_router(x, cfg=cfg, key=jax.random.key(1))
+    c = r.centroids.shape[0]
+    assert c == 32
+    # every row assigned, counts account for every live row
+    a = np.asarray(r.assign)
+    assert ((a >= 0) & (a < c)).all()
+    assert int(r.counts.sum()) == x.shape[0]
+    cnt = np.bincount(a, minlength=c)
+    np.testing.assert_array_equal(np.asarray(r.counts), cnt)
+    # member lists hold rows of their own centroid, nearest-first
+    mi = np.asarray(r.members.idx)
+    md = np.asarray(r.members.dist)
+    for ci in range(c):
+        rows = mi[ci][mi[ci] >= 0]
+        assert (a[rows] == ci).all()
+        d = md[ci][mi[ci] >= 0]
+        assert (np.diff(d) >= -1e-6).all()
+    # mini-graph: valid degree, ids in range, no self loops
+    g = np.asarray(r.graph)
+    assert g.shape[1] == 4
+    assert ((g >= -1) & (g < c)).all()
+    assert (g != np.arange(c)[:, None]).all()
+    assert int(r.stale) == 0
+
+
+def test_router_build_with_tombstones():
+    x = datasets.clustered(jax.random.key(2), 512, 8, 4)
+    alive = jnp.arange(512) % 4 != 0          # kill every 4th row
+    cfg = RouterConfig(n_centroids=16, sample=512, members=16)
+    r = build_router(x, cfg=cfg, key=jax.random.key(3), alive=alive)
+    a = np.asarray(r.assign)
+    al = np.asarray(alive)
+    assert (a[~al] == -1).all() and (a[al] >= 0).all()
+    assert int(r.counts.sum()) == int(alive.sum())
+    mi = np.asarray(r.members.idx)
+    assert al[mi[mi >= 0]].all()              # members are live rows only
+
+
+def test_resolve_centroids_policy():
+    assert resolve_centroids(100, RouterConfig(n_centroids=32)) == 32
+    assert resolve_centroids(8, RouterConfig(n_centroids=32)) == 8
+    assert resolve_centroids(100, RouterConfig()) == 16       # floor
+    assert resolve_centroids(10**8, RouterConfig()) == 1024   # ceiling
+    assert resolve_centroids(65536, RouterConfig()) == 256    # sqrt
+
+
+def test_route_entries_shape_and_validity():
+    x = datasets.clustered(jax.random.key(4), 512, 8, 4)
+    cfg = RouterConfig(n_centroids=8, sample=512, members=8)
+    r = build_router(x, cfg=cfg, key=jax.random.key(5))
+    q = x[:6] + 0.01
+    ent = route_entries(r, q, 32, t=2)
+    assert ent.shape == (6, 32) and ent.dtype == jnp.int32
+    e = np.asarray(ent)
+    assert ((e >= -1) & (e < 512)).all()
+    # the first entries are members of the query's top centroids
+    _, top = top_centroids(r, q, 2)
+    a = np.asarray(r.assign)
+    tn = np.asarray(top)
+    for qi in range(6):
+        first = e[qi][e[qi] >= 0][:4]
+        assert np.isin(a[first], tn[qi]).all()
+
+
+# ---------------------------------------------------------------------------
+# the large-n recall pin: routed seeding vs uniform-random entries
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def big_clustered():
+    """64 well-separated clusters x 784 rows = 50176 rows (cluster-major
+    layout), with per-cluster exact K-NN subgraphs — the adversarial
+    shape for uniform-random seeding: no inter-cluster edges, so search
+    only ever reaches clusters holding an entry point."""
+    n_c, per, d, k = 64, 784, 16, 10
+    key = jax.random.key(7)
+    kc, kn = jax.random.split(key)
+    cent = jax.random.normal(kc, (n_c, d)) * 12.0
+    noise = jax.random.normal(kn, (n_c, per, d))
+    x = (cent[:, None, :] + noise).reshape(n_c * per, d).astype(jnp.float32)
+
+    @jax.jit
+    def cluster_graph(xc):
+        _, gi = brute_force_knn(xc, xc, k)
+        return gi
+
+    parts = [
+        np.asarray(cluster_graph(x[c * per:(c + 1) * per])) + c * per
+        for c in range(n_c)
+    ]
+    gidx = jnp.asarray(np.concatenate(parts).astype(np.int32))
+    q = x[::196] + 0.01                       # 256 queries, all clusters
+    _, ti = brute_force_knn(x, q, k, exclude_self=False)
+    return x, gidx, q, ti
+
+
+def test_routed_entries_fix_large_n_recall(big_clustered):
+    """The tentpole's receipt in unit form: at n=5e4 with 64 clusters,
+    beam-32 uniform-random entries reach ~half the clusters (recall
+    collapses), routed entries from 256 centroids recover them."""
+    x, gidx, q, ti = big_clustered
+    cfg = SearchConfig(beam=32, rounds=24, expand=4)
+    key = jax.random.key(11)
+    _, ri = graph_search(x, gidx, q, k_out=10, key=key, cfg=cfg)
+    rnd = float(recall_at_k(ri, ti))
+    router = build_router(
+        x, cfg=RouterConfig(n_centroids=256, iters=6), key=jax.random.key(13)
+    )
+    _, si = graph_search(x, gidx, q, k_out=10, key=key, cfg=cfg,
+                         router=router)
+    routed = float(recall_at_k(si, ti))
+    assert rnd < 0.75, rnd       # the collapse is real at this shape
+    assert routed >= 0.85, (routed, rnd)
+    assert routed > rnd, (routed, rnd)
+
+
+def test_router_off_and_ref_backend_keep_random_entries():
+    """cfg.router="off" and backend="ref" must ignore the router — the
+    parity oracle keeps the uniform-random entry contract."""
+    x = datasets.clustered(jax.random.key(20), 512, 8, 4)
+    _, gidx, _ = build_knn_graph(
+        x, k=8, cfg=None, key=jax.random.key(21))
+    router = build_router(
+        x, cfg=RouterConfig(n_centroids=8, sample=512), key=jax.random.key(22)
+    )
+    key = jax.random.key(23)
+    q = x[:16] + 0.01
+    base_d, base_i = graph_search(x, gidx, q, k_out=8, key=key,
+                                  cfg=SearchConfig(router="off"))
+    off_d, off_i = graph_search(x, gidx, q, k_out=8, key=key,
+                                cfg=SearchConfig(router="off"),
+                                router=router)
+    np.testing.assert_array_equal(base_i, off_i)
+    np.testing.assert_array_equal(base_d, off_d)
+    rcfg = SearchConfig(backend="ref")
+    ref_d, ref_i = graph_search(x, gidx, q, k_out=8, key=key, cfg=rcfg)
+    ref2_d, ref2_i = graph_search(x, gidx, q, k_out=8, key=key, cfg=rcfg,
+                                  router=router)
+    np.testing.assert_array_equal(ref_i, ref2_i)
+    np.testing.assert_array_equal(ref_d, ref2_d)
+
+
+# ---------------------------------------------------------------------------
+# incremental maintenance + lazy drift rebuild (the online store path)
+# ---------------------------------------------------------------------------
+
+def _store_with_router(n=256, d=8, rebuild_frac=0.25):
+    x = datasets.clustered(jax.random.key(30), n, d, 4)
+    dist, idx, _ = build_knn_graph(x, k=8, cfg=None, key=jax.random.key(31))
+    cfg = OnlineConfig(router=RouterConfig(
+        n_centroids=16, sample=n, members=16, rebuild_frac=rebuild_frac))
+    return MutableKNNStore.from_graph(x, dist, idx, cfg=cfg), x
+
+
+def test_router_incremental_insert_and_delete():
+    store, x = _store_with_router()
+    assert store.router is not None and int(store.router.stale) == 0
+    # small insert: incremental maintenance, no rebuild
+    pts = x[:8] + 0.05
+    store, _ = knn_insert(store, pts, key=jax.random.key(32))
+    r = store.router
+    assert int(r.stale) == 8
+    new_ids = np.arange(256, 264)
+    a = np.asarray(r.assign)
+    assert (a[new_ids] >= 0).all()
+    assert int(r.counts.sum()) == int(store.alive.sum())
+    # the inserted rows joined their centroid's member list
+    mi = np.asarray(r.members.idx)
+    assert np.isin(new_ids, mi).any()
+    # delete: assignments released, counts decremented, members purged
+    dead = jnp.arange(0, 16, dtype=jnp.int32)
+    store, _ = knn_delete(store, dead)
+    r = store.router
+    a = np.asarray(r.assign)
+    assert (a[:16] == -1).all()
+    assert int(r.counts.sum()) == int(store.alive.sum())
+    mi = np.asarray(r.members.idx)
+    assert not np.isin(np.arange(16), mi[mi >= 0]).any()
+
+
+def test_router_rebuild_after_drift_burst():
+    """An insert burst past rebuild_frac * live triggers the lazy full
+    rebuild: stale resets and the router describes the grown corpus."""
+    store, x = _store_with_router(rebuild_frac=0.25)
+    pts = jnp.tile(x[:16], (6, 1)) + 0.03     # 96 > 0.25 * 352 post-insert
+    store, _ = knn_insert(store, pts, key=jax.random.key(33))
+    r = store.router
+    assert int(r.stale) == 0                  # rebuilt
+    assert int(r.counts.sum()) == int(store.alive.sum())
+    a = np.asarray(r.assign)[:int(store.n)]
+    assert (a >= 0).all()
+    # rebuild keys member lists to live rows only
+    mi = np.asarray(r.members.idx)
+    alive = np.asarray(store.alive)
+    assert alive[mi[mi >= 0]].all()
+
+
+def test_needs_rebuild_threshold():
+    store, _ = _store_with_router()
+    r = store.router
+    cfg = store.cfg.router
+    assert not needs_rebuild(r, 256, cfg)
+    assert needs_rebuild(r._replace(stale=jnp.int32(65)), 256, cfg)
+    assert not needs_rebuild(r._replace(stale=jnp.int32(64)), 256, cfg)
+
+
+def test_store_search_uses_router(monkeypatch):
+    """store.search threads the attached router into graph_search (routed
+    seeding is on the serving path, not just the free function)."""
+    store, x = _store_with_router()
+    gs = importlib.import_module("repro.core.graph_search")
+    seen = {}
+    orig = gs.graph_search
+
+    def spy(*args, **kw):
+        seen["router"] = kw.get("router", None)
+        return orig(*args, **kw)
+
+    online = importlib.import_module("repro.core.online")
+    monkeypatch.setattr(online, "graph_search", spy)
+    store.search(x[:4] + 0.01, k_out=4, key=jax.random.key(34))
+    assert seen["router"] is store.router

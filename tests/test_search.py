@@ -245,3 +245,47 @@ def test_search_cfg_threads_through_knn_logits():
                     key=jax.random.key(9),
                     cfg=SearchConfig(beam=16, rounds=8, expand=2))
     assert (jnp.argmax(lp, -1) == 7).all()
+
+
+# ---------------------------------------------------------------------------
+# entry-point seeding regressions
+# ---------------------------------------------------------------------------
+
+def test_batch_key_distinguishes_permuted_batches():
+    """The content-derived entry key must not be permutation-invariant: a
+    shuffled copy of a batch used to hash identically (plain jnp.sum) and
+    reuse the same entry points; the position-weighted fold breaks that
+    while identical batches stay deterministic."""
+    from repro.core.graph_search import _batch_key, _draw_entries
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(8, 16).astype(np.float32))
+    perm = rng.permutation(8)
+    qp = q[jnp.asarray(perm)]
+    k1, k2 = _batch_key(q), _batch_key(qp)
+    assert not jnp.array_equal(jax.random.key_data(k1),
+                               jax.random.key_data(k2))
+    e1 = _draw_entries(k1, 512, 16, None)
+    e2 = _draw_entries(k2, 512, 16, None)
+    assert not jnp.array_equal(e1, e2)
+    # determinism: the same batch maps to the same key
+    assert jnp.array_equal(jax.random.key_data(k1),
+                           jax.random.key_data(_batch_key(q)))
+
+
+def test_draw_entries_no_duplicates():
+    """Both branches (alive=None and masked) must sample WITHOUT
+    replacement — the retired randint draw produced duplicate ids whose
+    pool-merge dedup silently wasted beam slots."""
+    from repro.core.graph_search import _draw_entries
+    key = jax.random.key(5)
+    e = np.asarray(_draw_entries(key, 64, 32, None))
+    assert e.shape == (32,)
+    assert len(set(e.tolist())) == 32
+    assert ((e >= 0) & (e < 64)).all()
+    alive = jnp.arange(64) % 2 == 0
+    ea = np.asarray(_draw_entries(key, 64, 32, alive))
+    assert len(set(ea.tolist())) == 32
+    assert (ea % 2 == 0).all()              # live rows only
+    # width clamps to n when beam > n
+    small = np.asarray(_draw_entries(key, 8, 32, None))
+    assert small.shape == (8,) and len(set(small.tolist())) == 8
