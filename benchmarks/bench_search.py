@@ -41,6 +41,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -326,6 +330,72 @@ def run_smoke_quant(precision: str, n: int = 2048, d: int = 16,
     return sink.save()
 
 
+# the routed-dispatch half of the router lane: run in a forked
+# subprocess with a forced multi-device CPU topology (the bench process
+# already initialized jax single-device). Cluster-aligned shards +
+# route_p=1 means own-cluster top-1 routing: queries spread uniformly
+# (q = x[::8] -> n/(8*P) per shard), so route_cap=48 > 32 expected per
+# shard and dropped_queries must be exactly 0 — the gate's watch item.
+_ROUTED_STATS_SRC = """
+import json
+import jax, jax.numpy as jnp
+from repro.core import DescentConfig, RouterConfig, SearchConfig
+from repro.core.distributed import graph_search_sharded
+from repro.core.nn_descent import build_knn_graph
+from repro.core.router import build_router
+
+P, n, d = 4, 1024, 16
+n_local = n // P
+cent = jax.random.normal(jax.random.key(0), (P, d)) * 8.0
+noise = jax.random.normal(jax.random.key(1), (P, n_local, d)) * 0.5
+x = (cent[:, None, :] + noise).reshape(n, d).astype(jnp.float32)
+cfg = DescentConfig(k=10, rho=1.0, max_iters=10, reorder=False)
+parts = []
+for s in range(P):
+    _, gi, _ = build_knn_graph(x[s*n_local:(s+1)*n_local], k=10, cfg=cfg,
+                               key=jax.random.key(s))
+    parts.append(gi)
+gidx = jnp.concatenate(parts)
+router = build_router(x, cfg=RouterConfig(n_centroids=16, sample=1024),
+                      key=jax.random.key(7))
+mesh = jax.make_mesh((P,), ("data",))
+q = x[::8] + 0.01
+scfg = SearchConfig(beam=16, rounds=24, expand=4)
+_, _, st = graph_search_sharded(mesh, x, gidx, q, k_out=10, cfg=scfg,
+                                key=jax.random.key(2), router=router,
+                                route_p=1, route_cap=48, with_stats=True)
+print("ROUTED_STATS " + json.dumps({k: int(v) for k, v in st.items()}))
+"""
+
+
+def _routed_dispatch_stats(n_devices: int = 4, timeout: int = 600) -> dict:
+    """Routed sharded dispatch on a forced n_devices CPU topology, in a
+    fork (jax device topology is fixed at first backend init). Returns
+    the with_stats dict: fanout / shards / routed / searched / dropped."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo, "src"), env.get("PYTHONPATH")) if p)
+    proc = subprocess.run([sys.executable, "-c", _ROUTED_STATS_SRC],
+                          capture_output=True, text=True, env=env,
+                          cwd=repo, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"routed-dispatch stats child failed "
+            f"(rc={proc.returncode}):\n{proc.stderr}")
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith("ROUTED_STATS ")]
+    if not lines:
+        raise RuntimeError(
+            f"routed-dispatch stats child printed no ROUTED_STATS:"
+            f"\n{proc.stdout}")
+    return json.loads(lines[-1][len("ROUTED_STATS "):])
+
+
 def run_smoke_router(n: int = 4096, d: int = 16, n_clusters: int = 32,
                      q_n: int = 512, k: int = 10, k_out: int = 10,
                      beam: int = 16, rounds: int = 24,
@@ -337,7 +407,12 @@ def run_smoke_router(n: int = 4096, d: int = 16, n_clusters: int = 32,
     inside its own cluster at the SAME budget. Emits ``routed_recall`` /
     ``random_recall`` / ``routed_qps`` / ``random_qps`` into
     results/bench/search_router.json (its own sink so the gated fp32
-    smoke rows survive), gated by check_gate.py --router."""
+    smoke rows survive), gated by check_gate.py --router.
+
+    The row also carries the routed-DISPATCH stats from a forked
+    multi-device run (``_routed_dispatch_stats``): ``dropped_queries``
+    must be 0 — a ``route_cap`` regression on the sharded serving path
+    silently degrades recall, so the gate makes it loud."""
     sink = Sink("search_router")
     x = datasets.clustered(jax.random.key(5), n, d, n_clusters)
     dcfg = DescentConfig(k=k, rho=1.0, max_iters=10)
@@ -357,10 +432,16 @@ def run_smoke_router(n: int = 4096, d: int = 16, n_clusters: int = 32,
         _, gi = graph_search(x, idx, q, k_out=k_out, key=key, cfg=cfg,
                              router=rt)
         out[tag] = (qps, t, float(recall_at_k(gi, ti)))
+    st = _routed_dispatch_stats()
     sink.row(op="smoke_search_router", n=n, q=q_n, k=k, beam=beam,
              rounds=rounds, expand=expand,
              n_clusters=n_clusters,
              n_centroids=router.centroids.shape[0],
+             route_fanout=st["fanout"],
+             route_shards=st["shards"],
+             routed_queries=st["routed_queries"],
+             searched_queries=st["searched_queries"],
+             dropped_queries=st["dropped_queries"],
              random_s=round(out["random"][1], 3),
              routed_s=round(out["routed"][1], 3),
              random_qps=round(out["random"][0], 1),

@@ -28,7 +28,15 @@ when any gated metric violates its pinned floor:
     clusters, beam 16: uniform-random entries reach only ~0.4 recall
     there, so the floor pins the routing win itself) and must never drop
     below ``random_recall`` at the same budget — when ``--router`` is
-    given
+    given. The routed-dispatch stats sidecar must report
+    ``dropped_queries == 0`` (a ``route_cap`` regression silently
+    degrades recall on real shards; the gate makes it loud).
+  * ``ids_bitident``/``dists_bitident`` — a snapshot restored in a fresh
+    process must answer the smoke query batch bit-identically (ids and
+    fp32 distance bits) to the live store it was captured from, and
+    ``cold_start_speedup`` (rebuild wall-clock / restore wall-clock)
+    must stay at or above ``--persist-floor`` — when ``--persist`` is
+    given (correctness + the zero-rebuild cold-start claim)
 
 When running under GitHub Actions (``GITHUB_STEP_SUMMARY`` set) a
 markdown metrics table (recall / QPS / evals per gate, fp32 vs
@@ -42,7 +50,8 @@ Usage: python benchmarks/check_gate.py results/bench/online.json \
            --floor 0.85 --build results/bench/build.json --build-floor 0.95 \
            --search results/bench/search.json --search-floor 0.92 \
            --quant results/bench/search_quant.json --quant-floor 0.90 \
-           --router results/bench/search_router.json --router-floor 0.90
+           --router results/bench/search_router.json --router-floor 0.90 \
+           --persist results/bench/persist.json --persist-floor 5.0
 """
 from __future__ import annotations
 
@@ -184,6 +193,50 @@ def check_router(rows: list, floor: float) -> list:
                 f"routed_recall {routed:.4f} below random-entry recall "
                 f"{random:.4f} at the same budget"
             )
+        # routed-dispatch watch item: the sharded dispatch must have a
+        # route_cap wide enough that NO query is silently dropped — a
+        # missing stat means the sidecar measurement regressed, which
+        # must fail loudly too
+        if "dropped_queries" not in r:
+            failures.append(
+                "smoke_search_router row missing dropped_queries "
+                "(routed-dispatch stats sidecar did not run)")
+        elif int(r["dropped_queries"]):
+            failures.append(
+                f"routed dispatch dropped {r['dropped_queries']} queries "
+                f"(route_cap too tight for the smoke shard shape)")
+    return failures
+
+
+def check_persist(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_persist"]
+    if not smoke:
+        failures.append("no smoke_persist row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("ids_bitident", "dists_bitident",
+                                   "rebuild_s", "restore_s",
+                                   "cold_start_speedup") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(
+                f"smoke_persist row missing gated keys {missing}")
+            continue
+        if not r["ids_bitident"]:
+            failures.append(
+                "restored search returned different neighbor ids than "
+                "the live store (snapshot round trip is lossy)")
+        if not r["dists_bitident"]:
+            failures.append(
+                "restored search distances differ from the live store "
+                "at the bit level (snapshot round trip is lossy)")
+        speedup = float(r["cold_start_speedup"])
+        if speedup < floor:
+            failures.append(
+                f"cold_start_speedup {speedup:.2f}x below pinned floor "
+                f"{floor}x (restore_s={r['restore_s']}, "
+                f"rebuild_s={r['rebuild_s']})")
     return failures
 
 
@@ -218,6 +271,17 @@ _SUMMARY_SPEC = (
      "random_recall", "<= routed_recall"),
     ("router", "routed_qps", "smoke_search_router", "routed_qps", ""),
     ("router", "random_qps", "smoke_search_router", "random_qps", ""),
+    ("router", "dropped_queries (routed dispatch)", "smoke_search_router",
+     "dropped_queries", "== 0"),
+    ("persist", "ids_bitident (restored search)", "smoke_persist",
+     "ids_bitident", "== True"),
+    ("persist", "dists_bitident (fp32 bits)", "smoke_persist",
+     "dists_bitident", "== True"),
+    ("persist", "cold_start_speedup", "smoke_persist",
+     "cold_start_speedup", "persist_floor"),
+    ("persist", "restore_s", "smoke_persist", "restore_s", ""),
+    ("persist", "rebuild_s", "smoke_persist", "rebuild_s", ""),
+    ("persist", "snapshot_mb", "smoke_persist", "snapshot_mb", ""),
 )
 
 
@@ -277,6 +341,13 @@ def main(argv: list | None = None) -> int:
                    help="pinned routed_recall floor — sits ABOVE what "
                         "uniform-random entries reach on the adversarial "
                         "router smoke shape (~0.4)")
+    p.add_argument("--persist", default=None,
+                   help="path to persist.json (enables the snapshot/"
+                        "restore gate)")
+    p.add_argument("--persist-floor", type=float, default=5.0,
+                   help="pinned cold_start_speedup floor (restore must "
+                        "beat rebuild by at least this factor; observed "
+                        "~250x on the smoke corpus)")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
@@ -302,12 +373,18 @@ def main(argv: list | None = None) -> int:
             router_rows = json.load(f)
         row_sets["router"] = router_rows
         failures += check_router(router_rows, args.router_floor)
+    if args.persist is not None:
+        with open(args.persist) as f:
+            persist_rows = json.load(f)
+        row_sets["persist"] = persist_rows
+        failures += check_persist(persist_rows, args.persist_floor)
     write_step_summary(
         row_sets,
         {"floor": args.floor, "build_floor": args.build_floor,
          "search_floor": args.search_floor,
          "quant_floor": args.quant_floor,
-         "router_floor": args.router_floor},
+         "router_floor": args.router_floor,
+         "persist_floor": args.persist_floor},
         failures,
     )
     for msg in failures:
@@ -324,7 +401,10 @@ def main(argv: list | None = None) -> int:
                  "quant QPS >= f32 QPS")
               + ("" if args.router is None else
                  f"; routed_recall >= {args.router_floor} "
-                 "and >= random-entry recall"))
+                 "and >= random-entry recall, 0 dropped queries")
+              + ("" if args.persist is None else
+                 f"; restored search bit-identical, cold start >= "
+                 f"{args.persist_floor}x faster than rebuild"))
     return 1 if failures else 0
 
 

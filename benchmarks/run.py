@@ -15,6 +15,7 @@ Paper artifact map:
     online      -> (ours) streaming insert/delete vs. full rebuild
     build       -> (ours) fused local join vs. global-lexsort routing
     search      -> (ours) fused batched beam search vs. greedy ref loop
+    persist     -> (ours) snapshot/restore parity + zero-rebuild cold start
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ def main(argv=None):
         bench_build,
         bench_kernels,
         bench_online,
+        bench_persist,
         bench_realworld,
         bench_reorder,
         bench_roofline,
@@ -62,6 +64,8 @@ def main(argv=None):
         "search": lambda: bench_search.run_compare(
             n=8192 if quick else 100_000, q_n=512 if quick else 4096,
             n_eval=256 if quick else 1024),
+        "persist": lambda: bench_persist.run_smoke(
+            n=2048 if quick else 4096),
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

@@ -16,6 +16,13 @@ from repro.core.online import (
     knn_delete,
     knn_insert,
 )
+from repro.core.persist import (
+    SnapshotError,
+    SnapshotWriter,
+    latest_snapshot,
+    restore_store,
+    snapshot_store,
+)
 from repro.core.quantize import (
     QuantizedStore,
     dequantize,
@@ -41,6 +48,8 @@ __all__ = [
     "Router",
     "RouterConfig",
     "SearchConfig",
+    "SnapshotError",
+    "SnapshotWriter",
     "apply_permutation",
     "brute_force_knn",
     "build_knn_graph",
@@ -54,8 +63,11 @@ __all__ = [
     "greedy_reorder",
     "knn_delete",
     "knn_insert",
+    "latest_snapshot",
     "locality_stats",
     "nn_descent_iteration",
     "recall_at_k",
+    "restore_store",
+    "snapshot_store",
     "window_cluster_purity",
 ]

@@ -1,0 +1,574 @@
+"""Datastore persistence: versioned snapshot/restore of the online store.
+
+The paper's whole value proposition is that the K-NN graph build is
+expensive enough to optimize (NN-Descent over blocked l2) — which is
+exactly why a serving deployment must never pay that O(n·k·d) build
+again on restart, and why a streaming store that lives only in device
+memory cannot afford to lose hours of inserts to a crash. This module
+snapshots the complete ``MutableKNNStore`` — features, cached norms,
+neighbor lists (dist/idx/new), tombstone mask, the quantized mirror
+(``QuantizedStore`` data/scales/norms) and the coarse ``Router``
+(centroids, member lists, mini-graph, assignment/drift counters) — and
+restores it bit-identically, so a cold start serves the same results as
+the process that died (gated in CI: ``benchmarks/bench_persist.py``).
+
+Layout (step 4096 of a snapshot directory)::
+
+    snap_dir/
+      step_00004096/
+        manifest.json        # format version, shapes/dtypes, config echo,
+                             # live/tombstone counts — never the data
+        x.npy  x2.npy  nl_dist.npy  nl_idx.npy  nl_new.npy  alive.npy
+        qs_data.npy  qs_scale.npy  qs_x2.npy        # precision != f32
+        router_centroids.npy ... router_stale.npy   # router attached
+        values.npy                                  # datastore values
+        COMMIT               # commit marker, written (and fsynced) LAST
+
+Crash safety follows the checkpoint idiom (cf. train/checkpoint.py):
+every per-array file and the manifest are written first, then the
+``COMMIT`` marker is fsynced into place — a snapshot is visible to
+``latest_snapshot`` only once the marker exists, so a partially-written
+directory (writer crashed mid-dump) is skipped on load, never half-read.
+Restores validate each array against the manifest (shape + dtype) and
+refuse a ``format_version`` they do not understand rather than
+misinterpreting bytes.
+
+**Async snapshots.** ``SnapshotWriter`` hands the capture to a background
+thread so the insert path never blocks on disk: the store's arrays are
+immutable (every insert/delete builds NEW arrays), so holding references
+IS a consistent point-in-time capture — the writer fetches them to host
+and serializes while streaming inserts keep mutating the (new) store.
+One write is in flight at a time; errors surface on the next save/wait.
+A ``keep`` knob retains the last N committed snapshots.
+
+**Quantized-first cold start** (``restore_store(quantized_first=True)``):
+load the 4x-smaller int8 mirror first and serve two-stage quantized-only
+(the fp32 "re-rank" stage reads the dequantized mirror rows, so returned
+distances are quantized-accurate, not exact) while a background thread
+streams the fp32 rows in; ``Fp32Loader.apply`` swaps the exact rows into
+the store, re-enabling exact fp32 re-rank. Cold-start to first query is
+bounded by the mirror bytes, not the full fp32 corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heap import NeighborLists
+from repro.core.online import MutableKNNStore, OnlineConfig
+from repro.core.quantize import QuantizedStore, dequantize
+from repro.core.router import Router, RouterConfig
+
+FORMAT_VERSION = 1
+
+_COMMIT = "COMMIT"
+_MANIFEST = "manifest.json"
+_BF16 = np.dtype(jnp.bfloat16)
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot could not be read: missing, partial, corrupted, or a
+    format this build refuses to reinterpret."""
+
+
+# ---------------------------------------------------------------------------
+# low-level snapshot format: named arrays + manifest + commit marker
+# ---------------------------------------------------------------------------
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def write_snapshot(directory: str, step: int, arrays: dict, meta: dict,
+                   *, keep: int = 0) -> str:
+    """Write one snapshot: per-array ``.npy`` files + ``manifest.json``,
+    then the fsynced ``COMMIT`` marker LAST (the levanter/checkpoint
+    idiom: a directory without the marker is invisible to loads).
+    ``keep`` > 0 garbage-collects all but the newest ``keep`` committed
+    snapshots. Returns the committed step directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = _step_dir(directory, step)
+    if os.path.isdir(final):
+        # stale partial from a crashed writer (or a re-snapshot of the
+        # same step): replace it wholesale — it was never committed as
+        # far as readers are concerned until OUR marker lands
+        shutil.rmtree(final)
+    os.makedirs(final)
+    index = {}
+    for name, arr in arrays.items():
+        a = np.asarray(arr)
+        logical = str(a.dtype)
+        if a.dtype == _BF16:
+            # npy headers can't describe bfloat16 portably — store the
+            # raw bits and record the logical dtype in the manifest
+            a = a.view(np.uint16)
+        np.save(os.path.join(final, name + ".npy"), a)
+        index[name] = {
+            "file": name + ".npy",
+            "shape": list(a.shape),
+            "dtype": logical,
+        }
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "step": step,
+        "time": time.time(),
+        "arrays": index,
+        **meta,
+    }
+    with open(os.path.join(final, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(os.path.join(final, _COMMIT), "w") as f:
+        f.write("ok\n")
+        f.flush()
+        os.fsync(f.fileno())
+    if keep:
+        gc_snapshots(directory, keep)
+    return final
+
+
+def list_snapshots(directory: str) -> list[int]:
+    """Committed snapshot steps, ascending. Directories without the
+    commit marker (a writer died mid-dump) are ignored."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_"):
+            continue
+        p = os.path.join(directory, d)
+        if not (os.path.exists(os.path.join(p, _COMMIT))
+                and os.path.exists(os.path.join(p, _MANIFEST))):
+            continue
+        try:
+            out.append(int(d.split("_", 1)[1]))
+        except ValueError:
+            continue
+    return sorted(out)
+
+
+def latest_snapshot(directory: str) -> int | None:
+    """Newest committed step in ``directory`` (None when empty)."""
+    steps = list_snapshots(directory)
+    return steps[-1] if steps else None
+
+
+def gc_snapshots(directory: str, keep: int) -> None:
+    """Drop all but the newest ``keep`` committed snapshots."""
+    for s in list_snapshots(directory)[:-keep] if keep else []:
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+
+
+def read_snapshot(directory: str, step: int | None = None, *,
+                  only: set | None = None,
+                  skip: set | frozenset = frozenset()):
+    """Read one committed snapshot. ``only``/``skip`` select a subset of
+    the named arrays (e.g. the quantized-first cold start skips the fp32
+    features). Returns (step, {name: np.ndarray}, manifest).
+
+    Raises ``SnapshotError`` when no committed snapshot exists, the
+    manifest's format version is not one this build understands, or an
+    array file is unreadable / disagrees with the manifest's shape or
+    dtype (truncated or corrupted file — named in the error)."""
+    if step is None:
+        step = latest_snapshot(directory)
+        if step is None:
+            raise SnapshotError(
+                f"no committed snapshot under {directory!r} (directories "
+                f"without a {_COMMIT} marker are ignored)"
+            )
+    d = _step_dir(directory, step)
+    if not os.path.exists(os.path.join(d, _COMMIT)):
+        raise SnapshotError(
+            f"snapshot {d} has no {_COMMIT} marker — partial write, "
+            "refusing to load"
+        )
+    try:
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotError(f"unreadable manifest {d}/{_MANIFEST}: {e}") \
+            from e
+    ver = manifest.get("format_version")
+    if ver != FORMAT_VERSION:
+        raise SnapshotError(
+            f"snapshot {d} has format version {ver!r}; this build reads "
+            f"version {FORMAT_VERSION} — refusing to reinterpret its bytes"
+        )
+    arrays = {}
+    for name, info in manifest["arrays"].items():
+        if only is not None and name not in only:
+            continue
+        if name in skip:
+            continue
+        fp = os.path.join(d, info["file"])
+        try:
+            a = np.load(fp)
+        except Exception as e:
+            raise SnapshotError(
+                f"corrupt snapshot array {fp}: {e}"
+            ) from e
+        if info["dtype"] == "bfloat16":
+            a = a.view(_BF16)
+        if list(a.shape) != list(info["shape"]) \
+                or str(a.dtype) != info["dtype"]:
+            raise SnapshotError(
+                f"snapshot array {fp} holds {a.dtype}{a.shape}, manifest "
+                f"says {info['dtype']}{tuple(info['shape'])} — truncated "
+                "or corrupted file"
+            )
+        arrays[name] = a
+    return step, arrays, manifest
+
+
+# ---------------------------------------------------------------------------
+# MutableKNNStore capture / rebuild
+# ---------------------------------------------------------------------------
+
+_ROUTER_FIELDS = ("centroids", "c2", "graph", "assign", "counts", "stale")
+
+
+def _cfg_echo(cfg: OnlineConfig) -> dict:
+    return dataclasses.asdict(cfg)          # RouterConfig nests as a dict
+
+
+def _cfg_from_echo(echo: dict) -> OnlineConfig:
+    echo = dict(echo)
+    rd = echo.pop("router", None)
+    # filter to known fields: format_version gates real layout changes,
+    # this just keeps a same-version echo robust to knob additions
+    ofields = {f.name for f in dataclasses.fields(OnlineConfig)}
+    rfields = {f.name for f in dataclasses.fields(RouterConfig)}
+    router = None if rd is None else RouterConfig(
+        **{k: v for k, v in rd.items() if k in rfields})
+    return OnlineConfig(
+        **{k: v for k, v in echo.items() if k in ofields},
+        router=router,
+    )
+
+
+def capture_store(store: MutableKNNStore, *, values=None):
+    """Flatten a store (plus an optional row-aligned ``values`` array —
+    the kNN-LM datastore's token ids) into (arrays, manifest meta). The
+    arrays are the live device buffers: immutable, so holding them IS a
+    consistent capture that later inserts cannot mutate."""
+    arrays = {
+        "x": store.x,
+        "x2": store.x2,
+        "nl_dist": store.nl.dist,
+        "nl_idx": store.nl.idx,
+        "nl_new": store.nl.new,
+        "alive": store.alive,
+    }
+    if store.qs is not None:
+        arrays["qs_data"] = store.qs.data
+        arrays["qs_scale"] = store.qs.scale
+        arrays["qs_x2"] = store.qs.x2
+    if store.router is not None:
+        for f in _ROUTER_FIELDS:
+            arrays[f"router_{f}"] = getattr(store.router, f)
+        arrays["router_members_dist"] = store.router.members.dist
+        arrays["router_members_idx"] = store.router.members.idx
+        arrays["router_members_new"] = store.router.members.new
+    if values is not None:
+        arrays["values"] = values
+    live = int(jnp.sum(store.alive))
+    meta = {
+        "kind": "mutable_store",
+        "n": int(store.n),
+        "d": int(store.d),
+        "dp": int(store.x.shape[1]),
+        "k": int(store.k),
+        "capacity": int(store.capacity),
+        "live": live,
+        "tombstones": int(store.n) - live,
+        "precision": store.cfg.precision,
+        "has_qs": store.qs is not None,
+        "has_router": store.router is not None,
+        "config": _cfg_echo(store.cfg),
+    }
+    return arrays, meta
+
+
+def _rebuild_qs(arrays: dict) -> QuantizedStore:
+    return QuantizedStore(
+        jnp.asarray(arrays["qs_data"]),
+        jnp.asarray(arrays["qs_scale"]),
+        jnp.asarray(arrays["qs_x2"]),
+    )
+
+
+def _rebuild_router(arrays: dict) -> Router:
+    return Router(
+        centroids=jnp.asarray(arrays["router_centroids"]),
+        c2=jnp.asarray(arrays["router_c2"]),
+        graph=jnp.asarray(arrays["router_graph"]),
+        members=NeighborLists(
+            jnp.asarray(arrays["router_members_dist"]),
+            jnp.asarray(arrays["router_members_idx"]),
+            jnp.asarray(arrays["router_members_new"]),
+        ),
+        assign=jnp.asarray(arrays["router_assign"]),
+        counts=jnp.asarray(arrays["router_counts"]),
+        stale=jnp.asarray(arrays["router_stale"]),
+    )
+
+
+def rebuild_store(arrays: dict, manifest: dict):
+    """Inverse of ``capture_store``: (store, values-or-None)."""
+    cfg = _cfg_from_echo(manifest["config"])
+    store = MutableKNNStore(
+        x=jnp.asarray(arrays["x"]),
+        x2=jnp.asarray(arrays["x2"]),
+        nl=NeighborLists(
+            jnp.asarray(arrays["nl_dist"]),
+            jnp.asarray(arrays["nl_idx"]),
+            jnp.asarray(arrays["nl_new"]),
+        ),
+        alive=jnp.asarray(arrays["alive"]),
+        n=int(manifest["n"]),
+        d=int(manifest["d"]),
+        cfg=cfg,
+        qs=_rebuild_qs(arrays) if "qs_data" in arrays else None,
+        router=_rebuild_router(arrays)
+        if "router_centroids" in arrays else None,
+    )
+    values = jnp.asarray(arrays["values"]) if "values" in arrays else None
+    return store, values
+
+
+def snapshot_store(store: MutableKNNStore, directory: str, step: int, *,
+                   values=None, keep: int = 0) -> str:
+    """Synchronous one-shot snapshot (use ``SnapshotWriter`` to overlap
+    serialization with streaming inserts). Returns the step directory."""
+    arrays, meta = capture_store(store, values=values)
+    return write_snapshot(directory, step, arrays, meta, keep=keep)
+
+
+class Fp32Loader:
+    """Background fp32 feature load for the quantized-first cold start:
+    started by ``restore_store(quantized_first=True)``, finished by
+    ``apply`` (blocks until the read completes, then swaps the exact
+    ``x``/``x2`` into the store — re-enabling exact fp32 re-rank)."""
+
+    def __init__(self, directory: str, step: int):
+        self._directory = directory
+        self._step = step
+        self._arrays: dict | None = None
+        self._error: Exception | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            _, self._arrays, _ = read_snapshot(
+                self._directory, self._step, only={"x", "x2"})
+        except Exception as e:          # surfaced by apply()
+            self._error = e
+
+    @property
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def apply(self, store: MutableKNNStore) -> MutableKNNStore:
+        self._thread.join()
+        if self._error is not None:
+            raise self._error
+        return dataclasses.replace(
+            store,
+            x=jnp.asarray(self._arrays["x"]),
+            x2=jnp.asarray(self._arrays["x2"]),
+        )
+
+
+class Restored(NamedTuple):
+    store: MutableKNNStore
+    values: Any                 # row-aligned values array or None
+    step: int
+    manifest: dict
+    fp32_loader: Fp32Loader | None   # quantized-first restores only
+
+
+def restore_store(directory: str, step: int | None = None, *,
+                  quantized_first: bool = False) -> Restored:
+    """Restore a ``MutableKNNStore`` snapshot (the newest committed step
+    when ``step`` is None).
+
+    ``quantized_first=True`` is the fast cold start: only the int8/bf16
+    mirror (4x/2x smaller than the fp32 rows) plus graph/masks are read
+    before the store is usable — its ``x`` holds the DEQUANTIZED mirror
+    rows (zero-padded back to the serving layout), so searches run
+    two-stage quantized-only (re-rank included) immediately, with
+    quantized-accurate distances. The returned ``fp32_loader`` streams
+    the exact rows in on a background thread; ``fp32_loader.apply(store)``
+    swaps them in. Requires the snapshot to carry a quantized mirror."""
+    if not quantized_first:
+        step, arrays, manifest = read_snapshot(directory, step)
+        if manifest.get("kind") != "mutable_store":
+            raise SnapshotError(
+                f"snapshot kind {manifest.get('kind')!r} is not a "
+                "mutable_store snapshot"
+            )
+        store, values = rebuild_store(arrays, manifest)
+        return Restored(store, values, step, manifest, None)
+
+    step, arrays, manifest = read_snapshot(directory, step,
+                                           skip={"x", "x2"})
+    if manifest.get("kind") != "mutable_store":
+        raise SnapshotError(
+            f"snapshot kind {manifest.get('kind')!r} is not a "
+            "mutable_store snapshot"
+        )
+    if "qs_data" not in arrays:
+        raise SnapshotError(
+            "quantized-first restore needs a quantized mirror in the "
+            f"snapshot, but step {step} under {directory!r} has none "
+            "(store built with precision='f32')"
+        )
+    qs = _rebuild_qs(arrays)
+    cap, w = qs.data.shape
+    dp = int(manifest["dp"])
+    xq = dequantize(qs)              # (cap, w) — what the kernels "see"
+    x = jnp.zeros((cap, dp), jnp.float32).at[:, :w].set(xq)
+    cfg = _cfg_from_echo(manifest["config"])
+    store = MutableKNNStore(
+        x=x,
+        x2=qs.x2,                    # norms of the dequantized rows
+        nl=NeighborLists(
+            jnp.asarray(arrays["nl_dist"]),
+            jnp.asarray(arrays["nl_idx"]),
+            jnp.asarray(arrays["nl_new"]),
+        ),
+        alive=jnp.asarray(arrays["alive"]),
+        n=int(manifest["n"]),
+        d=int(manifest["d"]),
+        cfg=cfg,
+        qs=qs,
+        router=_rebuild_router(arrays)
+        if "router_centroids" in arrays else None,
+    )
+    values = jnp.asarray(arrays["values"]) if "values" in arrays else None
+    return Restored(store, values, step, manifest,
+                    Fp32Loader(directory, step))
+
+
+# ---------------------------------------------------------------------------
+# KNNDatastore (static) capture / rebuild — same format, kind tag differs
+# ---------------------------------------------------------------------------
+
+
+def capture_datastore(ds):
+    """Flatten a static kNN-LM datastore (duck-typed: ``keys``,
+    ``values``, ``graph_idx``, optional ``qstore``/``router``) into
+    (arrays, meta) — ``serve/knn_lm.KNNDatastore.snapshot``'s body."""
+    arrays = {
+        "keys": ds.keys,
+        "values": ds.values,
+        "graph_idx": ds.graph_idx,
+    }
+    if getattr(ds, "qstore", None) is not None:
+        arrays["qs_data"] = ds.qstore.data
+        arrays["qs_scale"] = ds.qstore.scale
+        arrays["qs_x2"] = ds.qstore.x2
+    router = getattr(ds, "router", None)
+    if router is not None:
+        for f in _ROUTER_FIELDS:
+            arrays[f"router_{f}"] = getattr(router, f)
+        arrays["router_members_dist"] = router.members.dist
+        arrays["router_members_idx"] = router.members.idx
+        arrays["router_members_new"] = router.members.new
+    meta = {
+        "kind": "knn_datastore",
+        "n": int(ds.keys.shape[0]),
+        "d": int(ds.keys.shape[1]),
+        "k": int(ds.graph_idx.shape[1]),
+        "has_qs": getattr(ds, "qstore", None) is not None,
+        "has_router": router is not None,
+        "build_stats": {k: v for k, v in
+                        getattr(ds, "build_stats", {}).items()
+                        if isinstance(v, (int, float, str, bool))},
+    }
+    return arrays, meta
+
+
+def rebuild_datastore(arrays: dict, manifest: dict) -> dict:
+    """Inverse of ``capture_datastore``: the constructor kwargs of a
+    ``KNNDatastore`` (minus ``build_stats``, which the caller stamps)."""
+    if manifest.get("kind") != "knn_datastore":
+        raise SnapshotError(
+            f"snapshot kind {manifest.get('kind')!r} is not a "
+            "knn_datastore snapshot"
+        )
+    return {
+        "keys": jnp.asarray(arrays["keys"]),
+        "values": jnp.asarray(arrays["values"]),
+        "graph_idx": jnp.asarray(arrays["graph_idx"]),
+        "qstore": _rebuild_qs(arrays) if "qs_data" in arrays else None,
+        "router": _rebuild_router(arrays)
+        if "router_centroids" in arrays else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# async writer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SnapshotWriter:
+    """Non-blocking snapshots that interleave with streaming inserts.
+
+    ``save`` captures the store's (immutable) device arrays on the caller
+    thread — a reference grab, not a copy — and hands host fetch +
+    serialization to a background thread, so the insert path never waits
+    on disk. One write is in flight at a time: a second ``save`` first
+    joins the previous one (and re-raises its error, if any). ``keep``
+    retains the newest N committed snapshots."""
+
+    directory: str
+    keep: int = 3
+    async_write: bool = True
+
+    def __post_init__(self):
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, store: MutableKNNStore, step: int, *, values=None,
+             wait: bool = False) -> None:
+        self.wait()                      # one outstanding write at a time
+        arrays, meta = capture_store(store, values=values)
+
+        def write():
+            write_snapshot(self.directory, step, arrays, meta,
+                           keep=self.keep)
+
+        if self.async_write and not wait:
+            def run():
+                try:
+                    write()
+                except Exception as e:   # surfaced on next save/wait
+                    self._error = e
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        """Join the in-flight write; re-raise its error, if any."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -19,6 +19,7 @@ sit in adjacent datastore rows after σ).
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +83,31 @@ class KNNDatastore:
                     )),
         )
 
+    def snapshot(self, directory: str, step: int = 0, *,
+                 keep: int = 0) -> str:
+        """Persist keys/values/graph (+ mirror, + router) under a
+        committed step directory (core/persist.py format, kind
+        ``knn_datastore``). Returns the step directory."""
+        from repro.core import persist
+        arrays, meta = persist.capture_datastore(self)
+        return persist.write_snapshot(directory, step, arrays, meta,
+                                      keep=keep)
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None):
+        """Zero-rebuild cold start: reload a snapshotted datastore (the
+        newest committed step when ``step`` is None) — no NN-Descent, no
+        re-quantization, no router refit; retrieval results are
+        bit-identical to the datastore that was snapshotted."""
+        from repro.core import persist
+        step, arrays, manifest = persist.read_snapshot(directory, step)
+        parts = persist.rebuild_datastore(arrays, manifest)
+        return cls(
+            build_stats={**manifest.get("build_stats", {}),
+                         "restored_step": step},
+            **parts,
+        )
+
 
 @dataclasses.dataclass
 class MutableKNNDatastore:
@@ -96,6 +122,9 @@ class MutableKNNDatastore:
     build_stats: dict
     # serving-search knobs (fused batched search; None = store defaults)
     search_cfg: SearchConfig | None = None
+    # pending background fp32 feature load (quantized-first restore only;
+    # see core/persist.Fp32Loader) — resolve with ``finish_fp32``
+    fp32_loader: Any = None
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
@@ -158,6 +187,53 @@ class MutableKNNDatastore:
     def delete(self, ids: jax.Array):
         store, stats = knn_delete(self.store, ids)
         return dataclasses.replace(self, store=store), stats
+
+    def snapshot(self, directory: str, step: int | None = None, *,
+                 keep: int = 0) -> str:
+        """Persist the full online store (features, graph, tombstones,
+        norms, quantized mirror, router) plus the row-aligned values
+        under a committed step directory (core/persist.py; default step =
+        the allocation high-water mark). Returns the step directory."""
+        from repro.core import persist
+        return persist.snapshot_store(
+            self.store, directory,
+            self.store.n if step is None else step,
+            values=self.values, keep=keep,
+        )
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None, *,
+                quantized_first: bool = False):
+        """Zero-rebuild cold start from a snapshot (the newest committed
+        step when ``step`` is None): search results, subsequent inserts
+        and deletes are bit-identical to the store that was snapshotted.
+        ``quantized_first`` serves from the 4x-smaller quantized mirror
+        immediately (quantized-accurate distances) while the fp32 rows
+        load in the background — call ``finish_fp32()`` to swap them in
+        and re-enable exact fp32 re-rank."""
+        from repro.core import persist
+        res = persist.restore_store(directory, step,
+                                    quantized_first=quantized_first)
+        values = res.values
+        if values is None:
+            values = jnp.zeros((res.store.capacity,), jnp.int32)
+        return cls(
+            store=res.store,
+            values=values,
+            build_stats={"restored_step": res.step,
+                         "live": res.manifest.get("live"),
+                         "tombstones": res.manifest.get("tombstones")},
+            fp32_loader=res.fp32_loader,
+        )
+
+    def finish_fp32(self):
+        """Resolve a quantized-first restore: block until the background
+        fp32 load completes and return a datastore whose store re-ranks
+        on the exact rows. No-op without a pending loader."""
+        if self.fp32_loader is None:
+            return self
+        store = self.fp32_loader.apply(self.store)
+        return dataclasses.replace(self, store=store, fp32_loader=None)
 
 
 def knn_logits(

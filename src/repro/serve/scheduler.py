@@ -48,12 +48,32 @@ class ContinuousBatcher:
                  knn_chunk: int = 64,
                  knn_frontier_chunk: int | None = None,
                  knn_q_block: int | None = None,
-                 knn_router: Any | None = None):
+                 knn_router: Any | None = None,
+                 knn_snapshot_dir: str | None = None,
+                 knn_snapshot_every: int = 0,
+                 knn_snapshot_keep: int = 3):
         self.n_slots = n_slots
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
         self.write_slot = write_slot
         self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        # datastore persistence (core/persist.py): with a snapshot
+        # directory, a server cold-starts from the newest committed
+        # snapshot instead of rebuilding the graph — and streamed inserts
+        # are checkpointed every ``knn_snapshot_every`` captured rows by
+        # an async writer that never blocks the decode/insert path
+        self._knn_writer = None
+        self._knn_snapshot_every = int(knn_snapshot_every)
+        self._knn_rows_inserted = 0
+        self._knn_rows_at_snap = 0
+        if knn_snapshot_dir is not None:
+            from repro.core import persist
+            if knn_store is None \
+                    and persist.latest_snapshot(knn_snapshot_dir) is not None:
+                from repro.serve.knn_lm import MutableKNNDatastore
+                knn_store = MutableKNNDatastore.restore(knn_snapshot_dir)
+            self._knn_writer = persist.SnapshotWriter(
+                knn_snapshot_dir, keep=knn_snapshot_keep)
         # frontier-chunk / query-block plumbing: streamed inserts touch a
         # frontier proportional to knn_chunk and retrieval batches are the
         # slot count, so the store's padded-chunk quantum
@@ -175,10 +195,32 @@ class ContinuousBatcher:
         del self._knn_vals[:m]
         self.knn_store, _ = self.knn_store.append(
             kb, vb, key=jax.random.fold_in(jax.random.key(17), self.steps))
+        self._knn_rows_inserted += m
+        if (self._knn_writer is not None and self._knn_snapshot_every > 0
+                and (self._knn_rows_inserted - self._knn_rows_at_snap
+                     >= self._knn_snapshot_every)):
+            self.snapshot_knn(wait=False)
+
+    def snapshot_knn(self, *, wait: bool = True):
+        """Snapshot the kNN datastore now (step = its allocation
+        high-water mark). ``wait=False`` hands serialization to the
+        async writer and returns immediately — the capture is consistent
+        either way (the store's arrays are immutable)."""
+        if self._knn_writer is None or self.knn_store is None:
+            return
+        self._knn_writer.save(
+            self.knn_store.store, self.knn_store.store.n,
+            values=self.knn_store.values, wait=wait,
+        )
+        self._knn_rows_at_snap = self._knn_rows_inserted
 
     def run(self, cache, *, max_steps: int = 10_000):
         while (self.queue or self.live) and self.steps < max_steps:
             cache, _ = self.step(cache)
         if self.knn_store is not None:
             self._flush_knn(final=True)
+            if self._knn_writer is not None:
+                # drain checkpoint: the next cold start resumes from the
+                # full stream, not the last periodic snapshot
+                self.snapshot_knn(wait=True)
         return cache

@@ -1,0 +1,288 @@
+"""core/persist.py: snapshot/restore crash safety, bit-identical round
+trips (store + quantized mirror + router + tombstones), mutate-after-
+restore parity, the async writer + retention, the quantized-first cold
+start, and the scheduler's zero-rebuild cold-start path."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import persist
+from repro.core.nn_descent import DescentConfig
+from repro.core.router import RouterConfig
+from repro.serve.knn_lm import KNNDatastore, MutableKNNDatastore
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def _build(n=256, d=8, k=6, precision="int8", router=True):
+    x = jax.random.normal(jax.random.key(0), (n, d), jnp.float32)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    rcfg = (RouterConfig(n_centroids=8, sample=256, members=16, iters=2)
+            if router else None)
+    return MutableKNNDatastore.build(
+        x, vals, k=k, cfg=DescentConfig(k=k, rho=1.0, max_iters=6),
+        precision=precision, router=rcfg, key=jax.random.key(1))
+
+
+def _mutate(ds, d=8):
+    """Tombstones + streamed rows, so snapshots carry real online state."""
+    ds, _ = ds.delete(jnp.arange(5, dtype=jnp.int32))
+    extra = jax.random.normal(jax.random.key(2), (7, d), jnp.float32)
+    ds, _ = ds.append(extra, jnp.arange(7, dtype=jnp.int32) + 1000,
+                      key=jax.random.key(3))
+    return ds
+
+
+def _search_bits(ds, d=8, k_out=6):
+    q = jax.random.normal(jax.random.key(4), (16, d), jnp.float32)
+    dist, idx = ds.store.search(q, k_out=k_out, key=jax.random.key(5))
+    return (np.asarray(dist, np.float32).view(np.int32),
+            np.asarray(idx, np.int32))
+
+
+def _store_arrays(store):
+    out = {"x": store.x, "x2": store.x2, "alive": store.alive,
+           "nl_dist": store.nl.dist, "nl_idx": store.nl.idx,
+           "nl_new": store.nl.new}
+    if store.qs is not None:
+        out.update(qs_data=store.qs.data, qs_scale=store.qs.scale,
+                   qs_x2=store.qs.x2)
+    if store.router is not None:
+        out.update(r_centroids=store.router.centroids,
+                   r_c2=store.router.c2, r_graph=store.router.graph,
+                   r_assign=store.router.assign,
+                   r_counts=store.router.counts,
+                   r_stale=store.router.stale,
+                   r_mdist=store.router.members.dist,
+                   r_midx=store.router.members.idx,
+                   r_mnew=store.router.members.new)
+    return out
+
+
+def _assert_stores_equal(s1, s2):
+    a1, a2 = _store_arrays(s1), _store_arrays(s2)
+    assert a1.keys() == a2.keys()
+    for name in a1:
+        x, y = np.asarray(a1[name]), np.asarray(a2[name])
+        assert x.shape == y.shape and x.dtype == y.dtype, name
+        assert (x == y).all(), name
+    assert s1.n == s2.n and s1.d == s2.d and s1.cfg == s2.cfg
+
+
+def test_round_trip_bit_identical(tmp_path):
+    ds = _mutate(_build())
+    step_dir = ds.snapshot(str(tmp_path))
+    assert os.path.exists(os.path.join(step_dir, "COMMIT"))
+    ds2 = MutableKNNDatastore.restore(str(tmp_path))
+    _assert_stores_equal(ds.store, ds2.store)
+    assert (np.asarray(ds.values) == np.asarray(ds2.values)).all()
+    assert ds2.build_stats["tombstones"] == 5
+    b1, i1 = _search_bits(ds)
+    b2, i2 = _search_bits(ds2)
+    assert (i1 == i2).all() and (b1 == b2).all()
+
+
+def test_partial_dir_without_commit_marker_is_invisible(tmp_path):
+    ds = _build(router=False)
+    ds.snapshot(str(tmp_path), step=10)
+    # a higher-step directory whose writer died before the marker: holds
+    # arrays and even a manifest, but no COMMIT
+    partial = tmp_path / "step_00000020"
+    partial.mkdir()
+    np.save(partial / "x.npy", np.zeros((4, 4), np.float32))
+    (partial / "manifest.json").write_text("{}")
+    assert persist.list_snapshots(str(tmp_path)) == [10]
+    assert persist.latest_snapshot(str(tmp_path)) == 10
+    # default restore silently lands on the committed step...
+    ds2 = MutableKNNDatastore.restore(str(tmp_path))
+    assert ds2.build_stats["restored_step"] == 10
+    # ...and asking for the partial step by name refuses loudly
+    with pytest.raises(persist.SnapshotError, match="COMMIT"):
+        persist.read_snapshot(str(tmp_path), 20)
+
+
+def test_no_committed_snapshot_raises(tmp_path):
+    with pytest.raises(persist.SnapshotError, match="no committed"):
+        persist.read_snapshot(str(tmp_path))
+
+
+def test_truncated_array_file_names_the_file(tmp_path):
+    ds = _build(router=False)
+    step_dir = ds.snapshot(str(tmp_path))
+    fp = os.path.join(step_dir, "x.npy")
+    with open(fp, "r+b") as f:
+        f.truncate(40)      # mid-header: np.load fails outright
+    with pytest.raises(persist.SnapshotError, match="x.npy"):
+        persist.read_snapshot(str(tmp_path))
+
+
+def test_short_array_file_names_the_file(tmp_path):
+    ds = _build(router=False)
+    step_dir = ds.snapshot(str(tmp_path))
+    fp = os.path.join(step_dir, "nl_idx.npy")
+    # a loadable-but-wrong file (e.g. torn write recovered by the fs):
+    # shape disagrees with the manifest -> refused, file named
+    np.save(fp, np.zeros((2, 2), np.int32))
+    with pytest.raises(persist.SnapshotError, match="nl_idx.npy"):
+        persist.read_snapshot(str(tmp_path))
+
+
+def test_format_version_mismatch_refuses(tmp_path):
+    ds = _build(router=False)
+    step_dir = ds.snapshot(str(tmp_path))
+    mf = os.path.join(step_dir, "manifest.json")
+    with open(mf) as f:
+        manifest = json.load(f)
+    manifest["format_version"] = persist.FORMAT_VERSION + 1
+    with open(mf, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(persist.SnapshotError, match="format version"):
+        persist.read_snapshot(str(tmp_path))
+
+
+def test_mutate_after_restore_parity(tmp_path):
+    """Restored stores are not read-only artifacts: inserts and deletes
+    (router + mirror maintenance included) must track the never-
+    snapshotted store bit for bit."""
+    ds = _mutate(_build())
+    ds.snapshot(str(tmp_path))
+    ds2 = MutableKNNDatastore.restore(str(tmp_path))
+    extra = jax.random.normal(jax.random.key(6), (9, 8), jnp.float32)
+    ev = jnp.arange(9, dtype=jnp.int32) + 2000
+    a1, _ = ds.append(extra, ev, key=jax.random.key(7))
+    a2, _ = ds2.append(extra, ev, key=jax.random.key(7))
+    d1, _ = a1.delete(jnp.arange(20, 30, dtype=jnp.int32))
+    d2, _ = a2.delete(jnp.arange(20, 30, dtype=jnp.int32))
+    _assert_stores_equal(d1.store, d2.store)
+    assert (np.asarray(d1.values) == np.asarray(d2.values)).all()
+    b1, i1 = _search_bits(d1)
+    b2, i2 = _search_bits(d2)
+    assert (i1 == i2).all() and (b1 == b2).all()
+
+
+def test_bf16_mirror_round_trips(tmp_path):
+    """npy can't describe bfloat16 — the format stores raw bits + the
+    logical dtype in the manifest and must view them back exactly."""
+    ds = _build(precision="bf16", router=False)
+    ds.snapshot(str(tmp_path))
+    ds2 = MutableKNNDatastore.restore(str(tmp_path))
+    assert ds2.store.qs.data.dtype == jnp.bfloat16
+    assert (np.asarray(ds.store.qs.data.view(jnp.uint16))
+            == np.asarray(ds2.store.qs.data.view(jnp.uint16))).all()
+
+
+def test_snapshot_writer_async_and_retention(tmp_path):
+    ds = _build(router=False)
+    w = persist.SnapshotWriter(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        w.save(ds.store, step, values=ds.values, wait=False)
+    w.wait()
+    # keep=2: only the newest two committed snapshots survive
+    assert persist.list_snapshots(str(tmp_path)) == [2, 3]
+    ds2 = MutableKNNDatastore.restore(str(tmp_path))
+    _assert_stores_equal(ds.store, ds2.store)
+
+
+def test_snapshot_writer_surfaces_background_errors(tmp_path):
+    ds = _build(router=False)
+    blocker = tmp_path / "snaps"
+    blocker.write_text("not a directory")    # makedirs will raise
+    w = persist.SnapshotWriter(str(blocker))
+    w.save(ds.store, 1, wait=False)
+    with pytest.raises(Exception):
+        w.wait()
+
+
+def test_quantized_first_restore(tmp_path):
+    ds = _mutate(_build())
+    ds.snapshot(str(tmp_path))
+    exact = MutableKNNDatastore.restore(str(tmp_path))
+    qf = MutableKNNDatastore.restore(str(tmp_path), quantized_first=True)
+    assert qf.fp32_loader is not None
+    # immediately servable: two-stage quantized-only search runs
+    _search_bits(qf)
+    # after the background fp32 load lands, results are exact again
+    qf = qf.finish_fp32()
+    assert qf.fp32_loader is None
+    _assert_stores_equal(exact.store, qf.store)
+    b1, i1 = _search_bits(exact)
+    b2, i2 = _search_bits(qf)
+    assert (i1 == i2).all() and (b1 == b2).all()
+
+
+def test_quantized_first_requires_mirror(tmp_path):
+    ds = _build(precision="f32", router=False)
+    ds.snapshot(str(tmp_path))
+    with pytest.raises(persist.SnapshotError, match="quantized mirror"):
+        MutableKNNDatastore.restore(str(tmp_path), quantized_first=True)
+
+
+def test_static_datastore_round_trip(tmp_path):
+    keys = jax.random.normal(jax.random.key(0), (128, 8), jnp.float32)
+    vals = jax.random.randint(jax.random.key(1), (128,), 0, 16)
+    ds = KNNDatastore.build(
+        keys, vals, k=6, cfg=DescentConfig(k=6, rho=1.0, max_iters=6),
+        precision="int8",
+        router=RouterConfig(n_centroids=8, sample=128, members=16,
+                            iters=2),
+        key=jax.random.key(2))
+    ds.snapshot(str(tmp_path))
+    ds2 = KNNDatastore.restore(str(tmp_path))
+    for name in ("keys", "values", "graph_idx"):
+        assert (np.asarray(getattr(ds, name))
+                == np.asarray(getattr(ds2, name))).all(), name
+    assert (np.asarray(ds.qstore.data) == np.asarray(ds2.qstore.data)).all()
+    assert (np.asarray(ds.router.centroids)
+            == np.asarray(ds2.router.centroids)).all()
+    assert ds2.build_stats["restored_step"] == 0
+    # a mutable-store snapshot is not a static-datastore snapshot
+    with pytest.raises(persist.SnapshotError, match="kind"):
+        arrays, meta = persist.capture_store(_build(router=False).store)
+        persist.rebuild_datastore(arrays, {"kind": "mutable_store",
+                                           **meta})
+
+
+def test_scheduler_cold_start_and_drain_snapshot(tmp_path):
+    """ContinuousBatcher(knn_snapshot_dir=...): with no store passed, the
+    batcher restores from the newest committed snapshot instead of
+    rebuilding; run() leaves a drain snapshot carrying the streamed
+    inserts for the NEXT cold start."""
+    vocab, dk = 16, 8
+    keys0 = jax.random.normal(jax.random.key(0), (64, dk))
+    vals0 = jax.random.randint(jax.random.key(1), (64,), 0, vocab)
+    ds = MutableKNNDatastore.build(keys0, vals0, k=8,
+                                   key=jax.random.key(2))
+    ds.snapshot(str(tmp_path))
+    proj = jax.random.normal(jax.random.key(5), (vocab, dk))
+
+    def prefill_fn(toks):
+        return jnp.ones((1, vocab)), None, toks.shape[1]
+
+    def step_fn(cache, toks, lengths):
+        lg = jax.nn.one_hot((toks[:, 0] * 3 + lengths) % vocab, vocab) * 4.0
+        return lg, cache
+
+    b = ContinuousBatcher(
+        2, step_fn, prefill_fn, lambda c, i, o, length: c,
+        knn_capture=lambda lg: lg @ proj, knn_chunk=8,
+        knn_snapshot_dir=str(tmp_path), knn_snapshot_every=8)
+    # cold start: the store came from the snapshot, not a rebuild
+    assert b.knn_store is not None
+    assert b.knn_store.build_stats["restored_step"] == ds.store.n
+    _assert_stores_equal(ds.store, b.knn_store.store)
+    for r in range(3):
+        b.submit(Request(rid=r, prompt=np.array([1, 2, 3], np.int32),
+                         max_new=8))
+    b.run(None)
+    assert b.knn_store.store.n == ds.store.n + 21
+    # the drain snapshot is committed at the new high-water mark, so a
+    # second cold start resumes from the full stream
+    assert persist.latest_snapshot(str(tmp_path)) == ds.store.n + 21
+    b2 = ContinuousBatcher(
+        2, step_fn, prefill_fn, lambda c, i, o, length: c,
+        knn_capture=lambda lg: lg @ proj, knn_chunk=8,
+        knn_snapshot_dir=str(tmp_path))
+    _assert_stores_equal(b.knn_store.store, b2.knn_store.store)
