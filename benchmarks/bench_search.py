@@ -364,7 +364,9 @@ scfg = SearchConfig(beam=16, rounds=24, expand=4)
 _, _, st = graph_search_sharded(mesh, x, gidx, q, k_out=10, cfg=scfg,
                                 key=jax.random.key(2), router=router,
                                 route_p=1, route_cap=48, with_stats=True)
-print("ROUTED_STATS " + json.dumps({k: int(v) for k, v in st.items()}))
+print("ROUTED_STATS " + json.dumps(
+    {k: (v if isinstance(v, (list, tuple, float)) else int(v))
+     for k, v in st.items()}))
 """
 
 

@@ -37,6 +37,14 @@ when any gated metric violates its pinned floor:
     ``cold_start_speedup`` (rebuild wall-clock / restore wall-clock)
     must stay at or above ``--persist-floor`` — when ``--persist`` is
     given (correctness + the zero-rebuild cold-start claim)
+  * chaos — the scripted fault schedule (bench_chaos.py: flaky writer,
+    poisoned batch, torn newest snapshot, dead shard) must degrade
+    gracefully: ``crashes == 0`` (unhandled exceptions AND violated
+    degradation contracts both count), ``dropped_queries == 0``,
+    ``degraded_recall`` (vs the surviving shards' attainable ground
+    truth) at or above ``--chaos-floor``, and the corrupted-snapshot
+    cold start must fall back to the older committed step
+    bit-identically (``fallback_bitident``) — when ``--chaos`` is given
 
 When running under GitHub Actions (``GITHUB_STEP_SUMMARY`` set) a
 markdown metrics table (recall / QPS / evals per gate, fp32 vs
@@ -51,7 +59,8 @@ Usage: python benchmarks/check_gate.py results/bench/online.json \
            --search results/bench/search.json --search-floor 0.92 \
            --quant results/bench/search_quant.json --quant-floor 0.90 \
            --router results/bench/search_router.json --router-floor 0.90 \
-           --persist results/bench/persist.json --persist-floor 5.0
+           --persist results/bench/persist.json --persist-floor 5.0 \
+           --chaos results/bench/chaos.json --chaos-floor 0.80
 """
 from __future__ import annotations
 
@@ -240,6 +249,40 @@ def check_persist(rows: list, floor: float) -> list:
     return failures
 
 
+def check_chaos(rows: list, floor: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_chaos"]
+    if not smoke:
+        failures.append("no smoke_chaos row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("crashes", "dropped_queries",
+                                   "degraded_recall", "fallback_bitident",
+                                   "recovery_s") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(f"smoke_chaos row missing gated keys {missing}")
+            continue
+        if int(r["crashes"]):
+            failures.append(
+                f"chaos schedule produced {r['crashes']} crash(es)/"
+                f"contract violation(s): {r.get('notes', '')}")
+        if int(r["dropped_queries"]):
+            failures.append(
+                f"chaos schedule dropped {r['dropped_queries']} queries "
+                "(degraded serving must answer every query)")
+        recall = float(r["degraded_recall"])
+        if recall < floor:
+            failures.append(
+                f"degraded_recall {recall:.4f} below pinned floor {floor} "
+                "(survivors must still answer well with a dead shard)")
+        if not r["fallback_bitident"]:
+            failures.append(
+                "corrupted-snapshot cold start was not bit-identical to "
+                "the older committed step (fallback restore is lossy)")
+    return failures
+
+
 # rows rendered into the step-summary table: (gate, metric, source op,
 # row key, floor text). "vs" floors compare against another key.
 _SUMMARY_SPEC = (
@@ -282,6 +325,18 @@ _SUMMARY_SPEC = (
     ("persist", "restore_s", "smoke_persist", "restore_s", ""),
     ("persist", "rebuild_s", "smoke_persist", "rebuild_s", ""),
     ("persist", "snapshot_mb", "smoke_persist", "snapshot_mb", ""),
+    ("chaos", "crashes / contract violations", "smoke_chaos", "crashes",
+     "== 0"),
+    ("chaos", "dropped_queries (degraded dispatch)", "smoke_chaos",
+     "dropped_queries", "== 0"),
+    ("chaos", "degraded_recall (1 dead shard of 4)", "smoke_chaos",
+     "degraded_recall", "chaos_floor"),
+    ("chaos", "baseline_recall (all shards live)", "smoke_chaos",
+     "baseline_recall", ""),
+    ("chaos", "fallback_bitident (torn newest snapshot)", "smoke_chaos",
+     "fallback_bitident", "== True"),
+    ("chaos", "recovery_s (fallback cold start)", "smoke_chaos",
+     "recovery_s", ""),
 )
 
 
@@ -348,6 +403,13 @@ def main(argv: list | None = None) -> int:
                    help="pinned cold_start_speedup floor (restore must "
                         "beat rebuild by at least this factor; observed "
                         "~250x on the smoke corpus)")
+    p.add_argument("--chaos", default=None,
+                   help="path to chaos.json (enables the fault-schedule "
+                        "gate)")
+    p.add_argument("--chaos-floor", type=float, default=0.80,
+                   help="pinned degraded_recall floor — recall against "
+                        "the surviving shards' attainable ground truth "
+                        "with 1 of 4 shards dead")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
@@ -378,13 +440,19 @@ def main(argv: list | None = None) -> int:
             persist_rows = json.load(f)
         row_sets["persist"] = persist_rows
         failures += check_persist(persist_rows, args.persist_floor)
+    if args.chaos is not None:
+        with open(args.chaos) as f:
+            chaos_rows = json.load(f)
+        row_sets["chaos"] = chaos_rows
+        failures += check_chaos(chaos_rows, args.chaos_floor)
     write_step_summary(
         row_sets,
         {"floor": args.floor, "build_floor": args.build_floor,
          "search_floor": args.search_floor,
          "quant_floor": args.quant_floor,
          "router_floor": args.router_floor,
-         "persist_floor": args.persist_floor},
+         "persist_floor": args.persist_floor,
+         "chaos_floor": args.chaos_floor},
         failures,
     )
     for msg in failures:
@@ -404,7 +472,11 @@ def main(argv: list | None = None) -> int:
                  "and >= random-entry recall, 0 dropped queries")
               + ("" if args.persist is None else
                  f"; restored search bit-identical, cold start >= "
-                 f"{args.persist_floor}x faster than rebuild"))
+                 f"{args.persist_floor}x faster than rebuild")
+              + ("" if args.chaos is None else
+                 f"; chaos schedule: 0 crashes, 0 dropped queries, "
+                 f"degraded_recall >= {args.chaos_floor}, "
+                 "bit-identical snapshot fallback"))
     return 1 if failures else 0
 
 

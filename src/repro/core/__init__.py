@@ -1,6 +1,12 @@
 """The paper's contribution: fast K-NN-graph construction (NN-Descent with
 turbosampling selection, greedy memory reordering, and blocked distance
 evaluation), single-chip and mesh-sharded."""
+from repro.core.faults import (
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    poison_batch,
+)
 from repro.core.graph_search import SearchConfig, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.nn_descent import (
@@ -41,6 +47,9 @@ from repro.core.router import Router, RouterConfig, build_router
 __all__ = [
     "DescentConfig",
     "DescentStats",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
     "MutableKNNStore",
     "NeighborLists",
     "OnlineConfig",
@@ -66,6 +75,7 @@ __all__ = [
     "latest_snapshot",
     "locality_stats",
     "nn_descent_iteration",
+    "poison_batch",
     "recall_at_k",
     "restore_store",
     "snapshot_store",

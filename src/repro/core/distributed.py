@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import heap, selection
+from repro.core import faults, heap, selection
 from repro.core.graph_search import SearchConfig, graph_search
 
 # jax.shard_map landed in 0.5; fall back to the experimental module on
@@ -426,6 +426,9 @@ def graph_search_sharded(
     route_p: int = 0,       # shards searched per query (0 = all: legacy)
     route_cap: int = 0,     # per-shard routed-query buffer (0 = auto)
     with_stats: bool = False,
+    dead_shards=None,       # shard indices known unavailable (timed-out
+    #                         or lost); merged with any active FaultPlan
+    #                         ("shard.dead"/"shard.slow" sites)
 ):
     """Sharded serving entry for the fused batched search: corpus rows are
     sharded over the mesh's ``axis``; each shard holds a K-NN subgraph
@@ -463,12 +466,30 @@ def graph_search_sharded(
     sharded corpus should hoist the per-shard quantization into a cached
     mirror like MutableKNNStore does; this entry re-quantizes per call.)
 
+    **Degraded dispatch** (``dead_shards`` non-empty, or a FaultPlan
+    marks shards dead/slow-past-timeout): the driver re-merges from the
+    SURVIVING shards instead of raising — replicated dispatch drops the
+    dead shards' gathered lists before the top-k fold; routed dispatch
+    re-routes by pushing dead shards' affinity to +inf, so each query's
+    top-``route_p`` set prefers live shards (a dead shard that still
+    lands in the set, e.g. route_p > live shards, contributes nothing to
+    the merge). Stats gain ``degraded_shards`` (the dead list) and
+    ``cover_frac`` (the fraction of per-query shard work answered by
+    live shards: live/P replicated; routed, the mean liveness of each
+    query's PRE-reroute affinity set — the post-reroute set is all-live
+    by construction). All shards dead answers every query empty — degraded
+    recall, never an exception.
+
     Returns (dist (q, k_out), idx (q, k_out) global ids), replicated —
     plus a stats dict (fanout/shards/routed/searched/dropped queries)
     when ``with_stats``.
     """
-    from repro.core.graph_search import _batch_key
+    from repro.core.graph_search import _admit_queries, _batch_key, \
+        _mask_bad_rows
     cfg = cfg or SearchConfig()
+    # admission runs HERE, on the concrete batch — graph_search inside
+    # the shard_map bodies sees tracers and skips its own check
+    queries, bad_rows = _admit_queries(queries, x.shape[1], cfg.strict)
     # no shared-constant entry fallback (same contract as graph_search):
     # keyless calls derive the entry key from the query batch content, so
     # repeated serving batches don't reuse identical per-shard entries
@@ -477,6 +498,12 @@ def graph_search_sharded(
     n = x.shape[0]
     assert n % P_ == 0, (n, P_)
     n_local = n // P_
+    dead = sorted({int(s) for s in (dead_shards or ())
+                   if 0 <= int(s) < P_} | set(faults.dead_shards(P_)))
+    live_mask = jnp.ones((P_,), bool)
+    if dead:
+        live_mask = live_mask.at[jnp.asarray(dead, jnp.int32)].set(False)
+    n_live = P_ - len(dead)
     # the subgraph contract is checkable and cheap to check (this is a
     # python-level driver): GLOBAL ids — e.g. build_knn_graph_sharded
     # output fed in directly — would be silently clipped into garbage
@@ -494,11 +521,11 @@ def graph_search_sharded(
         @functools.partial(
             shard_map,
             mesh=mesh,
-            in_specs=(P(), P(axis, None), P(axis, None), P()),
+            in_specs=(P(), P(axis, None), P(axis, None), P(), P()),
             out_specs=(P(), P()),
             check_vma=False,
         )
-        def fn(key, x_local, gi_local, q):
+        def fn(key, x_local, gi_local, q, live):
             p = jax.lax.axis_index(axis)
             base = p * n_local
             kk = jax.random.fold_in(key, p)
@@ -507,6 +534,10 @@ def graph_search_sharded(
             gi = jnp.where(i >= 0, base + i, -1)
             ds = jax.lax.all_gather(d, axis)             # (P, q, k_out)
             is_ = jax.lax.all_gather(gi, axis)
+            # survivors-only merge: a dead shard's gathered list is
+            # masked out wholesale before the top-k fold
+            ds = jnp.where(live[:, None, None], ds, jnp.inf)
+            is_ = jnp.where(live[:, None, None], is_, -1)
             alld = jnp.moveaxis(ds, 0, 1).reshape(q.shape[0], -1)
             alli = jnp.moveaxis(is_, 0, 1).reshape(q.shape[0], -1)
             alld = jnp.where(alli >= 0, alld, jnp.inf)
@@ -514,12 +545,16 @@ def graph_search_sharded(
             out_i = jnp.take_along_axis(alli, pos, axis=1)
             return jnp.where(out_i >= 0, -neg, jnp.inf), out_i
 
-        out_d, out_i = fn(key, x, graph_idx, queries)
+        out_d, out_i = fn(key, x, graph_idx, queries, live_mask)
+        out_d, out_i = _mask_bad_rows(out_d, out_i, bad_rows)
         if with_stats:
             q_n = queries.shape[0]
             return out_d, out_i, {
-                "fanout": P_, "shards": P_, "routed_queries": q_n * P_,
-                "searched_queries": q_n * P_, "dropped_queries": 0,
+                "fanout": P_, "shards": P_,
+                "routed_queries": q_n * n_live,
+                "searched_queries": q_n * n_live, "dropped_queries": 0,
+                "degraded_shards": dead,
+                "cover_frac": n_live / P_,
             }
         return out_d, out_i
 
@@ -537,6 +572,12 @@ def graph_search_sharded(
     # query→shard affinity: best centroid distance among the shard's
     # centroids (+inf for shards that own no centroid)
     aff = jax.ops.segment_min(dqc.T, shard_of, num_segments=P_).T  # (q, P)
+    # re-route past dead shards: +inf affinity pushes them out of every
+    # query's top-p set whenever enough live shards exist. cover_frac
+    # reports against the PRE-reroute affinity set (the shards the
+    # query wanted) — the post-reroute set is all-live by construction.
+    _, want_shards = jax.lax.top_k(-aff, route_p)         # (q, p)
+    aff = jnp.where(live_mask[None, :], aff, jnp.inf)
     _, top_shards = jax.lax.top_k(-aff, route_p)          # (q, p)
     t = min(cfg.router_t, router.centroids.shape[0])
     _, top_cent = jax.lax.top_k(-dqc, t)                  # (q, t)
@@ -551,16 +592,18 @@ def graph_search_sharded(
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(), P(axis, None), P(axis, None), P(), P(), P()),
+        in_specs=(P(), P(axis, None), P(axis, None), P(), P(), P(), P()),
         out_specs=(P(), P(), P(), P()),
         check_vma=False,
     )
-    def fn_routed(key, x_local, gi_local, q, tsh, eg):
+    def fn_routed(key, x_local, gi_local, q, tsh, eg, live):
         p = jax.lax.axis_index(axis)
         base = p * n_local
         kk = jax.random.fold_in(key, p)
-        # queries routed to this shard, compacted into a cap_q buffer
-        mine = (tsh == p).any(axis=1)                     # (q,)
+        # queries routed to this shard, compacted into a cap_q buffer;
+        # a dead shard searches nothing (and its gathered buffer is
+        # excluded from every query's partial merge below)
+        mine = (tsh == p).any(axis=1) & live[p]           # (q,)
         qids = jnp.nonzero(mine, size=cap_q, fill_value=-1)[0]
         qids = qids.astype(jnp.int32)
         ok_q = qids >= 0
@@ -601,7 +644,7 @@ def graph_search_sharded(
         ppc = jnp.clip(pp, 0, cap_q - 1)
         cd = ds[tsh, ppc]                                 # (q, p, k_out)
         ci = is_[tsh, ppc]
-        hit = (pp >= 0)[:, :, None] & (ci >= 0)
+        hit = (pp >= 0)[:, :, None] & (ci >= 0) & live[tsh][:, :, None]
         cd = jnp.where(hit, cd, jnp.inf).reshape(q_n, -1)
         ci = jnp.where(hit, ci, -1).reshape(q_n, -1)
         neg, pos = jax.lax.top_k(-cd, k_out)
@@ -612,14 +655,18 @@ def graph_search_sharded(
         return out_d, out_i, searched, routed_q
 
     out_d, out_i, searched, routed_q = fn_routed(
-        key, x, graph_idx, queries, top_shards, entg
+        key, x, graph_idx, queries, top_shards, entg, live_mask
     )
+    out_d, out_i = _mask_bad_rows(out_d, out_i, bad_rows)
     if with_stats:
         return out_d, out_i, {
             "fanout": route_p, "shards": P_,
             "routed_queries": int(routed_q),
             "searched_queries": int(searched),
             "dropped_queries": int(routed_q) - int(searched),
+            "degraded_shards": dead,
+            "cover_frac": float(jnp.mean(
+                live_mask[want_shards].astype(jnp.float32))),
         }
     return out_d, out_i
 

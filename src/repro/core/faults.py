@@ -1,0 +1,211 @@
+"""Deterministic, seedable fault injection for the serving path.
+
+The serving stack (persist, distributed dispatch, the search boundary)
+has graceful-degradation code that only ever runs when something breaks
+— which means it only ever runs in production unless the failures can be
+scripted. This module is that script: a :class:`FaultPlan` is a seeded
+registry of :class:`FaultSpec` entries keyed by *site* (a string like
+``"persist.write"``), and every injectable site in the codebase calls
+:func:`fire` at its boundary. With no plan active, :func:`fire` is a
+single ``is None`` check — zero hot-path cost, and nothing in this
+module touches jax, so importing it never pulls in the runtime.
+
+Sites currently consulted (grep for ``faults.fire`` to audit):
+
+  * ``persist.write``  — raise :class:`InjectedFault` (an ``OSError``)
+    inside ``write_snapshot`` before the COMMIT marker lands, so the
+    snapshot directory is left uncommitted.
+  * ``persist.torn``   — truncate one array file of an otherwise
+    complete snapshot *after* writing it (``arg`` = filename substring
+    to tear, default: first ``.npy``), modelling a torn page / partial
+    flush that COMMIT ordering alone cannot catch.
+  * ``persist.rename`` — fail the quarantine rename in
+    ``restore_store``'s fallback path.
+  * ``shard.dead``     — mark shard ``arg`` (an int or list of ints)
+    unavailable in ``graph_search_sharded``.
+  * ``shard.slow``     — report shard ``arg`` as exceeding the dispatch
+    timeout (treated like dead: degraded, not blocking).
+  * ``router.rebuild`` — fail the lazy router rebuild in
+    ``_maybe_rebuild_router`` (store keeps serving the stale router).
+
+Determinism: a spec with ``prob < 1.0`` draws from a per-site
+``random.Random`` seeded by ``(plan.seed, site)``; two runs with the
+same plan see byte-identical fault schedules. ``times``/``after`` gate
+on a per-site monotonically increasing event counter, so "fail the
+second and third writes" is expressible without probability at all.
+
+Usage::
+
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="persist.write", times=2),
+        FaultSpec(site="shard.dead", arg=1),
+    ))
+    with plan.active():
+        ...  # injected sites misbehave deterministically
+
+``poison_batch`` lives here too: it manufactures the adversarial query
+batches (NaN / Inf / wrong dimensionality) that the admission checks in
+``graph_search`` / ``knn_logits`` must catch.
+"""
+from __future__ import annotations
+
+import contextlib
+import random
+import threading
+from dataclasses import dataclass, field
+
+
+class InjectedFault(OSError):
+    """Raised by an injected fault site. Subclasses ``OSError`` so code
+    that treats transient I/O errors as retryable (``SnapshotWriter``)
+    exercises its real retry path against injections."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scripted fault.
+
+    site:  which injection point (see module docstring).
+    mode:  site-specific flavour; the default ``"error"`` raises
+           :class:`InjectedFault` (or, for shard sites, marks the shard
+           dead). ``persist.torn`` ignores mode.
+    prob:  per-event trigger probability (deterministic per-site RNG).
+    times: fire at most this many times (None = unlimited).
+    after: skip the first ``after`` matching events (0-indexed), so
+           "fail the 3rd write" is ``after=2, times=1``.
+    arg:   site-specific payload — shard index/indices for ``shard.*``,
+           filename substring for ``persist.torn``.
+    """
+    site: str
+    mode: str = "error"
+    prob: float = 1.0
+    times: int | None = None
+    after: int = 0
+    arg: object = None
+
+
+@dataclass
+class FaultPlan:
+    """A seeded set of fault specs plus per-site trigger accounting."""
+    seed: int = 0
+    specs: tuple = ()
+    _counts: dict = field(default_factory=dict, repr=False)
+    _fired: dict = field(default_factory=dict, repr=False)
+    _rngs: dict = field(default_factory=dict, repr=False)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def check(self, site: str):
+        """Return the triggering FaultSpec for this event at ``site``,
+        or None. Advances the per-site event counter either way."""
+        with self._lock:
+            event = self._counts.get(site, 0)
+            self._counts[site] = event + 1
+            for i, spec in enumerate(self.specs):
+                if spec.site != site:
+                    continue
+                if event < spec.after:
+                    continue
+                key = (site, i)
+                if spec.times is not None and \
+                        self._fired.get(key, 0) >= spec.times:
+                    continue
+                if spec.prob < 1.0:
+                    rng = self._rngs.get(site)
+                    if rng is None:
+                        rng = random.Random((self.seed, site).__repr__())
+                        self._rngs[site] = rng
+                    if rng.random() >= spec.prob:
+                        continue
+                self._fired[key] = self._fired.get(key, 0) + 1
+                return spec
+        return None
+
+    def fired(self, site: str | None = None) -> int:
+        """How many injections actually triggered (for assertions)."""
+        with self._lock:
+            return sum(n for (s, _), n in self._fired.items()
+                       if site is None or s == site)
+
+    @contextlib.contextmanager
+    def active(self):
+        """Install this plan globally for the duration of the block."""
+        activate(self)
+        try:
+            yield self
+        finally:
+            deactivate()
+
+
+# The active plan. Module-level so every site pays one ``is None`` test
+# when chaos is off; tests/benches install a plan via ``plan.active()``.
+_PLAN: FaultPlan | None = None
+
+
+def activate(plan: FaultPlan) -> None:
+    global _PLAN
+    _PLAN = plan
+
+
+def deactivate() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def fire(site: str):
+    """Consult the active plan at an injection site.
+
+    Returns the triggering :class:`FaultSpec` (caller decides how to
+    misbehave — most sites ``raise InjectedFault(...)``), or None.
+    """
+    if _PLAN is None:
+        return None
+    return _PLAN.check(site)
+
+
+def maybe_raise(site: str) -> None:
+    """``fire`` + raise for sites whose only failure mode is an error."""
+    spec = fire(site)
+    if spec is not None:
+        raise InjectedFault(f"injected fault at {site}")
+
+
+def dead_shards(n_shards: int) -> list:
+    """Collect the shard indices the active plan marks dead or slow
+    (slow-past-timeout degrades identically to dead at the dispatch
+    layer). Returns a sorted list of valid indices; [] when inactive."""
+    if _PLAN is None:
+        return []
+    out = set()
+    for site in ("shard.dead", "shard.slow"):
+        spec = fire(site)
+        if spec is None:
+            continue
+        arg = spec.arg
+        idxs = arg if isinstance(arg, (list, tuple)) else [arg]
+        for i in idxs:
+            if i is not None and 0 <= int(i) < n_shards:
+                out.add(int(i))
+    return sorted(out)
+
+
+def poison_batch(queries, mode: str):
+    """Manufacture an adversarial query batch from a clean one.
+
+    mode: "nan" poisons a few rows with NaN, "inf" with +/-Inf,
+    "dim" appends a feature column (dimensionality mismatch).
+    Imports numpy lazily so the module stays runtime-free otherwise.
+    """
+    import numpy as np
+    q = np.array(queries, dtype=np.float32, copy=True)
+    if mode == "dim":
+        return np.concatenate([q, q[:, :1]], axis=1)
+    bad = max(1, q.shape[0] // 8)
+    if mode == "nan":
+        q[:bad, 0] = np.nan
+    elif mode == "inf":
+        q[:bad, ::2] = np.inf
+        q[:bad, 1::2] = -np.inf
+    else:
+        raise ValueError(f"unknown poison mode {mode!r}")
+    return q

@@ -48,6 +48,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +89,21 @@ class SearchConfig:
                             # backend="ref" keeps random entries either
                             # way (the parity oracle predates the router).
     router_t: int = 4       # centroids probed per query when routing
+    strict: bool = False    # admission policy for poisoned query batches
+                            # (NaN/Inf rows): True rejects the whole
+                            # batch with ValueError; False (default)
+                            # sanitizes — bad rows are zeroed for the
+                            # traversal, their outputs overwritten with
+                            # (+inf, -1), and a RuntimeWarning reports
+                            # the count. Dim mismatches always reject
+                            # (there is no safe way to guess features).
+    max_rounds_deadline: float = 0.0
+                            # per-q_block time slice in seconds; 0 = off.
+                            # Once the batch has spent its cumulative
+                            # slice, remaining blocks run with the
+                            # expansion budget cut to one fused round
+                            # (rounds=expand) — degraded recall, never a
+                            # stall. Ignored under tracing (shard_map).
 
     @property
     def n_rounds(self) -> int:
@@ -183,6 +200,48 @@ def _draw_entries(
 # ---------------------------------------------------------------------------
 
 
+def _admit_queries(queries: jax.Array, d: int, strict: bool):
+    """Admission check at the search boundary: a poisoned batch (NaN/Inf
+    rows, wrong feature dim) must not propagate through the pool merge —
+    one non-finite distance poisons every merge it touches.
+
+    Returns (queries, bad_rows) where bad_rows is a (q,) bool mask of
+    sanitized rows (None when the batch is clean). ``strict`` rejects
+    non-finite rows with ValueError instead of sanitizing; a feature-dim
+    mismatch always rejects (no safe way to guess features). Skipped
+    entirely under tracing — graph_search runs inside shard_map bodies,
+    where the DRIVER (graph_search_sharded) has already admitted the
+    concrete batch."""
+    if isinstance(queries, jax.core.Tracer) or queries.shape[0] == 0:
+        return queries, None
+    if queries.ndim != 2 or queries.shape[1] != d:
+        raise ValueError(
+            f"query batch has shape {tuple(queries.shape)}; corpus rows "
+            f"have feature dim {d} — rejecting the batch at admission"
+        )
+    finite = jnp.all(jnp.isfinite(queries), axis=1)
+    if bool(jnp.all(finite)):
+        return queries, None
+    n_bad = int(jnp.sum(~finite))
+    if strict:
+        raise ValueError(
+            f"query batch contains {n_bad} non-finite row(s) (NaN/Inf) — "
+            "rejected (SearchConfig.strict=True)"
+        )
+    warnings.warn(
+        f"sanitized {n_bad} non-finite query row(s); their results are "
+        "empty (+inf/-1)", RuntimeWarning, stacklevel=3)
+    return jnp.where(finite[:, None], queries, 0.0), ~finite
+
+
+def _mask_bad_rows(dist, idx, bad_rows):
+    """Overwrite sanitized rows' outputs with the empty-slot sentinel."""
+    if bad_rows is None:
+        return dist, idx
+    return (jnp.where(bad_rows[:, None], jnp.inf, dist),
+            jnp.where(bad_rows[:, None], -1, idx))
+
+
 def graph_search(
     x: jax.Array,          # (n, d) corpus (feature-padded ok)
     graph_idx: jax.Array,  # (n, k) neighbor ids
@@ -227,9 +286,15 @@ def graph_search(
         cfg = SearchConfig(beam=beam, rounds=rounds)
     x = x.astype(jnp.float32)
     queries = queries.astype(jnp.float32)
+    queries, bad_rows = _admit_queries(queries, x.shape[1], cfg.strict)
+    n = graph_idx.shape[0]
+    if n == 0:
+        # empty corpus (a store before its first insert): every query
+        # gets the empty result, same contract as a fully-dead store
+        return (jnp.full((queries.shape[0], k_out), jnp.inf, jnp.float32),
+                jnp.full((queries.shape[0], k_out), -1, jnp.int32))
     if x2 is None:
         x2 = jnp.sum(x * x, axis=1)
-    n = graph_idx.shape[0]
     if entry is None:
         key = _batch_key(queries) if key is None else key
         if (router is not None and cfg.router != "off"
@@ -264,10 +329,11 @@ def graph_search(
         qstore = quantize.quantize_corpus(x, cfg.precision)
 
     if cfg.backend == "ref":
-        return _graph_search_ref(
+        rd, ri = _graph_search_ref(
             x, x2, graph_idx, queries, entry, alive,
             k_out=k_out, beam=cfg.beam, rounds=cfg.rounds,
         )
+        return _mask_bad_rows(rd, ri, bad_rows)
 
     # fused batched path: pad the batch to whole q_blocks, run the jitted
     # block search per block, slice the pad off. Small batches (decode
@@ -283,18 +349,38 @@ def graph_search(
     q2 = jnp.sum(qp * qp, axis=1)
     if entry.ndim == 2:     # per-query seeds ride along with their block
         entry = jnp.pad(entry, ((0, pad), (0, 0)), constant_values=-1)
+    # Deadline degradation: once the batch has spent its cumulative
+    # per-block slice, remaining blocks run with the expansion budget cut
+    # to ONE fused round — the answer degrades (fewer expansions, lower
+    # recall), the latency does not. Needs wall time, so each block is
+    # synced when armed; meaningless under tracing (no wall clock), so
+    # the knob is ignored there.
+    deadline = cfg.max_rounds_deadline
+    use_deadline = deadline > 0.0 and not isinstance(queries,
+                                                    jax.core.Tracer)
+    cut_cfg = None
+    t0 = time.monotonic() if use_deadline else 0.0
     outs_d, outs_i = [], []
-    for s in range(0, nq + pad, qb):
+    for bi, s in enumerate(range(0, nq + pad, qb)):
+        bcfg = cfg
+        if use_deadline and bi > 0 \
+                and time.monotonic() - t0 > deadline * bi:
+            if cut_cfg is None:     # one extra (cached) compile, ever
+                cut_cfg = dataclasses.replace(
+                    cfg, rounds=cfg.expand, max_rounds_deadline=0.0)
+            bcfg = cut_cfg
         ent_b = entry if entry.ndim == 1 else entry[s:s + qb]
         od, oi = _search_block(
             x, x2, graph_idx, qp[s:s + qb], q2[s:s + qb], ent_b, alive,
-            qstore, k_out=k_out, cfg=cfg,
+            qstore, k_out=k_out, cfg=bcfg,
         )
+        if use_deadline:
+            od.block_until_ready()
         outs_d.append(od)
         outs_i.append(oi)
     out_d = outs_d[0] if len(outs_d) == 1 else jnp.concatenate(outs_d)
     out_i = outs_i[0] if len(outs_i) == 1 else jnp.concatenate(outs_i)
-    return out_d[:nq], out_i[:nq]
+    return _mask_bad_rows(out_d[:nq], out_i[:nq], bad_rows)
 
 
 # ---------------------------------------------------------------------------

@@ -52,11 +52,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import heap, quantize
+from repro.core import faults, heap, quantize
 from repro.core.graph_search import SearchConfig, expand_frontier, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
@@ -210,6 +211,44 @@ class MutableKNNStore:
                 router=build_router(
                     store.x, cfg=cfg.router, key=jax.random.key(29),
                     alive=store.alive, x2=store.x2, backend=cfg.backend,
+                ),
+            )
+        return store
+
+    @classmethod
+    def empty(
+        cls,
+        d: int,
+        *,
+        k: int = 20,
+        cfg: OnlineConfig | None = None,
+    ) -> "MutableKNNStore":
+        """A store with no rows: every search answers empty (+inf/-1)
+        and the first ``knn_insert`` acts as a first build (all seeds
+        miss, so the batch self-join links the graph). A configured
+        router attaches lazily via ``ensure_router`` once rows exist —
+        there is nothing to cluster yet."""
+        cfg = cfg or OnlineConfig()
+        dp = pad_features(jnp.zeros((1, d), jnp.float32)).shape[1]
+        store = cls(
+            x=jnp.full((8, dp), _FILL, jnp.float32),
+            x2=jnp.full((8,), dp * _FILL * _FILL, jnp.float32),
+            nl=NeighborLists(
+                jnp.full((8, k), jnp.inf, jnp.float32),
+                jnp.full((8, k), -1, jnp.int32),
+                jnp.zeros((8, k), bool),
+            ),
+            alive=jnp.zeros((8,), bool),
+            n=0,
+            d=d,
+            cfg=cfg,
+        )
+        if cfg.precision != "f32":
+            store = dataclasses.replace(
+                store,
+                qs=quantize.quantize_corpus(
+                    store.x, cfg.precision,
+                    width=quantize.mirror_width(d, dp),
                 ),
             )
         return store
@@ -587,12 +626,26 @@ def _maybe_rebuild_router(
 ) -> Router:
     """Lazy drift rebuild: incremental maintenance keeps the router exact
     w.r.t. assignments/members, but the CENTROIDS slowly stop describing
-    the data as the corpus churns — past the drift threshold, refit."""
+    the data as the corpus churns — past the drift threshold, refit.
+
+    A failed rebuild degrades, never crashes: the incremental router is
+    stale but still *correct* as an entry-point heuristic (holes fall
+    back to random draws inside graph_search), so the store keeps
+    serving from it — degraded recall beats a dead insert path. The
+    rebuild is re-attempted on the next insert that crosses the
+    threshold."""
     rcfg = cfg.router or RouterConfig()
     if needs_rebuild(router, int(jnp.sum(alive)), rcfg):
-        return build_router(
-            x, cfg=rcfg, key=key, alive=alive, x2=x2, backend=cfg.backend,
-        )
+        try:
+            faults.maybe_raise("router.rebuild")
+            return build_router(
+                x, cfg=rcfg, key=key, alive=alive, x2=x2,
+                backend=cfg.backend,
+            )
+        except Exception as e:
+            warnings.warn(
+                f"router rebuild failed ({e}); serving continues from "
+                "the stale router", RuntimeWarning, stacklevel=2)
     return router
 
 

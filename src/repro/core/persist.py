@@ -57,12 +57,14 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core.heap import NeighborLists
 from repro.core.online import MutableKNNStore, OnlineConfig
 from repro.core.quantize import QuantizedStore, dequantize
@@ -98,12 +100,17 @@ def write_snapshot(directory: str, step: int, arrays: dict, meta: dict,
     snapshots. Returns the committed step directory."""
     os.makedirs(directory, exist_ok=True)
     final = _step_dir(directory, step)
-    if os.path.isdir(final):
-        # stale partial from a crashed writer (or a re-snapshot of the
-        # same step): replace it wholesale — it was never committed as
-        # far as readers are concerned until OUR marker lands
-        shutil.rmtree(final)
-    os.makedirs(final)
+    # Stage into a sibling dir (its ``.tmp`` suffix keeps it invisible to
+    # list_snapshots) and only swap it into place once OUR commit marker
+    # is on disk. A re-snapshot of an already-committed step — the
+    # scheduler re-uses step=store.n whenever no inserts landed between
+    # snapshots — must never destroy the committed copy before the
+    # replacement is durable: a mid-write crash or disk error leaves the
+    # old committed directory untouched.
+    tmp = final + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    faults.maybe_raise("persist.write")
     index = {}
     for name, arr in arrays.items():
         a = np.asarray(arr)
@@ -112,7 +119,7 @@ def write_snapshot(directory: str, step: int, arrays: dict, meta: dict,
             # npy headers can't describe bfloat16 portably — store the
             # raw bits and record the logical dtype in the manifest
             a = a.view(np.uint16)
-        np.save(os.path.join(final, name + ".npy"), a)
+        np.save(os.path.join(tmp, name + ".npy"), a)
         index[name] = {
             "file": name + ".npy",
             "shape": list(a.shape),
@@ -125,17 +132,46 @@ def write_snapshot(directory: str, step: int, arrays: dict, meta: dict,
         "arrays": index,
         **meta,
     }
-    with open(os.path.join(final, _MANIFEST), "w") as f:
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f, indent=2)
         f.flush()
         os.fsync(f.fileno())
-    with open(os.path.join(final, _COMMIT), "w") as f:
+    with open(os.path.join(tmp, _COMMIT), "w") as f:
         f.write("ok\n")
         f.flush()
         os.fsync(f.fileno())
+    old = None
+    if os.path.isdir(final):
+        # committed (or stale partial) predecessor: move it aside, swap
+        # the staged dir in, THEN drop the predecessor — at every
+        # instant at least one committed copy of this step exists
+        old = final + ".old"
+        shutil.rmtree(old, ignore_errors=True)
+        os.rename(final, old)
+    os.rename(tmp, final)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
+    _tear(final)
     if keep:
         gc_snapshots(directory, keep)
     return final
+
+
+def _tear(final: str) -> None:
+    """``persist.torn`` injection: truncate one array file of the
+    now-committed snapshot — a torn page the COMMIT ordering cannot
+    catch, which read-side manifest validation (and restore fallback)
+    must. No-op unless a fault plan scripts it."""
+    spec = faults.fire("persist.torn")
+    if spec is None:
+        return
+    pat = spec.arg if isinstance(spec.arg, str) else ""
+    for fn in sorted(os.listdir(final)):
+        if fn.endswith(".npy") and pat in fn:
+            fp = os.path.join(final, fn)
+            with open(fp, "r+b") as f:
+                f.truncate(max(os.path.getsize(fp) // 2, 1))
+            return
 
 
 def list_snapshots(directory: str) -> list[int]:
@@ -398,12 +434,48 @@ class Restored(NamedTuple):
     step: int
     manifest: dict
     fp32_loader: Fp32Loader | None   # quantized-first restores only
+    fallback_from: tuple = ()   # newer committed steps that failed
+    #                             validation and were skipped (quarantined)
+
+
+def _quarantine(directory: str, step: int, err: Exception) -> None:
+    """Move a committed-but-unreadable snapshot aside (rename, never
+    delete: its bytes are the only forensic evidence, and a smarter
+    reader may yet salvage it). A failed rename degrades to a warning —
+    the fallback restore proceeds either way."""
+    src = _step_dir(directory, step)
+    dst = src + ".bad"
+    i = 0
+    while os.path.exists(dst):
+        i += 1
+        dst = src + f".bad{i}"
+    try:
+        faults.maybe_raise("persist.rename")
+        os.rename(src, dst)
+        warnings.warn(
+            f"snapshot step {step} failed validation ({err}); "
+            f"quarantined to {dst}", RuntimeWarning, stacklevel=3)
+    except OSError as rename_err:
+        warnings.warn(
+            f"snapshot step {step} failed validation ({err}) and could "
+            f"not be quarantined ({rename_err}); falling back anyway",
+            RuntimeWarning, stacklevel=3)
 
 
 def restore_store(directory: str, step: int | None = None, *,
                   quantized_first: bool = False) -> Restored:
     """Restore a ``MutableKNNStore`` snapshot (the newest committed step
     when ``step`` is None).
+
+    When ``step`` is None and the newest committed snapshot fails
+    validation (torn array file, corrupt manifest, unknown format), the
+    restore degrades per-snapshot: the bad directory is quarantined by
+    rename (never deleted — in particular never the last remaining
+    committed snapshot, which is only ever touched if it itself fails)
+    and the next-older committed step is tried, newest-first, until one
+    loads. The skipped steps are reported in ``Restored.fallback_from``.
+    An explicit ``step`` fails hard — the caller asked for those exact
+    bytes.
 
     ``quantized_first=True`` is the fast cold start: only the int8/bf16
     mirror (4x/2x smaller than the fp32 rows) plus graph/masks are read
@@ -413,8 +485,44 @@ def restore_store(directory: str, step: int | None = None, *,
     quantized-accurate distances. The returned ``fp32_loader`` streams
     the exact rows in on a background thread; ``fp32_loader.apply(store)``
     swaps them in. Requires the snapshot to carry a quantized mirror."""
+    skip = {"x", "x2"} if quantized_first else frozenset()
+    if step is not None:
+        payload = read_snapshot(directory, step, skip=skip)
+        return _rebuild_restored(directory, payload, quantized_first)
+    steps = list_snapshots(directory)
+    if not steps:
+        raise SnapshotError(
+            f"no committed snapshot under {directory!r} (directories "
+            f"without a {_COMMIT} marker are ignored)"
+        )
+    skipped = []
+    last_err: SnapshotError | None = None
+    for s in reversed(steps):
+        # only the READ phase falls back: a snapshot whose bytes are
+        # intact but whose contents don't match the caller's request
+        # (kind mismatch, missing quantized mirror) raises through from
+        # _rebuild_restored without being quarantined
+        try:
+            payload = read_snapshot(directory, s, skip=skip)
+        except SnapshotError as e:
+            last_err = e
+            _quarantine(directory, s, e)
+            skipped.append(s)
+            continue
+        restored = _rebuild_restored(directory, payload, quantized_first)
+        if skipped:
+            restored = restored._replace(fallback_from=tuple(skipped))
+        return restored
+    raise SnapshotError(
+        f"every committed snapshot under {directory!r} failed "
+        f"validation (steps {list(reversed(steps))})"
+    ) from last_err
+
+
+def _rebuild_restored(directory: str, payload: tuple,
+                      quantized_first: bool) -> Restored:
     if not quantized_first:
-        step, arrays, manifest = read_snapshot(directory, step)
+        step, arrays, manifest = payload
         if manifest.get("kind") != "mutable_store":
             raise SnapshotError(
                 f"snapshot kind {manifest.get('kind')!r} is not a "
@@ -423,8 +531,7 @@ def restore_store(directory: str, step: int | None = None, *,
         store, values = rebuild_store(arrays, manifest)
         return Restored(store, values, step, manifest, None)
 
-    step, arrays, manifest = read_snapshot(directory, step,
-                                           skip={"x", "x2"})
+    step, arrays, manifest = payload
     if manifest.get("kind") != "mutable_store":
         raise SnapshotError(
             f"snapshot kind {manifest.get('kind')!r} is not a "
@@ -534,11 +641,19 @@ class SnapshotWriter:
     serialization to a background thread, so the insert path never waits
     on disk. One write is in flight at a time: a second ``save`` first
     joins the previous one (and re-raises its error, if any). ``keep``
-    retains the newest N committed snapshots."""
+    retains the newest N committed snapshots.
+
+    Transient disk errors (``OSError``: full volume draining, flaky
+    network mount) are retried ``retries`` times with capped exponential
+    backoff starting at ``backoff_s`` before surfacing — the staged
+    write in ``write_snapshot`` makes a failed attempt leave no trace,
+    so a retry starts clean."""
 
     directory: str
     keep: int = 3
     async_write: bool = True
+    retries: int = 2
+    backoff_s: float = 0.05
 
     def __post_init__(self):
         self._thread: threading.Thread | None = None
@@ -550,8 +665,16 @@ class SnapshotWriter:
         arrays, meta = capture_store(store, values=values)
 
         def write():
-            write_snapshot(self.directory, step, arrays, meta,
-                           keep=self.keep)
+            delay = self.backoff_s
+            for attempt in range(self.retries + 1):
+                try:
+                    return write_snapshot(self.directory, step, arrays,
+                                          meta, keep=self.keep)
+                except OSError:
+                    if attempt == self.retries:
+                        raise
+                    time.sleep(delay)
+                    delay = min(delay * 2.0, 1.0)
 
         if self.async_write and not wait:
             def run():
@@ -566,9 +689,17 @@ class SnapshotWriter:
 
     def wait(self) -> None:
         """Join the in-flight write; re-raise its error, if any."""
+        err = self.poll()
+        if err is not None:
+            raise err
+
+    def poll(self) -> Exception | None:
+        """Join the in-flight write and RETURN its error (None when
+        clean) instead of raising — the drain path uses this so a
+        failed *periodic* background write cannot abort the *final*
+        snapshot that supersedes it."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        err, self._error = self._error, None
+        return err

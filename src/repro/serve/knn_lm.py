@@ -271,7 +271,14 @@ def knn_logits(
                                  k_out=k, beam=beam, rounds=rounds,
                                  key=key, cfg=cfg, qstore=ds.qstore,
                                  router=getattr(ds, "router", None))
-    w = jax.nn.softmax(-dist / temperature, axis=-1)        # (q, k)
+    # empty slots carry (+inf, -1) and must get zero weight; a row with
+    # NO valid hit at all (empty store, or a poisoned query sanitized at
+    # admission) would make softmax 0/0 — such rows degrade to the flat
+    # log(1e-20) floor instead of propagating NaN into the interpolation
+    valid = idx >= 0
+    w = jax.nn.softmax(jnp.where(valid, -dist / temperature, -jnp.inf),
+                       axis=-1)                             # (q, k)
+    w = jnp.where(valid & jnp.any(valid, axis=-1, keepdims=True), w, 0.0)
     vals = ds.values[jnp.clip(idx, 0, ds.values.shape[0] - 1)]
     probs = jnp.zeros((queries.shape[0], vocab))
     probs = probs.at[jnp.arange(queries.shape[0])[:, None], vals].add(w)

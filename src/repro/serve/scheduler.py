@@ -9,6 +9,7 @@ requests come and go).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -221,6 +222,25 @@ class ContinuousBatcher:
             self._flush_knn(final=True)
             if self._knn_writer is not None:
                 # drain checkpoint: the next cold start resumes from the
-                # full stream, not the last periodic snapshot
-                self.snapshot_knn(wait=True)
+                # full stream, not the last periodic snapshot. A pending
+                # error from an earlier PERIODIC background write must
+                # not abort this final snapshot (it supersedes whatever
+                # that write would have saved): surface it as a warning
+                # once the drain commits, and only re-raise it when the
+                # drain itself also fails.
+                periodic_err = self._knn_writer.poll()
+                try:
+                    self.snapshot_knn(wait=True)
+                except Exception:
+                    if periodic_err is not None:
+                        warnings.warn(
+                            "periodic background snapshot had already "
+                            f"failed before the drain: {periodic_err}",
+                            RuntimeWarning, stacklevel=2)
+                    raise
+                if periodic_err is not None:
+                    warnings.warn(
+                        "a periodic background snapshot failed "
+                        f"({periodic_err}); the drain snapshot committed "
+                        "and supersedes it", RuntimeWarning, stacklevel=2)
         return cache

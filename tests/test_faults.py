@@ -1,0 +1,161 @@
+"""core/faults.py + the graceful-degradation sites it scripts:
+deterministic fault accounting, snapshot-write retries, torn-snapshot
+restore fallback with quarantine, and poisoned-batch manufacture."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults, persist
+from repro.core.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.core.online import MutableKNNStore, OnlineConfig
+
+
+def _store(n=64, d=8, k=6):
+    x = jax.random.normal(jax.random.key(0), (n, d), jnp.float32)
+    store, _ = MutableKNNStore.build(x, k=k, cfg=OnlineConfig(),
+                                     key=jax.random.key(1))
+    return store
+
+
+def test_plan_off_by_default():
+    assert faults.fire("persist.write") is None
+    assert faults.dead_shards(4) == []
+
+
+def test_plan_times_and_after_accounting():
+    plan = FaultPlan(specs=(
+        FaultSpec(site="persist.write", after=1, times=2),
+    ))
+    with plan.active():
+        hits = [faults.fire("persist.write") is not None for _ in range(5)]
+    # event 0 skipped (after=1), events 1 and 2 fire (times=2), then done
+    assert hits == [False, True, True, False, False]
+    assert plan.fired("persist.write") == 2
+    # deactivated on context exit
+    assert faults.fire("persist.write") is None
+
+
+def test_plan_prob_deterministic():
+    def run(seed):
+        plan = FaultPlan(seed=seed, specs=(
+            FaultSpec(site="persist.write", prob=0.5),
+        ))
+        with plan.active():
+            return [faults.fire("persist.write") is not None
+                    for _ in range(32)]
+    a, b = run(7), run(7)
+    assert a == b                      # same seed → same schedule
+    assert any(a) and not all(a)       # prob actually gates
+    assert run(8) != a                 # different seed → different draws
+
+
+def test_dead_shards_merges_dead_and_slow():
+    plan = FaultPlan(specs=(
+        FaultSpec(site="shard.dead", arg=1),
+        FaultSpec(site="shard.slow", arg=[3, 99]),   # 99 out of range
+    ))
+    with plan.active():
+        assert faults.dead_shards(4) == [1, 3]
+
+
+def test_poison_batch_modes():
+    q = np.zeros((8, 4), np.float32)
+    nanb = faults.poison_batch(q, "nan")
+    infb = faults.poison_batch(q, "inf")
+    dimb = faults.poison_batch(q, "dim")
+    assert np.isnan(nanb).any() and np.isfinite(nanb[-1]).all()
+    assert np.isinf(infb).any()
+    assert dimb.shape == (8, 5)
+    with pytest.raises(ValueError, match="poison mode"):
+        faults.poison_batch(q, "nope")
+
+
+def test_writer_retry_absorbs_transient_error(tmp_path):
+    """An injected write failure on the first attempt is retried with
+    backoff and the snapshot still commits — no error surfaces."""
+    store = _store()
+    w = persist.SnapshotWriter(str(tmp_path), retries=2, backoff_s=0.01)
+    plan = FaultPlan(specs=(FaultSpec(site="persist.write", times=1),))
+    with plan.active():
+        w.save(store, 1, wait=True)
+    assert plan.fired("persist.write") == 1
+    assert persist.list_snapshots(str(tmp_path)) == [1]
+
+
+def test_writer_surfaces_persistent_error(tmp_path):
+    """More consecutive failures than retries → the error surfaces, and
+    no partial directory is visible to loads."""
+    store = _store()
+    w = persist.SnapshotWriter(str(tmp_path), retries=1, backoff_s=0.01)
+    plan = FaultPlan(specs=(FaultSpec(site="persist.write", times=5),))
+    with plan.active(), pytest.raises(InjectedFault):
+        w.save(store, 1, wait=True)
+    assert persist.list_snapshots(str(tmp_path)) == []
+
+
+def test_restore_falls_back_past_torn_snapshot(tmp_path):
+    """The newest committed snapshot has a torn array file: restore
+    quarantines it by rename (never deletes) and lands on the next-older
+    committed step, bit-identically."""
+    store = _store()
+    persist.snapshot_store(store, str(tmp_path), 1)
+    from repro.core.online import knn_insert
+    extra = jax.random.normal(jax.random.key(9), (5, 8), jnp.float32)
+    store2, _ = knn_insert(store, extra, key=jax.random.key(10))
+    plan = FaultPlan(specs=(FaultSpec(site="persist.torn", arg="x.npy"),))
+    with plan.active():
+        persist.snapshot_store(store2, str(tmp_path), 2)
+    assert persist.list_snapshots(str(tmp_path)) == [1, 2]
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        r = persist.restore_store(str(tmp_path))
+    assert r.step == 1
+    assert r.fallback_from == (2,)
+    assert (np.asarray(r.store.x) == np.asarray(store.x)).all()
+    assert (np.asarray(r.store.nl.idx) == np.asarray(store.nl.idx)).all()
+    # the torn directory was renamed aside, not deleted
+    assert persist.list_snapshots(str(tmp_path)) == [1]
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000002.bad"))
+
+
+def test_restore_fallback_survives_failed_quarantine(tmp_path):
+    """Quarantine rename injected to fail: the bad snapshot stays in
+    place, the fallback still lands on the older committed step."""
+    store = _store()
+    persist.snapshot_store(store, str(tmp_path), 1)
+    plan = FaultPlan(specs=(
+        FaultSpec(site="persist.torn", arg="x.npy"),
+        FaultSpec(site="persist.rename"),
+    ))
+    with plan.active():
+        persist.snapshot_store(store, str(tmp_path), 2)
+        with pytest.warns(RuntimeWarning, match="could not be quarantined"):
+            r = persist.restore_store(str(tmp_path))
+    assert r.step == 1
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000002"))
+
+
+def test_restore_all_bad_raises(tmp_path):
+    store = _store()
+    plan = FaultPlan(specs=(FaultSpec(site="persist.torn", arg="x.npy"),))
+    with plan.active():
+        persist.snapshot_store(store, str(tmp_path), 1)
+    with pytest.warns(RuntimeWarning), \
+            pytest.raises(persist.SnapshotError, match="every committed"):
+        persist.restore_store(str(tmp_path))
+
+
+def test_explicit_step_fails_hard_no_fallback(tmp_path):
+    """An explicit step is a request for those exact bytes — corruption
+    raises instead of silently answering from another step."""
+    store = _store()
+    persist.snapshot_store(store, str(tmp_path), 1)
+    plan = FaultPlan(specs=(FaultSpec(site="persist.torn", arg="x.npy"),))
+    with plan.active():
+        persist.snapshot_store(store, str(tmp_path), 2)
+    with pytest.raises(persist.SnapshotError):
+        persist.restore_store(str(tmp_path), step=2)
+    # nothing quarantined on the explicit-step path
+    assert persist.list_snapshots(str(tmp_path)) == [1, 2]

@@ -348,3 +348,51 @@ def test_expand_frontier_overflow_prefers_near_hops():
     # the mask stays exact regardless of truncation
     assert bool(mask[1]) and bool(mask[2]) and bool(mask[3])
     assert int(mask.sum()) == 6
+
+
+# ---------------------------------------------------------------------------
+# degenerate stores: empty / fully tombstoned (robustness hardening)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_store_searches_empty_and_insert_is_first_build():
+    """MutableKNNStore.empty: searches answer empty instead of raising,
+    and the first insert acts as a first build — the batch self-join
+    links the graph so the inserted points retrieve each other."""
+    store = MutableKNNStore.empty(16, k=K)
+    assert store.n == 0 and store.live_count() == 0
+    q = jax.random.normal(jax.random.key(0), (6, 16))
+    d, i = store.search(q, k_out=5, key=jax.random.key(1))
+    assert (np.asarray(i) == -1).all()
+    x = datasets.clustered(jax.random.key(2), 64, 16, 4)
+    store, _ = knn_insert(store, x, key=jax.random.key(3))
+    assert store.n == 64 and store.live_count() == 64
+    _, idx = store.search(x[:16], k_out=1, key=jax.random.key(4))
+    assert (np.asarray(idx)[:, 0] == np.arange(16)).all()
+
+
+def test_empty_store_quantized_insert_roundtrip():
+    store = MutableKNNStore.empty(
+        16, k=K, cfg=OnlineConfig(precision="int8"))
+    x = datasets.clustered(jax.random.key(2), 48, 16, 4)
+    store, _ = knn_insert(store, x, key=jax.random.key(3))
+    assert store.qs is not None and store.live_count() == 48
+    _, idx = store.search(x[:8], k_out=1, key=jax.random.key(4))
+    assert (np.asarray(idx)[:, 0] == np.arange(8)).all()
+
+
+def test_fully_tombstoned_store_insert_relinks(blob_split, base_store):
+    """Deleting EVERY row then inserting must behave like a first
+    insert: no dead id ever resurfaces, the new batch is retrievable."""
+    x0, xn = blob_split
+    dead = jnp.arange(base_store.n, dtype=jnp.int32)
+    store, _ = knn_delete(base_store, dead)
+    assert store.live_count() == 0
+    d, i = store.search(x0[:8], k_out=5, key=jax.random.key(0))
+    assert (np.asarray(i) == -1).all()
+    store, _ = knn_insert(store, xn, key=jax.random.key(1))
+    assert store.live_count() == xn.shape[0]
+    _, idx = store.search(xn, k_out=1, key=jax.random.key(2))
+    got = np.asarray(idx)[:, 0]
+    assert (got >= base_store.n).all()      # only the new rows surface
+    assert (got == np.arange(xn.shape[0]) + base_store.n).all()

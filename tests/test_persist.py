@@ -186,6 +186,44 @@ def test_snapshot_writer_async_and_retention(tmp_path):
     _assert_stores_equal(ds.store, ds2.store)
 
 
+def test_failed_rewrite_keeps_committed_same_step(tmp_path):
+    """Retention edge (regression): the scheduler re-uses step=store.n
+    when no inserts landed between snapshots, so a re-snapshot of an
+    already-COMMITTED step whose write then fails must leave the
+    committed copy exactly as it was — the old rmtree-then-rewrite
+    policy destroyed it first and failed after, losing the only
+    committed snapshot."""
+    from repro.core.faults import FaultPlan, FaultSpec, InjectedFault
+    ds = _build(router=False)
+    ds.snapshot(str(tmp_path), step=5)
+    plan = FaultPlan(specs=(FaultSpec(site="persist.write"),))
+    with plan.active(), pytest.raises(InjectedFault):
+        ds.snapshot(str(tmp_path), step=5)
+    # the committed step survived the failed rewrite, bit for bit
+    assert persist.list_snapshots(str(tmp_path)) == [5]
+    ds2 = MutableKNNDatastore.restore(str(tmp_path))
+    _assert_stores_equal(ds.store, ds2.store)
+    b1, i1 = _search_bits(ds)
+    b2, i2 = _search_bits(ds2)
+    assert (i1 == i2).all() and (b1 == b2).all()
+
+
+def test_rewrite_same_step_replaces_atomically(tmp_path):
+    """The successful-rewrite half of the same edge: a re-snapshot of a
+    committed step swaps the new bytes in and leaves no staging or
+    backup directories behind."""
+    ds = _build(router=False)
+    ds.snapshot(str(tmp_path), step=5)
+    ds2 = _mutate(ds)
+    ds2.snapshot(str(tmp_path), step=5)
+    assert persist.list_snapshots(str(tmp_path)) == [5]
+    r = MutableKNNDatastore.restore(str(tmp_path))
+    _assert_stores_equal(ds2.store, r.store)
+    leftovers = [d for d in os.listdir(str(tmp_path))
+                 if d.endswith((".tmp", ".old"))]
+    assert leftovers == []
+
+
 def test_snapshot_writer_surfaces_background_errors(tmp_path):
     ds = _build(router=False)
     blocker = tmp_path / "snaps"
@@ -281,6 +319,49 @@ def test_scheduler_cold_start_and_drain_snapshot(tmp_path):
     # the drain snapshot is committed at the new high-water mark, so a
     # second cold start resumes from the full stream
     assert persist.latest_snapshot(str(tmp_path)) == ds.store.n + 21
+    b2 = ContinuousBatcher(
+        2, step_fn, prefill_fn, lambda c, i, o, length: c,
+        knn_capture=lambda lg: lg @ proj, knn_chunk=8,
+        knn_snapshot_dir=str(tmp_path))
+    _assert_stores_equal(b.knn_store.store, b2.knn_store.store)
+
+
+def test_drain_snapshot_survives_failed_periodic_write(tmp_path):
+    """Regression: a failed PERIODIC background snapshot used to
+    re-raise at the drain's save() and abort it — the full stream's
+    final snapshot was silently lost. Now the drain commits and the
+    stale error degrades to a warning."""
+    from repro.core.faults import FaultPlan, FaultSpec
+    vocab, dk = 16, 8
+    keys0 = jax.random.normal(jax.random.key(0), (64, dk))
+    vals0 = jax.random.randint(jax.random.key(1), (64,), 0, vocab)
+    MutableKNNDatastore.build(keys0, vals0, k=8,
+                              key=jax.random.key(2)).snapshot(str(tmp_path))
+    proj = jax.random.normal(jax.random.key(5), (vocab, dk))
+
+    def prefill_fn(toks):
+        return jnp.ones((1, vocab)), None, toks.shape[1]
+
+    def step_fn(cache, toks, lengths):
+        lg = jax.nn.one_hot((toks[:, 0] * 3 + lengths) % vocab, vocab) * 4.0
+        return lg, cache
+
+    b = ContinuousBatcher(
+        2, step_fn, prefill_fn, lambda c, i, o, length: c,
+        knn_capture=lambda lg: lg @ proj, knn_chunk=8,
+        knn_snapshot_dir=str(tmp_path), knn_snapshot_every=16)
+    for r in range(3):
+        b.submit(Request(rid=r, prompt=np.array([1, 2, 3], np.int32),
+                         max_new=8))
+    # 21 streamed rows → exactly ONE periodic snapshot (at >=16 rows);
+    # its write fails persistently (3 events outlast the default 2
+    # retries), then the fault budget is spent — the drain write is clean
+    plan = FaultPlan(specs=(FaultSpec(site="persist.write", times=3),))
+    with plan.active(), pytest.warns(RuntimeWarning, match="supersedes"):
+        b.run(None)
+    assert plan.fired("persist.write") == 3
+    # the drain snapshot landed at the final high-water mark anyway
+    assert persist.latest_snapshot(str(tmp_path)) == b.knn_store.store.n
     b2 = ContinuousBatcher(
         2, step_fn, prefill_fn, lambda c, i, o, length: c,
         knn_capture=lambda lg: lg @ proj, knn_chunk=8,

@@ -237,6 +237,34 @@ def test_router_rebuild_after_drift_burst():
     assert alive[mi[mi >= 0]].all()
 
 
+def test_router_rebuild_failure_serves_stale(recwarn):
+    """Robustness: the drift threshold is crossed but the rebuild is
+    injected to fail — the store keeps serving from the STALE router
+    (degraded recall, no crash), and the next threshold crossing
+    re-attempts the rebuild."""
+    import warnings as _w
+    from repro.core.faults import FaultPlan, FaultSpec
+    store, x = _store_with_router(rebuild_frac=0.25)
+    pts = jnp.tile(x[:16], (6, 1)) + 0.03     # past the drift threshold
+    plan = FaultPlan(specs=(FaultSpec(site="router.rebuild", times=1),))
+    with plan.active(), _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        store2, _ = knn_insert(store, pts, key=jax.random.key(33))
+    assert plan.fired("router.rebuild") == 1
+    assert any("stale router" in str(r.message) for r in rec)
+    r = store2.router
+    assert int(r.stale) > 0                   # NOT rebuilt — still stale
+    # the stale router still serves: searches stay valid and live-only
+    _, idx = store2.search(x[:32], k_out=5, key=jax.random.key(34))
+    got = np.asarray(idx)
+    assert (got >= 0).all()
+    assert np.asarray(store2.alive)[got].all()
+    # next insert crosses the threshold again; with no fault the rebuild
+    # goes through and stale resets
+    store3, _ = knn_insert(store2, x[:8] + 0.01, key=jax.random.key(35))
+    assert int(store3.router.stale) == 0
+
+
 def test_needs_rebuild_threshold():
     store, _ = _store_with_router()
     r = store.router

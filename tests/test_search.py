@@ -231,6 +231,81 @@ def test_fused_all_dead_returns_empty(built_graph):
     assert np.isinf(np.asarray(d)).all()
 
 
+def test_empty_corpus_returns_empty():
+    """A store before its first insert: zero allocated rows answer every
+    query with the empty result instead of a degenerate gather."""
+    d, i = graph_search(jnp.zeros((0, 16)), jnp.zeros((0, K), jnp.int32),
+                        jnp.ones((7, 16)), k_out=5, key=jax.random.key(0))
+    assert d.shape == (7, 5) and i.shape == (7, 5)
+    assert (np.asarray(i) == -1).all()
+    assert np.isinf(np.asarray(d)).all()
+
+
+def test_admission_sanitizes_poisoned_rows(built_graph):
+    """Default (strict=False): NaN/Inf rows are sanitized — their
+    results come back empty, the CLEAN rows' results are bit-identical
+    to the unpoisoned batch (no NaN reaches the pool merge)."""
+    x, _, idx = built_graph
+    q = np.array(x[:16], np.float32)
+    clean_d, clean_i = graph_search(x, idx, jnp.asarray(q), k_out=5,
+                                    key=jax.random.key(3))
+    bad = q.copy()
+    bad[0, 0] = np.nan
+    bad[3, :] = np.inf
+    with pytest.warns(RuntimeWarning, match="sanitized 2"):
+        d, i = graph_search(x, idx, jnp.asarray(bad), k_out=5,
+                            key=jax.random.key(3))
+    d, i = np.asarray(d), np.asarray(i)
+    assert (i[0] == -1).all() and (i[3] == -1).all()
+    assert np.isinf(d[0]).all() and np.isinf(d[3]).all()
+    ok = [r for r in range(16) if r not in (0, 3)]
+    assert np.isfinite(d[ok]).all()
+    _invariants(d[ok], i[ok])
+
+
+def test_admission_strict_rejects_poisoned_batch(built_graph):
+    x, _, idx = built_graph
+    bad = np.array(x[:8], np.float32)
+    bad[2, 1] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        graph_search(x, idx, jnp.asarray(bad), k_out=5,
+                     key=jax.random.key(3), cfg=SearchConfig(strict=True))
+
+
+def test_admission_rejects_dim_mismatch(built_graph):
+    """A wrong-dimensionality batch always rejects (both strict modes):
+    there is no safe way to guess which features the caller meant."""
+    x, _, idx = built_graph
+    bad = jnp.ones((4, x.shape[1] + 1))
+    for cfg in (SearchConfig(strict=False), SearchConfig(strict=True)):
+        with pytest.raises(ValueError, match="feature dim"):
+            graph_search(x, idx, bad, k_out=5, key=jax.random.key(0),
+                         cfg=cfg)
+
+
+def test_deadline_degrades_not_crashes(built_graph):
+    """max_rounds_deadline: an already-expired time slice cuts the
+    budget of every block after the first — results stay VALID (the
+    invariants hold, every query answered), only recall may degrade."""
+    x, _, idx = built_graph
+    q = x[:64] + 0.01
+    cfg = SearchConfig(beam=16, rounds=24, q_block=16,
+                       max_rounds_deadline=1e-9)
+    d, i = graph_search(x, idx, q, k_out=5, key=jax.random.key(2), cfg=cfg)
+    assert i.shape == (64, 5)
+    assert (np.asarray(i) >= 0).all()
+    _invariants(d, i)
+    # and a generous slice changes nothing vs. the undeadlined config
+    lazy = SearchConfig(beam=16, rounds=24, q_block=16,
+                        max_rounds_deadline=60.0)
+    d0, i0 = graph_search(x, idx, q, k_out=5, key=jax.random.key(2),
+                          cfg=SearchConfig(beam=16, rounds=24, q_block=16))
+    d1, i1 = graph_search(x, idx, q, k_out=5, key=jax.random.key(2),
+                          cfg=lazy)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    assert (np.asarray(d0) == np.asarray(d1)).all()
+
+
 def test_search_cfg_threads_through_knn_logits():
     """serve/knn_lm: cfg + key thread to the store search and the result
     distribution reacts to retrieval."""
