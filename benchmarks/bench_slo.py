@@ -1,0 +1,233 @@
+"""SLO benchmark: a bursty open-loop arrival process against the
+RetrievalScheduler (the CI receipt for admission control, backpressure,
+deadline propagation, and the bucketed q_block ladder).
+
+Modes (``python benchmarks/bench_slo.py --mode ...``):
+
+  * ``smoke`` (default) — the gated CI lane. A seeded arrival schedule
+    mixing three traffic shapes over a few seconds of wall time:
+
+      - interactive singles (Poisson-ish arrivals, tight deadline)
+      - periodic batch groups (one multi-query submit burst per period,
+        loose deadline)
+      - one scripted interactive BURST that exceeds the bounded queue,
+        so shedding is exercised deterministically every run
+
+    The driver is OPEN-LOOP: arrivals land on their scheduled wall-clock
+    times whether or not the scheduler is keeping up (that is what makes
+    overload possible — a closed loop would just slow down). Between
+    arrivals the driver pumps the scheduler; each pump dispatches one
+    lane-pure batch at its bucketed ``q_block`` ladder step with the
+    batch's tightest remaining deadline propagated into
+    ``SearchConfig.max_rounds_deadline``.
+
+    The SAME schedule then replays against ``fixed_block=True`` — the
+    pre-ladder baseline that pads every dispatch to the full ``q_block``
+    — so the ladder's interactive-latency win is measured in the same
+    run on the same machine. Both sub-runs pre-warm their compile caches
+    (every reachable bucket, plus the deadline-cut variant) before the
+    clock starts, exactly like a production server would.
+
+    Emits one ``smoke_slo`` row into results/bench/slo.json, gated by
+    check_gate.py --slo: ``crashes == 0``, ``silent_drops == 0`` (every
+    non-served request carries a typed rejection), interactive p99 at or
+    below ``--slo-p99-floor``, ``shed_frac`` at or below
+    ``--slo-shed-max``, and bucketed interactive p99 at or below 0.9x
+    the fixed-block baseline's.
+
+  * ``full`` — the same workload at a longer duration / higher rates
+    (not gated; for local latency investigation).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import warnings
+
+import numpy as np
+
+
+def make_schedule(seed: int, duration_s: float, inter_rate: float,
+                  batch_every_s: float, batch_group: int,
+                  burst_at_s: float, burst_n: int,
+                  inter_deadline_ms: float, batch_deadline_ms: float):
+    """The seeded arrival schedule: a sorted list of
+    (t_s, lane, deadline_ms) tuples. Same seed -> byte-identical
+    schedule, so the bucketed and fixed-block sub-runs see the same
+    offered load."""
+    rng = np.random.RandomState(seed)
+    arrivals = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / inter_rate))
+        if t >= duration_s:
+            break
+        arrivals.append((t, "interactive", inter_deadline_ms))
+    bt = batch_every_s
+    while bt < duration_s:
+        arrivals.extend((bt, "batch", batch_deadline_ms)
+                        for _ in range(batch_group))
+        bt += batch_every_s
+    # the scripted overload: burst_n interactive arrivals at one instant
+    arrivals.extend((burst_at_s, "interactive", inter_deadline_ms)
+                    for _ in range(burst_n))
+    arrivals.sort(key=lambda a: a[0])
+    return arrivals
+
+
+def _warm(search_fn, base_cfg, d: int, fixed: bool, max_batch: int):
+    """Compile every block shape a sub-run can dispatch before its clock
+    starts: each reachable bucket (the ladder up to the dispatch cap
+    when bucketed, just the full block when fixed) x {normal,
+    deadline-cut} round budgets."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    top = min(base_cfg.q_block, max_batch)
+    sizes = [base_cfg.q_block] if fixed else sorted(
+        {1 << b for b in range(top.bit_length() + 1) if (1 << b) <= top}
+        | {top})
+    cut = dataclasses.replace(base_cfg, rounds=base_cfg.expand)
+    for m in sizes:
+        q = jnp.zeros((m, d), jnp.float32)
+        for cfg in (base_cfg, cut):
+            dd, _ = search_fn(q, cfg)
+            dd.block_until_ready()
+
+
+def drive(schedule, sched, qpool) -> dict:
+    """Open-loop replay of ``schedule`` against ``sched``. Returns the
+    run accounting (requests, crashes)."""
+    reqs = []
+    crashes = 0
+    notes = []
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(schedule) or len(sched.queue):
+        now = time.perf_counter() - t0
+        while i < len(schedule) and schedule[i][0] <= now:
+            _, lane, dl = schedule[i]
+            try:
+                reqs.append(sched.submit(qpool[i % len(qpool)],
+                                         lane=lane, deadline_ms=dl))
+            except Exception as e:  # noqa: BLE001 — the gate counts these
+                crashes += 1
+                notes.append(f"submit: {e!r}")
+            i += 1
+        if len(sched.queue):
+            try:
+                sched.pump()
+            except Exception as e:  # noqa: BLE001
+                crashes += 1
+                notes.append(f"pump: {e!r}")
+                break               # a broken pump would spin forever
+        elif i < len(schedule):
+            time.sleep(min(2e-3, max(0.0, schedule[i][0] - now)))
+    return {"reqs": reqs, "crashes": crashes, "notes": notes}
+
+
+def _pcts(vals: list) -> tuple:
+    if not vals:
+        return float("nan"), float("nan")
+    v = np.asarray(vals)
+    return float(np.percentile(v, 50)), float(np.percentile(v, 99))
+
+
+def run_smoke(*, n: int = 2048, d: int = 16, k: int = 10,
+              duration_s: float = 2.0, inter_rate: float = 40.0,
+              batch_every_s: float = 0.5, batch_group: int = 24,
+              burst_n: int = 48, max_queue: int = 32, max_batch: int = 8,
+              seed: int = 0, op: str = "smoke_slo") -> list:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import Sink
+    from repro.core import datasets
+    from repro.core.graph_search import SearchConfig, graph_search
+    from repro.core.nn_descent import DescentConfig, build_knn_graph
+    from repro.serve.scheduler import RetrievalScheduler, SchedulerConfig
+
+    sink = Sink("slo")
+    x = datasets.clustered(jax.random.key(0), n, d, 16)
+    _, gidx, _ = build_knn_graph(
+        x, k=k, cfg=DescentConfig(k=k, rho=1.0, max_iters=10,
+                                  reorder=False),
+        key=jax.random.key(1))
+    base_cfg = SearchConfig(beam=16, rounds=12, expand=4, q_block=32)
+
+    def search_fn(q, cfg):
+        return graph_search(x, gidx, q, k_out=k, key=jax.random.key(2),
+                            cfg=cfg)
+
+    qpool = np.asarray(x[::4] + 0.01, np.float32)
+    schedule = make_schedule(
+        seed, duration_s, inter_rate, batch_every_s, batch_group,
+        burst_at_s=duration_s / 2, burst_n=burst_n,
+        inter_deadline_ms=250.0, batch_deadline_ms=2000.0)
+
+    def one_run(fixed: bool) -> dict:
+        cfg = SearchConfig(beam=16, rounds=12, expand=4, q_block=32,
+                           fixed_block=fixed)
+        sched = RetrievalScheduler(
+            search_fn, base_cfg=cfg,
+            cfg=SchedulerConfig(max_queue=max_queue,
+                                shed_policy="drop-oldest-batch",
+                                max_batch=max_batch))
+        _warm(search_fn, cfg, d, fixed, max_batch)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            acct = drive(schedule, sched, qpool)
+        st = sched.stats()
+        # the no-silent-drops ledger: every offered request must end
+        # served (idx set) or carry a typed rejection — nothing vanishes
+        silent = sum(1 for r in acct["reqs"]
+                     if r.idx is None and r.rejection is None)
+        if len(acct["reqs"]) != len(schedule):
+            silent += abs(len(schedule) - len(acct["reqs"]))
+            acct["notes"].append(
+                f"{len(acct['reqs'])} tracked requests vs "
+                f"{len(schedule)} offered")
+        p50_i, p99_i = _pcts(st["latency_ms"]["interactive"])
+        p50_b, p99_b = _pcts(st["latency_ms"]["batch"])
+        return {
+            "stats": st, "crashes": acct["crashes"],
+            "silent_drops": silent, "notes": acct["notes"],
+            "p50_i": p50_i, "p99_i": p99_i,
+            "p50_b": p50_b, "p99_b": p99_b,
+        }
+
+    bucketed = one_run(fixed=False)
+    fixed = one_run(fixed=True)
+
+    st = bucketed["stats"]
+    shed_frac = st["shed"] / max(len(schedule), 1)
+    sink.row(
+        op=op, n=n, d=d, k=k, duration_s=duration_s,
+        offered=len(schedule), admitted=st["admitted"],
+        served=st["served"], shed=st["shed"], expired=st["expired"],
+        shed_frac=round(shed_frac, 4), dispatches=st["dispatches"],
+        crashes=bucketed["crashes"] + fixed["crashes"],
+        silent_drops=bucketed["silent_drops"] + fixed["silent_drops"],
+        interactive_p50_ms=round(bucketed["p50_i"], 3),
+        interactive_p99_ms=round(bucketed["p99_i"], 3),
+        batch_p50_ms=round(bucketed["p50_b"], 3),
+        batch_p99_ms=round(bucketed["p99_b"], 3),
+        fixed_interactive_p99_ms=round(fixed["p99_i"], 3),
+        fixed_shed=fixed["stats"]["shed"],
+        notes="; ".join(bucketed["notes"] + fixed["notes"]))
+    return sink.save()
+
+
+def main(argv: list | None = None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mode", choices=("smoke", "full"), default="smoke")
+    args = p.parse_args(argv)
+    if args.mode == "full":
+        return run_smoke(n=8192, duration_s=6.0, inter_rate=80.0,
+                         batch_group=48, burst_n=96, op="full_slo")
+    return run_smoke()
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,15 @@ when any gated metric violates its pinned floor:
     truth) at or above ``--chaos-floor``, and the corrupted-snapshot
     cold start must fall back to the older committed step
     bit-identically (``fallback_bitident``) — when ``--chaos`` is given
+  * SLO — the bursty open-loop overload schedule (bench_slo.py) must be
+    survived gracefully: ``crashes == 0``, ``silent_drops == 0`` (every
+    non-served request carries a typed rejection), interactive p99 at or
+    below ``--slo-p99-floor`` ms, ``shed_frac`` of the offered load at
+    or below ``--slo-shed-max`` but strictly positive (the scripted
+    burst must actually exercise admission control), and the bucketed
+    ``q_block`` ladder's interactive p99 must sit measurably (0.9x)
+    below the fixed-block baseline replayed on the same schedule in the
+    same run — when ``--slo`` is given
 
 When running under GitHub Actions (``GITHUB_STEP_SUMMARY`` set) a
 markdown metrics table (recall / QPS / evals per gate, fp32 vs
@@ -60,7 +69,9 @@ Usage: python benchmarks/check_gate.py results/bench/online.json \
            --quant results/bench/search_quant.json --quant-floor 0.90 \
            --router results/bench/search_router.json --router-floor 0.90 \
            --persist results/bench/persist.json --persist-floor 5.0 \
-           --chaos results/bench/chaos.json --chaos-floor 0.80
+           --chaos results/bench/chaos.json --chaos-floor 0.80 \
+           --slo results/bench/slo.json --slo-p99-floor 150 \
+           --slo-shed-max 0.35
 """
 from __future__ import annotations
 
@@ -283,6 +294,58 @@ def check_chaos(rows: list, floor: float) -> list:
     return failures
 
 
+def check_slo(rows: list, p99_floor: float, shed_max: float) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_slo"]
+    if not smoke:
+        failures.append("no smoke_slo row in benchmark output")
+    for r in smoke:
+        missing = [key for key in ("crashes", "silent_drops",
+                                   "interactive_p99_ms",
+                                   "fixed_interactive_p99_ms",
+                                   "shed_frac", "shed") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(f"smoke_slo row missing gated keys {missing}")
+            continue
+        if int(r["crashes"]):
+            failures.append(
+                f"SLO schedule produced {r['crashes']} crash(es): "
+                f"{r.get('notes', '')}")
+        if int(r["silent_drops"]):
+            failures.append(
+                f"{r['silent_drops']} request(s) ended with neither a "
+                "result nor a typed rejection (silent drop)")
+        p99 = float(r["interactive_p99_ms"])
+        if not p99 == p99:          # NaN: no interactive request served
+            failures.append("interactive_p99_ms is NaN (no interactive "
+                            "latency samples)")
+        elif p99 > p99_floor:
+            failures.append(
+                f"interactive p99 {p99:.1f}ms above pinned ceiling "
+                f"{p99_floor}ms under the scripted burst")
+        shed_frac = float(r["shed_frac"])
+        if shed_frac > shed_max:
+            failures.append(
+                f"shed_frac {shed_frac:.3f} above bound {shed_max} "
+                "(overload control shedding too much of the offered "
+                "load)")
+        if not int(r["shed"]):
+            failures.append(
+                "scripted burst shed nothing — the bounded queue / "
+                "admission path was not exercised")
+        fixed = float(r["fixed_interactive_p99_ms"])
+        # the bucketed q_block ladder must beat the fixed-block baseline
+        # on the SAME schedule in the SAME run; relative gate (0.9x) so
+        # machine speed cancels out
+        if fixed == fixed and p99 == p99 and p99 > 0.9 * fixed:
+            failures.append(
+                f"bucketed interactive p99 {p99:.1f}ms not measurably "
+                f"below the fixed-block baseline {fixed:.1f}ms")
+    return failures
+
+
 # rows rendered into the step-summary table: (gate, metric, source op,
 # row key, floor text). "vs" floors compare against another key.
 _SUMMARY_SPEC = (
@@ -337,6 +400,20 @@ _SUMMARY_SPEC = (
      "fallback_bitident", "== True"),
     ("chaos", "recovery_s (fallback cold start)", "smoke_chaos",
      "recovery_s", ""),
+    ("slo", "crashes (open-loop burst schedule)", "smoke_slo", "crashes",
+     "== 0"),
+    ("slo", "silent_drops (typed rejections only)", "smoke_slo",
+     "silent_drops", "== 0"),
+    ("slo", "interactive_p50_ms (bucketed)", "smoke_slo",
+     "interactive_p50_ms", ""),
+    ("slo", "interactive_p99_ms (bucketed)", "smoke_slo",
+     "interactive_p99_ms", "slo_p99"),
+    ("slo", "fixed_interactive_p99_ms (baseline)", "smoke_slo",
+     "fixed_interactive_p99_ms", ">= interactive_p99 / 0.9"),
+    ("slo", "batch_p99_ms", "smoke_slo", "batch_p99_ms", ""),
+    ("slo", "shed_frac (of offered load)", "smoke_slo", "shed_frac",
+     "slo_shed"),
+    ("slo", "expired (deadline misses)", "smoke_slo", "expired", ""),
 )
 
 
@@ -357,11 +434,15 @@ def write_step_summary(row_sets: dict, floors: dict, failures: list):
         "| gate | metric | value | requirement |",
         "|---|---|---|---|",
     ]
+    ceilings = {"slo_p99", "slo_shed"}   # upper bounds, not floors
     for gate, metric, op, rkey, req in _SUMMARY_SPEC:
         r = by_op.get(op)
         if r is None or rkey not in r:
             continue
-        req_txt = (f">= {floors[req]}" if req in floors else req) or "—"
+        if req in floors:
+            req_txt = f"{'<=' if req in ceilings else '>='} {floors[req]}"
+        else:
+            req_txt = req or "—"
         lines.append(f"| {gate} | {metric} | {r[rkey]} | {req_txt} |")
     lines.append("")
     lines.append("**GATE FAIL:** " + "; ".join(failures) if failures
@@ -410,6 +491,18 @@ def main(argv: list | None = None) -> int:
                    help="pinned degraded_recall floor — recall against "
                         "the surviving shards' attainable ground truth "
                         "with 1 of 4 shards dead")
+    p.add_argument("--slo", default=None,
+                   help="path to slo.json (enables the overload/SLO "
+                        "gate)")
+    p.add_argument("--slo-p99-floor", type=float, default=150.0,
+                   help="pinned interactive p99 CEILING in ms under the "
+                        "scripted burst (observed ~20ms locally; slack "
+                        "for CI machine variance)")
+    p.add_argument("--slo-shed-max", type=float, default=0.35,
+                   help="max fraction of the offered load the scheduler "
+                        "may shed (observed ~0.2 on the smoke schedule; "
+                        "shedding MORE means admission is broken, 0 "
+                        "means the burst stopped exercising it)")
     args = p.parse_args(argv)
     with open(args.results) as f:
         rows = json.load(f)
@@ -445,6 +538,12 @@ def main(argv: list | None = None) -> int:
             chaos_rows = json.load(f)
         row_sets["chaos"] = chaos_rows
         failures += check_chaos(chaos_rows, args.chaos_floor)
+    if args.slo is not None:
+        with open(args.slo) as f:
+            slo_rows = json.load(f)
+        row_sets["slo"] = slo_rows
+        failures += check_slo(slo_rows, args.slo_p99_floor,
+                              args.slo_shed_max)
     write_step_summary(
         row_sets,
         {"floor": args.floor, "build_floor": args.build_floor,
@@ -452,7 +551,9 @@ def main(argv: list | None = None) -> int:
          "quant_floor": args.quant_floor,
          "router_floor": args.router_floor,
          "persist_floor": args.persist_floor,
-         "chaos_floor": args.chaos_floor},
+         "chaos_floor": args.chaos_floor,
+         "slo_p99": args.slo_p99_floor,
+         "slo_shed": args.slo_shed_max},
         failures,
     )
     for msg in failures:
@@ -476,7 +577,11 @@ def main(argv: list | None = None) -> int:
               + ("" if args.chaos is None else
                  f"; chaos schedule: 0 crashes, 0 dropped queries, "
                  f"degraded_recall >= {args.chaos_floor}, "
-                 "bit-identical snapshot fallback"))
+                 "bit-identical snapshot fallback")
+              + ("" if args.slo is None else
+                 f"; SLO burst: 0 crashes, 0 silent drops, interactive "
+                 f"p99 <= {args.slo_p99_floor}ms, shed_frac <= "
+                 f"{args.slo_shed_max}, bucketed p99 < 0.9x fixed-block"))
     return 1 if failures else 0
 
 

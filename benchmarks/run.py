@@ -16,6 +16,7 @@ Paper artifact map:
     build       -> (ours) fused local join vs. global-lexsort routing
     search      -> (ours) fused batched beam search vs. greedy ref loop
     persist     -> (ours) snapshot/restore parity + zero-rebuild cold start
+    slo         -> (ours) overload: admission/backpressure under a burst
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ def main(argv=None):
         bench_scaling,
         bench_search,
         bench_selection,
+        bench_slo,
     )
 
     quick = args.quick
@@ -66,6 +68,8 @@ def main(argv=None):
             n_eval=256 if quick else 1024),
         "persist": lambda: bench_persist.run_smoke(
             n=2048 if quick else 4096),
+        "slo": lambda: (bench_slo.run_smoke() if quick
+                        else bench_slo.main(["--mode", "full"])),
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

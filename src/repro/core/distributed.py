@@ -31,7 +31,9 @@ neighbor lists and features fetched via the request-routed all_to_all).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -412,6 +414,139 @@ def polish_sharded_round(
     return nl, jax.lax.psum(jnp.sum(upd), axis), jax.lax.psum(evals, axis)
 
 
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    """Knobs for the per-shard latency circuit breaker."""
+    alpha: float = 0.3        # EWMA weight of the newest latency sample
+    trip_ratio: float = 3.0   # open when ewma > ratio * median(others)
+    min_samples: int = 3      # samples before a shard is allowed to trip
+    probe_every: int = 4      # while open, probe every N dispatches
+    recover_ratio: float = 1.5
+    #                         # a half-open probe closes the breaker when
+    #                         # its sample <= ratio * median(others)
+
+
+class ShardBreaker:
+    """Per-shard latency circuit breaker for ``graph_search_sharded``.
+
+    A shard that is chronically SLOW (overloaded host, thermal throttle,
+    degraded link) is worse than a dead one: it drags every dispatch's
+    tail latency while contributing nothing a survivor could not. The
+    breaker watches a per-shard latency EWMA; when a shard's EWMA
+    exceeds ``trip_ratio`` x the median of the other shards' EWMAs (a
+    scale-invariant trip — no wall-clock constant to mistune), the
+    breaker OPENS and the shard is handed to the PR-8 ``dead_shards``
+    degraded-merge path: answers keep flowing from survivors, recall
+    degrades, nothing stalls. While open, every ``probe_every``-th
+    dispatch is a HALF-OPEN probe: the shard is re-included once, and a
+    healthy sample (<= ``recover_ratio`` x the others' median) closes
+    the breaker again.
+
+    The breaker is deliberately clock-free: it consumes latency samples
+    via :meth:`observe` and never reads ``time`` itself, so tests drive
+    it with synthetic numbers and the ``shard.degrade`` fault site
+    (``core/faults.py``) inflates real samples deterministically —
+    trip/probe/recover are all exercisable without a slow device. One
+    :meth:`excluded` + one :meth:`observe` pair per dispatch;
+    ``graph_search_sharded(breaker=...)`` does both.
+
+    The breaker never excludes EVERY shard: with all breakers open the
+    least-bad shard (lowest EWMA) stays in the dispatch, so serving can
+    never self-inflict the all-dead empty answer.
+    """
+
+    def __init__(self, n_shards: int, cfg: BreakerConfig | None = None):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.cfg = cfg or BreakerConfig()
+        self.ewma: list = [None] * n_shards
+        self.samples = [0] * n_shards
+        self.open = [False] * n_shards
+        self._opened_at = [0] * n_shards    # dispatch counter at open
+        self._probing: set = set()          # half-open this dispatch
+        self.dispatches = 0
+        self.trips = 0
+        self.probes = 0
+        self.recoveries = 0
+
+    def _median_others(self, shard: int):
+        vals = sorted(
+            e for s, e in enumerate(self.ewma)
+            if s != shard and e is not None and not self.open[s]
+        )
+        if not vals:
+            return None
+        return vals[len(vals) // 2]
+
+    def excluded(self) -> list:
+        """Shards to treat as dead for the NEXT dispatch (advances the
+        dispatch counter; open shards due for their half-open probe are
+        re-included and remembered as probing)."""
+        self.dispatches += 1
+        self._probing = set()
+        out = []
+        for s in range(self.n_shards):
+            if not self.open[s]:
+                continue
+            age = self.dispatches - self._opened_at[s]
+            if age > 0 and age % max(1, self.cfg.probe_every) == 0:
+                self._probing.add(s)        # half-open: let one through
+                self.probes += 1
+            else:
+                out.append(s)
+        if len(out) == self.n_shards:       # never exclude every shard
+            best = min(out, key=lambda s: self.ewma[s] or 0.0)
+            out.remove(best)
+        return out
+
+    def observe(self, latencies) -> None:
+        """Fold per-shard latency samples (seconds) from the dispatch
+        that :meth:`excluded` opened. ``latencies``: {shard: seconds} —
+        excluded shards simply have no entry. Closed shards update their
+        EWMA and may trip; probing shards close on a healthy sample and
+        re-arm the probe timer otherwise."""
+        a = self.cfg.alpha
+        for s, lat in dict(latencies).items():
+            s = int(s)
+            if not (0 <= s < self.n_shards):
+                continue
+            lat = float(lat)
+            prev = self.ewma[s]
+            self.ewma[s] = lat if prev is None else (1 - a) * prev + a * lat
+            self.samples[s] += 1
+            med = self._median_others(s)
+            if self.open[s]:
+                if s in self._probing and med is not None \
+                        and lat <= self.cfg.recover_ratio * med:
+                    self.open[s] = False
+                    self.recoveries += 1
+                    # forget the degraded EWMA: the shard re-enters on
+                    # probation with its healthy probe sample
+                    self.ewma[s] = lat
+                    self.samples[s] = 1
+                else:
+                    self._opened_at[s] = self.dispatches
+            elif (self.samples[s] >= self.cfg.min_samples
+                  and med is not None
+                  and self.ewma[s] > self.cfg.trip_ratio * med):
+                self.open[s] = True
+                self._opened_at[s] = self.dispatches
+                self.trips += 1
+        self._probing = set()
+
+    def stats(self) -> dict:
+        return {
+            "dispatches": self.dispatches,
+            "open_shards": [s for s in range(self.n_shards)
+                            if self.open[s]],
+            "ewma": [None if e is None else float(e) for e in self.ewma],
+            "trips": self.trips,
+            "probes": self.probes,
+            "recoveries": self.recoveries,
+        }
+
+
 def graph_search_sharded(
     mesh: Mesh,
     x: jax.Array,           # (n, d) corpus, sharded by rows over ``axis``
@@ -429,6 +564,11 @@ def graph_search_sharded(
     dead_shards=None,       # shard indices known unavailable (timed-out
     #                         or lost); merged with any active FaultPlan
     #                         ("shard.dead"/"shard.slow" sites)
+    breaker: ShardBreaker | None = None,
+    #                         # latency circuit breaker: its open shards
+    #                         # join ``dead`` for this dispatch, and the
+    #                         # dispatch's wall time feeds back into its
+    #                         # per-shard EWMAs (see _breaker_feed)
 ):
     """Sharded serving entry for the fused batched search: corpus rows are
     sharded over the mesh's ``axis``; each shard holds a K-NN subgraph
@@ -498,8 +638,13 @@ def graph_search_sharded(
     n = x.shape[0]
     assert n % P_ == 0, (n, P_)
     n_local = n // P_
-    dead = sorted({int(s) for s in (dead_shards or ())
-                   if 0 <= int(s) < P_} | set(faults.dead_shards(P_)))
+    dead_set = {int(s) for s in (dead_shards or ())
+                if 0 <= int(s) < P_} | set(faults.dead_shards(P_))
+    if breaker is not None:
+        # one excluded()/observe() pair per dispatch: open shards join
+        # the degraded-merge path exactly like dead ones
+        dead_set |= set(breaker.excluded())
+    dead = sorted(dead_set)
     live_mask = jnp.ones((P_,), bool)
     if dead:
         live_mask = live_mask.at[jnp.asarray(dead, jnp.int32)].set(False)
@@ -545,17 +690,24 @@ def graph_search_sharded(
             out_i = jnp.take_along_axis(alli, pos, axis=1)
             return jnp.where(out_i >= 0, -neg, jnp.inf), out_i
 
+        t0 = time.monotonic()
         out_d, out_i = fn(key, x, graph_idx, queries, live_mask)
+        if breaker is not None:
+            jax.block_until_ready(out_d)
+            _breaker_feed(breaker, time.monotonic() - t0, P_, dead)
         out_d, out_i = _mask_bad_rows(out_d, out_i, bad_rows)
         if with_stats:
             q_n = queries.shape[0]
-            return out_d, out_i, {
+            stats = {
                 "fanout": P_, "shards": P_,
                 "routed_queries": q_n * n_live,
                 "searched_queries": q_n * n_live, "dropped_queries": 0,
                 "degraded_shards": dead,
                 "cover_frac": n_live / P_,
             }
+            if breaker is not None:
+                stats["breaker"] = breaker.stats()
+            return out_d, out_i, stats
         return out_d, out_i
 
     # ---- routed dispatch: replicated precompute (one small centroid
@@ -654,12 +806,16 @@ def graph_search_sharded(
         routed_q = jax.lax.psum(jnp.sum(mine.astype(jnp.int32)), axis)
         return out_d, out_i, searched, routed_q
 
+    t0 = time.monotonic()
     out_d, out_i, searched, routed_q = fn_routed(
         key, x, graph_idx, queries, top_shards, entg, live_mask
     )
+    if breaker is not None:
+        jax.block_until_ready(out_d)
+        _breaker_feed(breaker, time.monotonic() - t0, P_, dead)
     out_d, out_i = _mask_bad_rows(out_d, out_i, bad_rows)
     if with_stats:
-        return out_d, out_i, {
+        stats = {
             "fanout": route_p, "shards": P_,
             "routed_queries": int(routed_q),
             "searched_queries": int(searched),
@@ -668,7 +824,28 @@ def graph_search_sharded(
             "cover_frac": float(jnp.mean(
                 live_mask[want_shards].astype(jnp.float32))),
         }
+        if breaker is not None:
+            stats["breaker"] = breaker.stats()
+        return out_d, out_i, stats
     return out_d, out_i
+
+
+def _breaker_feed(breaker: ShardBreaker, dt: float, P_: int, dead) -> None:
+    """Attribute one dispatch's wall time to its live shards and fold the
+    samples into the breaker. A fused shard_map dispatch yields no
+    per-shard clocks, so the driver charges every live shard the total
+    wall time — neutral for the ratio-based trip (uniform samples move
+    every EWMA identically); the deterministic skew comes from the
+    ``shard.degrade`` fault site, which inflates specific shards'
+    samples. Deployments with per-shard RPC timings should skip this
+    helper and call ``breaker.observe`` with the real per-shard numbers.
+    """
+    dead = set(dead)
+    lat = {s: dt for s in range(P_) if s not in dead}
+    for s, f in faults.degrade_factors(P_).items():
+        if s in lat:
+            lat[s] *= f
+    breaker.observe(lat)
 
 
 def _f32_bits(x):

@@ -25,6 +25,20 @@ Sites currently consulted (grep for ``faults.fire`` to audit):
     unavailable in ``graph_search_sharded``.
   * ``shard.slow``     — report shard ``arg`` as exceeding the dispatch
     timeout (treated like dead: degraded, not blocking).
+  * ``shard.degrade``  — inflate shard ``arg``'s per-dispatch latency
+    sample (``arg`` = shard index, ``(shard, factor)``, or a list of
+    either; default factor 10x) as seen by the ``ShardBreaker`` circuit
+    breaker in ``graph_search_sharded`` — a chronically slow (not dead)
+    shard, so the breaker's EWMA trip/half-open-probe path is
+    exercisable without a genuinely slow device.
+  * ``sched.burst``    — amplify one arrival in
+    ``serve/scheduler.RetrievalScheduler.submit`` into a burst of
+    ``arg`` (default 8) injected copies, so admission-control shedding
+    is drivable from a seeded plan (byte-identical burst schedules).
+  * ``sched.stall``    — advance the retrieval scheduler's deadline
+    clock by ``arg`` (default 0.05) seconds at the next dispatch — a
+    simulated stall (GC pause, slow kernel) that makes queued-deadline
+    expiry and the ``max_rounds_deadline`` budget cut deterministic.
   * ``router.rebuild`` — fail the lazy router rebuild in
     ``_maybe_rebuild_router`` (store keeps serving the stale router).
 
@@ -187,6 +201,36 @@ def dead_shards(n_shards: int) -> list:
             if i is not None and 0 <= int(i) < n_shards:
                 out.add(int(i))
     return sorted(out)
+
+
+def degrade_factors(n_shards: int) -> dict:
+    """Per-shard latency inflation factors from the active plan's
+    ``shard.degrade`` spec (the chronically-SLOW-shard injection the
+    circuit breaker watches for). ``arg`` forms: shard index (default
+    10x), ``(shard, factor)``, or a list of either. Returns {} when
+    inactive or the spec does not fire this event."""
+    if _PLAN is None:
+        return {}
+    spec = fire("shard.degrade")
+    if spec is None:
+        return {}
+    arg = spec.arg
+    if isinstance(arg, tuple) and len(arg) == 2 \
+            and isinstance(arg[1], float):
+        items = [arg]                     # one bare (shard, factor) pair
+    elif isinstance(arg, (list, tuple)):
+        items = list(arg)
+    else:
+        items = [arg]
+    out = {}
+    for it in items:
+        if isinstance(it, (list, tuple)):
+            s, f = int(it[0]), float(it[1])
+        else:
+            s, f = int(it), 10.0
+        if 0 <= s < n_shards:
+            out[s] = f
+    return out
 
 
 def poison_batch(queries, mode: str):

@@ -104,11 +104,35 @@ class SearchConfig:
                             # expansion budget cut to one fused round
                             # (rounds=expand) — degraded recall, never a
                             # stall. Ignored under tracing (shard_map).
+    fixed_block: bool = False
+                            # True pads EVERY batch to the full q_block
+                            # (one compiled shape, full-block latency for
+                            # any batch size — the legacy serving quantum,
+                            # kept as the SLO baseline). False (default)
+                            # runs each batch at its q_block_bucket ladder
+                            # step: powers of two up to q_block, compiled
+                            # once per bucket, so a 7-query burst pays the
+                            # 8-block, not the q_block-block.
 
     @property
     def n_rounds(self) -> int:
         """Fused sequential depth: ceil(rounds / expand)."""
         return max(1, -(-self.rounds // self.expand))
+
+
+def q_block_bucket(nq: int, cfg: "SearchConfig") -> int:
+    """The bucketed ``q_block`` ladder: the query-block shape a batch of
+    ``nq`` queries runs at. Buckets are powers of two capped at
+    ``cfg.q_block`` (step-quantized exactly like the online store's
+    capacity doubling), so the set of compiled block shapes stays
+    O(log q_block) — each bucket compiles once and is reused by every
+    batch that lands in it — while a small interactive burst stops
+    paying the full-block distance tile (pad waste stays < 2x).
+    ``cfg.fixed_block`` pins the ladder to the single legacy full-block
+    quantum (the measured baseline in benchmarks/bench_slo.py)."""
+    if cfg.fixed_block or nq <= 0:
+        return max(1, cfg.q_block)
+    return max(1, min(cfg.q_block, 1 << (nq - 1).bit_length()))
 
 
 @functools.partial(jax.jit, static_argnames=("hops", "capacity"))
@@ -337,13 +361,14 @@ def graph_search(
 
     # fused batched path: pad the batch to whole q_blocks, run the jitted
     # block search per block, slice the pad off. Small batches (decode
-    # steps, insert seeding) clamp the block to the next power of two so
-    # pad waste stays < 2x while the compiled shape set stays bounded.
+    # steps, insert seeding, interactive bursts) run at their
+    # q_block_bucket ladder step — next power of two, compiled once per
+    # bucket — unless cfg.fixed_block pins the full-block quantum.
     nq = queries.shape[0]
     if nq == 0:     # idle serving tick / empty insert batch
         return (jnp.zeros((0, k_out), jnp.float32),
                 jnp.full((0, k_out), -1, jnp.int32))
-    qb = max(1, min(cfg.q_block, 1 << (nq - 1).bit_length()))
+    qb = q_block_bucket(nq, cfg)
     pad = (-nq) % qb
     qp = jnp.pad(queries, ((0, pad), (0, 0)))
     q2 = jnp.sum(qp * qp, axis=1)
@@ -358,16 +383,22 @@ def graph_search(
     deadline = cfg.max_rounds_deadline
     use_deadline = deadline > 0.0 and not isinstance(queries,
                                                     jax.core.Tracer)
+    # host-side knobs (the deadline value, the fixed_block baseline flag)
+    # must not fragment _search_block's static-cfg compile cache: the
+    # scheduler propagates a FRESH max_rounds_deadline per dispatch, and
+    # keying compiles on it would recompile every batch for an identical
+    # traced computation
+    run_cfg = dataclasses.replace(cfg, max_rounds_deadline=0.0,
+                                  fixed_block=False)
     cut_cfg = None
     t0 = time.monotonic() if use_deadline else 0.0
     outs_d, outs_i = [], []
     for bi, s in enumerate(range(0, nq + pad, qb)):
-        bcfg = cfg
+        bcfg = run_cfg
         if use_deadline and bi > 0 \
                 and time.monotonic() - t0 > deadline * bi:
             if cut_cfg is None:     # one extra (cached) compile, ever
-                cut_cfg = dataclasses.replace(
-                    cfg, rounds=cfg.expand, max_rounds_deadline=0.0)
+                cut_cfg = dataclasses.replace(run_cfg, rounds=cfg.expand)
             bcfg = cut_cfg
         ent_b = entry if entry.ndim == 1 else entry[s:s + qb]
         od, oi = _search_block(

@@ -12,13 +12,26 @@ from repro.serve.knn_lm import (
     interpolate,
     knn_logits,
 )
-from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.serve.scheduler import (
+    ContinuousBatcher,
+    LaneQueue,
+    QueryRequest,
+    Rejection,
+    Request,
+    RetrievalScheduler,
+    SchedulerConfig,
+)
 
 __all__ = [
     "ContinuousBatcher",
     "KNNDatastore",
+    "LaneQueue",
     "MutableKNNDatastore",
+    "QueryRequest",
+    "Rejection",
     "Request",
+    "RetrievalScheduler",
+    "SchedulerConfig",
     "abstract_cache",
     "cache_schema",
     "cache_shardings",

@@ -1,20 +1,63 @@
-"""Continuous batching: a fixed pool of decode slots; requests join as
-slots free up, every ``serve_step`` advances ALL active slots one token.
+"""Serving schedulers: continuous LM batching and overload-robust
+retrieval dispatch.
 
-The decode step itself is shape-static (B = n_slots always); inactive
-slots carry a dummy token and their outputs are ignored — the standard
-TPU-friendly realization of continuous batching (no recompilation as
-requests come and go).
+``ContinuousBatcher`` drives a fixed pool of decode slots; requests join
+as slots free up, every ``serve_step`` advances ALL active slots one
+token. The decode step itself is shape-static (B = n_slots always);
+inactive slots carry a dummy token and their outputs are ignored — the
+standard TPU-friendly realization of continuous batching (no
+recompilation as requests come and go).
+
+Both schedulers share the overload machinery below:
+
+  * :class:`LaneQueue` — a bounded two-lane (interactive / batch) FIFO
+    with strict interactive priority, per-request deadlines, and
+    explicit shedding policies. Nothing is ever dropped silently: every
+    request that will not be served carries a typed :class:`Rejection`.
+  * :class:`RetrievalScheduler` — the kNN-serving admission layer: it
+    pulls lane-pure batches off the queue, propagates each batch's
+    tightest remaining deadline into ``SearchConfig.max_rounds_deadline``
+    (the fused search's per-block round-budget cut) and runs the batch
+    at its bucketed ``q_block`` ladder step, so a 7-query interactive
+    burst compiles and runs in the 8-block rather than padding to the
+    full batch block. Overload behavior is scripted through the
+    ``sched.burst`` / ``sched.stall`` fault sites (core/faults.py), so
+    shedding and expiry are testable without wall-clock flakiness.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
+import time
 import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import faults
+from repro.core.graph_search import SearchConfig, q_block_bucket
+
+LANES = ("interactive", "batch")    # pop order = priority order
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Typed verdict attached to every request the scheduler will not
+    serve — the no-silent-drops contract. Codes:
+
+      expired-at-admission  deadline already spent when submitted
+      expired-in-queue      deadline passed while waiting for a slot
+      queue-full            bounded queue at capacity (reject-new)
+      shed-oldest           evicted as oldest batch request to admit a
+                            newer one (drop-oldest-batch)
+      truncated             scheduler stopped (max_steps / max_pumps)
+                            before this request ran
+    """
+    code: str
+    detail: str = ""
 
 
 @dataclasses.dataclass
@@ -24,6 +67,318 @@ class Request:
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # overload-control fields (defaults preserve the pre-lane behavior:
+    # unbounded queue, no deadline, nothing sheds)
+    lane: str = "interactive"
+    deadline_ms: float | None = None
+    submitted_at: float | None = None
+    rejection: Rejection | None = None
+    truncated: bool = False
+
+
+def _deadline_at(req) -> float | None:
+    """Absolute expiry time on the scheduler clock, or None (no deadline
+    or unknown submit time — such requests never expire)."""
+    if req.deadline_ms is None or req.submitted_at is None:
+        return None
+    return req.submitted_at + req.deadline_ms / 1e3
+
+
+class LaneQueue:
+    """Bounded two-lane FIFO with typed shedding.
+
+    Interactive requests always pop before batch requests (strict
+    priority: batch traffic can starve under sustained interactive load,
+    which is the intended SLO trade — batch work carries deadlines and
+    expires with a typed rejection rather than waiting forever).
+
+    ``max_queue`` bounds the TOTAL depth across both lanes (None =
+    unbounded, the legacy behavior). At capacity, ``shed_policy``
+    decides who pays:
+
+      reject-new        the incoming request is refused (queue-full)
+      drop-oldest-batch the oldest queued batch request is evicted
+                        (shed-oldest) to admit the newcomer; with no
+                        batch request to evict it degrades to reject-new
+
+    Every push/pop takes the current scheduler-clock reading so deadline
+    expiry is checked at both boundaries; pass ``now=None`` to skip the
+    checks (clock-free callers). Counters (``admitted`` / ``shed`` /
+    ``expired``) plus :meth:`depth` are the queue-side scheduler stats.
+    """
+
+    def __init__(self, max_queue: int | None = None,
+                 shed_policy: str = "reject-new"):
+        if shed_policy not in ("reject-new", "drop-oldest-batch"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.lanes = {lane: collections.deque() for lane in LANES}
+        self.admitted = 0
+        self.shed = 0
+        self.expired = 0
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.lanes.values())
+
+    def __iter__(self):
+        for lane in LANES:
+            yield from self.lanes[lane]
+
+    def depth(self) -> dict:
+        return {lane: len(q) for lane, q in self.lanes.items()}
+
+    def push(self, req, now: float | None = None) -> Rejection | None:
+        """Admit ``req`` (returns None) or refuse it (returns the
+        Rejection, also stored on ``req.rejection``)."""
+        lane = req.lane or "interactive"
+        if lane not in self.lanes:
+            raise ValueError(f"unknown lane {lane!r}")
+        if now is not None and req.submitted_at is None:
+            req.submitted_at = now
+        exp = _deadline_at(req)
+        if now is not None and exp is not None and now >= exp:
+            self.expired += 1
+            req.rejection = Rejection(
+                "expired-at-admission",
+                f"deadline_ms={req.deadline_ms} already spent at submit")
+            return req.rejection
+        if self.max_queue is not None and len(self) >= self.max_queue:
+            victim = None
+            if self.shed_policy == "drop-oldest-batch" \
+                    and self.lanes["batch"]:
+                victim = self.lanes["batch"].popleft()
+            if victim is not None:
+                self.shed += 1
+                victim.rejection = Rejection(
+                    "shed-oldest",
+                    "evicted as oldest batch request at capacity "
+                    f"{self.max_queue}")
+            else:
+                self.shed += 1
+                req.rejection = Rejection(
+                    "queue-full", f"queue at capacity {self.max_queue}")
+                return req.rejection
+        self.lanes[lane].append(req)
+        self.admitted += 1
+        return None
+
+    def pop(self, now: float | None = None, lane: str | None = None):
+        """Next serviceable request (interactive first), or None.
+        Requests whose deadline passed while queued are expired in place
+        (typed rejection) and skipped. ``lane`` restricts to one lane —
+        the dispatcher uses it to keep batches lane-pure."""
+        for ln in LANES if lane is None else (lane,):
+            q = self.lanes[ln]
+            while q:
+                req = q.popleft()
+                exp = _deadline_at(req)
+                if now is not None and exp is not None and now >= exp:
+                    self.expired += 1
+                    req.rejection = Rejection(
+                        "expired-in-queue",
+                        f"deadline_ms={req.deadline_ms} passed while "
+                        "queued")
+                    continue
+                return req
+        return None
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One retrieval request in the RetrievalScheduler.
+
+    Terminal states are mutually exclusive and always explicit: either
+    results land in ``dist``/``idx`` (served) or ``rejection`` is set
+    (shed / expired / truncated). ``injected`` marks ``sched.burst``
+    amplification copies so tests can separate scripted overload from
+    real traffic.
+    """
+    qid: int
+    query: np.ndarray               # (d,) float
+    lane: str = "interactive"
+    deadline_ms: float | None = None
+    submitted_at: float | None = None
+    finished_at: float | None = None
+    dist: np.ndarray | None = None  # (k_out,) on completion
+    idx: np.ndarray | None = None   # (k_out,) on completion
+    rejection: Rejection | None = None
+    injected: bool = False
+
+    @property
+    def done(self) -> bool:
+        return self.idx is not None or self.rejection is not None
+
+    @property
+    def latency_ms(self) -> float | None:
+        if self.finished_at is None or self.submitted_at is None:
+            return None
+        return (self.finished_at - self.submitted_at) * 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission/backpressure knobs for :class:`RetrievalScheduler`."""
+    max_queue: int = 256            # total bound across both lanes
+    shed_policy: str = "reject-new"     # or "drop-oldest-batch"
+    max_batch: int = 64             # requests per dispatch (per pump)
+    default_deadline_ms: float | None = None
+    #                               # applied when submit() passes None
+    min_deadline_s: float = 1e-3    # floor for the propagated budget cut
+
+
+class RetrievalScheduler:
+    """Admission control + deadline propagation for kNN retrieval.
+
+    ``search_fn(queries (m, d) jnp, cfg: SearchConfig) -> (dist, idx)``
+    is the underlying fused search — typically a closure over
+    ``graph_search`` / ``MutableKNNStore.search`` /
+    ``graph_search_sharded``. The scheduler owns WHEN it runs and with
+    WHAT config:
+
+      * :meth:`submit` runs admission through the bounded two-lane
+        :class:`LaneQueue` — every refused request carries a typed
+        :class:`Rejection` (never a silent drop).
+      * :meth:`pump` pops one LANE-PURE batch (interactive lane drains
+        first) of at most ``cfg.max_batch`` requests and dispatches it
+        once. Lane purity is what makes the bucketed ``q_block`` ladder
+        pay off: a 7-query interactive burst is dispatched alone and
+        runs in the 8-block instead of padding to the full batch block.
+      * Deadline propagation: the batch's TIGHTEST remaining deadline,
+        divided by the number of search blocks the batch will occupy,
+        becomes ``SearchConfig.max_rounds_deadline`` — the fused
+        search's per-block time slice that cuts late blocks down to
+        their minimum round budget (graph_search's deadline cut).
+
+    Fault sites (deterministic overload, core/faults.py): ``sched.burst``
+    amplifies one submit into N injected copies; ``sched.stall``
+    advances the scheduler's clock at the next pump, modelling a GC
+    pause / slow kernel so queued-deadline expiry is scriptable. The
+    clock itself is injectable (``clock=``) for fully virtual-time
+    tests.
+    """
+
+    def __init__(self, search_fn: Callable, *,
+                 base_cfg: SearchConfig | None = None,
+                 cfg: SchedulerConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.search_fn = search_fn
+        self.base_cfg = base_cfg or SearchConfig()
+        self.cfg = cfg or SchedulerConfig()
+        self.queue = LaneQueue(self.cfg.max_queue, self.cfg.shed_policy)
+        self._clock = clock
+        self._stall = 0.0           # sched.stall virtual-clock offset
+        self._next_qid = 0
+        self.dispatches = 0
+        self.served = 0
+        self.latency_ms = {lane: [] for lane in LANES}
+
+    def now(self) -> float:
+        return self._clock() + self._stall
+
+    def submit(self, query, *, lane: str = "interactive",
+               deadline_ms: float | None = None,
+               qid: int | None = None) -> QueryRequest:
+        """Admit one query. Returns its QueryRequest — check
+        ``.rejection`` for an admission-time refusal. An active
+        ``sched.burst`` spec amplifies this arrival into ``arg``
+        (default 8) extra injected copies submitted behind it."""
+        if deadline_ms is None:
+            deadline_ms = self.cfg.default_deadline_ms
+        q = np.asarray(query)
+        if qid is None:
+            qid = self._next_qid
+        self._next_qid = max(self._next_qid, qid) + 1
+        req = QueryRequest(qid=qid, query=q, lane=lane,
+                           deadline_ms=deadline_ms)
+        self.queue.push(req, self.now())
+        spec = faults.fire("sched.burst")
+        if spec is not None:
+            n = int(spec.arg) if spec.arg is not None else 8
+            for _ in range(max(0, n)):
+                copy = QueryRequest(
+                    qid=self._next_qid, query=q, lane=lane,
+                    deadline_ms=deadline_ms, injected=True)
+                self._next_qid += 1
+                self.queue.push(copy, self.now())
+        return req
+
+    def pump(self) -> list:
+        """Dispatch one lane-pure batch. Returns the served requests
+        ([] when the queue had nothing serviceable)."""
+        spec = faults.fire("sched.stall")
+        if spec is not None:
+            self._stall += float(spec.arg) if spec.arg is not None \
+                else 0.05
+        now = self.now()
+        first = self.queue.pop(now)
+        if first is None:
+            return []
+        batch = [first]
+        while len(batch) < self.cfg.max_batch:
+            nxt = self.queue.pop(now, lane=first.lane)
+            if nxt is None:
+                break
+            batch.append(nxt)
+        scfg = self.base_cfg
+        nq = len(batch)
+        n_blocks = max(1, math.ceil(nq / q_block_bucket(nq, scfg)))
+        rem = [_deadline_at(r) - now for r in batch
+               if _deadline_at(r) is not None]
+        if rem:
+            slice_s = max(min(rem), self.cfg.min_deadline_s) / n_blocks
+            scfg = dataclasses.replace(scfg, max_rounds_deadline=slice_s)
+        dist, idx = self.search_fn(
+            jnp.asarray(np.stack([r.query for r in batch])), scfg)
+        dist = np.asarray(dist)
+        idx = np.asarray(idx)
+        end = self.now()
+        for j, r in enumerate(batch):
+            r.dist, r.idx, r.finished_at = dist[j], idx[j], end
+            if r.latency_ms is not None:
+                self.latency_ms[r.lane].append(r.latency_ms)
+        self.dispatches += 1
+        self.served += nq
+        return batch
+
+    def run_until_drained(self, *, max_pumps: int = 10_000) -> list:
+        """Pump until the queue is empty; returns every served request.
+        Exhausting ``max_pumps`` marks the leftovers truncated (typed
+        rejection) and warns — never a silent drop. The scheduler stays
+        usable afterwards (submit-after-drain is a fresh start)."""
+        served = []
+        pumps = 0
+        while len(self.queue) and pumps < max_pumps:
+            served.extend(self.pump())
+            pumps += 1
+        leftover = [r for r in self.queue]
+        if leftover:
+            for r in leftover:
+                r.rejection = Rejection(
+                    "truncated",
+                    f"run_until_drained(max_pumps={max_pumps}) exhausted")
+            for q in self.queue.lanes.values():
+                q.clear()
+            warnings.warn(
+                f"run_until_drained(max_pumps={max_pumps}) exhausted "
+                f"with {len(leftover)} request(s) still queued; marked "
+                "truncated", RuntimeWarning, stacklevel=2)
+        return served
+
+    def stats(self) -> dict:
+        q = self.queue
+        return {
+            "depth": q.depth(),
+            "admitted": q.admitted,
+            "shed": q.shed,
+            "expired": q.expired,
+            "served": self.served,
+            "dispatches": self.dispatches,
+            "latency_ms": {lane: list(v)
+                           for lane, v in self.latency_ms.items()},
+        }
 
 
 @dataclasses.dataclass
@@ -52,7 +407,10 @@ class ContinuousBatcher:
                  knn_router: Any | None = None,
                  knn_snapshot_dir: str | None = None,
                  knn_snapshot_every: int = 0,
-                 knn_snapshot_keep: int = 3):
+                 knn_snapshot_keep: int = 3,
+                 max_queue: int | None = None,
+                 shed_policy: str = "reject-new",
+                 clock: Callable[[], float] = time.monotonic):
         self.n_slots = n_slots
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -106,7 +464,10 @@ class ContinuousBatcher:
                     knn_store, store=ensure_router(knn_store.store, rcfg)
                 )
         self.slots = [SlotState() for _ in range(n_slots)]
-        self.queue: list[Request] = []
+        # bounded two-lane admission (defaults = legacy behavior:
+        # unbounded, nothing sheds, no deadlines enforced)
+        self.queue = LaneQueue(max_queue, shed_policy)
+        self.clock = clock
         self.live: dict[int, Request] = {}
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self.lengths = np.zeros((n_slots,), np.int32)
@@ -121,14 +482,19 @@ class ContinuousBatcher:
         self._knn_keys: list[np.ndarray] = []
         self._knn_vals: list[int] = []
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request) -> Rejection | None:
+        """Queue a request. Returns None when admitted, or the typed
+        Rejection (also stored on ``req.rejection``) when the bounded
+        queue refuses it."""
+        return self.queue.push(req, self.clock())
 
     def _admit(self, cache):
         for i, s in enumerate(self.slots):
-            if s.active or not self.queue:
+            if s.active:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.pop(self.clock())
+            if req is None:
+                break
             logits, one_cache, plen = self.prefill_fn(
                 req.prompt[None, :])
             cache = self.write_slot(cache, i, one_cache, plen)
@@ -216,8 +582,21 @@ class ContinuousBatcher:
         self._knn_rows_at_snap = self._knn_rows_inserted
 
     def run(self, cache, *, max_steps: int = 10_000):
-        while (self.queue or self.live) and self.steps < max_steps:
+        while (len(self.queue) or self.live) and self.steps < max_steps:
             cache, _ = self.step(cache)
+        leftover = len(self.queue) + len(self.live)
+        if leftover:
+            # max_steps exhausted with work outstanding: mark every
+            # queued/live request truncated (partial output stays in
+            # ``req.out``) instead of returning as if nothing happened
+            for req in list(self.live.values()):
+                req.truncated = True
+            for req in self.queue:
+                req.truncated = True
+            warnings.warn(
+                f"run(max_steps={max_steps}) exhausted with {leftover} "
+                "request(s) unfinished; marked truncated",
+                RuntimeWarning, stacklevel=2)
         if self.knn_store is not None:
             self._flush_knn(final=True)
             if self._knn_writer is not None:

@@ -110,6 +110,27 @@ def test_fused_search_odd_shapes(built_graph, nq, cfg):
     assert (np.asarray(i) >= 0).mean() == 1.0       # pool always fills
 
 
+def test_fixed_block_matches_bucketed(built_graph):
+    """fixed_block=True (the SLO-bench baseline that pads every batch to
+    the full q_block) must be semantically identical to the bucketed
+    ladder — only the padded block shape differs."""
+    from repro.core.graph_search import q_block_bucket
+    x, _, idx = built_graph
+    q = x[:7] + 0.01
+    outs = {}
+    for fixed in (False, True):
+        cfg = SearchConfig(beam=16, rounds=12, expand=3, q_block=64,
+                           fixed_block=fixed)
+        qb = q_block_bucket(7, cfg)
+        assert qb == (64 if fixed else 8)
+        d, i = graph_search(x, idx, q, k_out=5, key=jax.random.key(4),
+                            cfg=cfg)
+        outs[fixed] = (np.asarray(d), np.asarray(i))
+    np.testing.assert_array_equal(outs[False][1], outs[True][1])
+    np.testing.assert_allclose(outs[False][0], outs[True][0],
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_fused_interpret_matches_jnp_dispatch(built_graph):
     """backend="interpret" (every Pallas kernel body under the
     interpreter) must agree with the default jnp-oracle dispatch
