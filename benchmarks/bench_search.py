@@ -51,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Sink, timeit
+from benchmarks.common import RESULTS_DIR, Sink, timeit
 from repro.core import (
     DescentConfig,
     NeighborLists,
@@ -330,6 +330,159 @@ def run_smoke_quant(precision: str, n: int = 2048, d: int = 16,
     return sink.save()
 
 
+def _metric_sink(op: str, metric: str | None = None) -> Sink:
+    """search_metric.json is shared by the --metric and --filter lanes,
+    which CI runs as SEPARATE invocations: preload any rows an earlier
+    invocation saved (append semantics), dropping only a stale row of
+    this same lane so re-runs replace rather than duplicate."""
+    sink = Sink("search_metric")
+    path = os.path.join(RESULTS_DIR, "search_metric.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            sink.rows = [
+                r for r in json.load(f)
+                if not (r.get("op") == op
+                        and (metric is None or r.get("metric") == metric))
+            ]
+    return sink
+
+
+def run_smoke_metric(metric: str, n: int = 2048, d: int = 16,
+                     q_n: int = 512, k_out: int = 10, beam: int = 48,
+                     rounds: int = 24, expand: int = 4) -> list:
+    """CI metric lane: the smoke corpus served under cosine / mips
+    through the full store path (MutableKNNStore — transformed rows,
+    transformed-row graph, query transform at the search boundary).
+    Recall is measured against the NATIVE-metric brute-force oracle
+    (descending cosine / inner product), and ``sim_err_rel`` receipts
+    the exactness claim: ``similarity_from_dist`` applied to the
+    returned transformed-space distances must reproduce the true native
+    similarities of the returned rows (relative to the oracle's score
+    scale). MIPS builds a denser graph (k=20 vs the smoke k=10):
+    max-IP neighbors concentrate on large-norm hub rows, and the
+    sparser graph under-connects them (docs/METRICS.md).
+
+    Own sink (search_metric.json, shared with the filter lane) so the
+    gated fp32 smoke rows survive; gated by check_gate.py --metric."""
+    from repro.core import metric as metric_mod
+    from repro.core.online import MutableKNNStore, OnlineConfig
+
+    sink = _metric_sink("smoke_search_metric", metric)
+    k = 20 if metric == "mips" else 10
+    x = datasets.clustered(jax.random.key(5), n, d, 8)
+    q = x[:q_n] + 0.01 * jax.random.normal(jax.random.key(7), (q_n, d))
+    store, _ = MutableKNNStore.build(
+        x, k=k, cfg=OnlineConfig(metric=metric),
+        descent=DescentConfig(k=k, rho=1.0, max_iters=10),
+        key=jax.random.key(6))
+
+    # native-metric oracle
+    if metric == "cosine":
+        xs = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+        qs = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+        scores = qs @ xs.T
+    else:
+        scores = q @ x.T
+    ti = jax.lax.top_k(scores, k_out)[1]
+
+    key = jax.random.key(8)
+    t = timeit(lambda: store.search(q, k_out=k_out, beam=beam,
+                                    rounds=rounds, key=key),
+               warmup=1, iters=3)
+    dd, ii = store.search(q, k_out=k_out, beam=beam, rounds=rounds,
+                          key=key)
+    rec = float(recall_at_k(ii, ti))
+
+    # exact-similarity receipt on the returned ids
+    sim = metric_mod.similarity_from_dist(
+        dd, metric, q2=jnp.sum(q.astype(jnp.float32) ** 2, axis=1)[:, None],
+        mips_m=store.mips_m)
+    true_sim = jnp.take_along_axis(scores, jnp.clip(ii, 0, n - 1), axis=1)
+    valid = ii >= 0
+    scale = max(1.0, float(jnp.max(jnp.abs(scores))))
+    sim_err_rel = float(jnp.max(jnp.where(
+        valid, jnp.abs(sim - true_sim), 0.0))) / scale
+
+    sink.row(op="smoke_search_metric", metric=metric, n=n, q=q_n, k=k,
+             beam=beam, rounds=rounds, expand=expand,
+             search_s=round(t, 3),
+             qps=round(q_n / max(t, 1e-9), 1),
+             metric_recall=round(rec, 4),
+             sim_err_rel=round(sim_err_rel, 8),
+             mips_m=round(float(store.mips_m), 4))
+    return sink.save()
+
+
+def run_smoke_filter(n: int = 2048, d: int = 16, q_n: int = 256,
+                     k: int = 10, k_out: int = 10, beam: int = 48,
+                     rounds: int = 24, expand: int = 4) -> list:
+    """CI filtered-search lane: per-query predicate masks on the smoke
+    corpus — the two-tenant split (even / odd rows), which admits half
+    the corpus per query (``filter_frac`` = 0.5). ``leaked`` counts
+    returned ids that violate their query's predicate, summed over four
+    variants (fused per-query, fused shared-mask, int8 per-query, ref
+    per-query) — the gate pins it to exactly 0. ``filtered_recall`` is
+    measured against the predicate-restricted brute-force oracle, so
+    the lane also catches a filter path that silently trades recall.
+
+    Shares search_metric.json with the metric lane; gated by
+    check_gate.py --metric."""
+    from repro.core import metric as metric_mod
+
+    sink = _metric_sink("smoke_search_filter")
+    x = datasets.clustered(jax.random.key(5), n, d, 8)
+    dcfg = DescentConfig(k=k, rho=1.0, max_iters=10)
+    _, idx, _ = build_knn_graph(x, k=k, cfg=dcfg, key=jax.random.key(6))
+    q = x[:q_n] + 0.01 * jax.random.normal(jax.random.key(7), (q_n, d))
+    key = jax.random.key(8)
+
+    # two tenants: query i sees only rows with id % 2 == i % 2
+    parity = jnp.arange(n) % 2
+    filt_pq = parity[None, :] == (jnp.arange(q_n)[:, None] % 2)
+    filt_shared = parity == 0                     # one tenant, all queries
+
+    # predicate-restricted oracle (per-query tenancy)
+    d2 = jnp.sum((q[:, None, :] - x[None]) ** 2, axis=-1)
+    ti = jax.lax.top_k(-jnp.where(filt_pq, d2, jnp.inf), k_out)[1]
+
+    fcfg = SearchConfig(beam=beam, rounds=rounds, expand=expand)
+    variants = {
+        "fused_pq": (fcfg, filt_pq, None),
+        "fused_shared": (fcfg, filt_shared, None),
+        "int8_pq": (dataclasses.replace(fcfg, precision="int8"), filt_pq,
+                    quantize_corpus(x.astype(jnp.float32), "int8")),
+        "ref_pq": (SearchConfig(beam=beam, rounds=rounds, backend="ref"),
+                   filt_pq, None),
+    }
+    leaked = 0
+    rec = {}
+    par = np.asarray(parity)
+    for tag, (cfg, filt, qst) in variants.items():
+        _, gi = graph_search(x, idx, q, k_out=k_out, key=key, cfg=cfg,
+                             filter_ids=filt, qstore=qst)
+        gi = np.asarray(gi)
+        for r in range(q_n):
+            ids = gi[r][gi[r] >= 0]
+            want = (r % 2) if filt is filt_pq else 0
+            leaked += int((par[ids] != want).sum())
+        if filt is filt_pq:
+            rec[tag] = float(recall_at_k(jnp.asarray(gi), ti))
+
+    qps_t = timeit(lambda: graph_search(x, idx, q, k_out=k_out, key=key,
+                                        cfg=fcfg, filter_ids=filt_pq),
+                   warmup=1, iters=3)
+    sink.row(op="smoke_search_filter", n=n, q=q_n, k=k, beam=beam,
+             rounds=rounds, expand=expand,
+             filter_frac=round(metric_mod.filter_frac(filt_pq), 4),
+             leaked=leaked,
+             filtered_recall=round(rec["fused_pq"], 4),
+             filtered_recall_int8=round(rec["int8_pq"], 4),
+             filtered_recall_ref=round(rec["ref_pq"], 4),
+             filtered_s=round(qps_t, 3),
+             filtered_qps=round(q_n / max(qps_t, 1e-9), 1))
+    return sink.save()
+
+
 # the routed-dispatch half of the router lane: run in a forked
 # subprocess with a forced multi-device CPU topology (the bench process
 # already initialized jax single-device). Cluster-aligned shards +
@@ -471,10 +624,24 @@ def main(argv: list | None = None):
                    help="smoke mode: run the routed-vs-random entry lane "
                         "(search_router.json) instead of the fp32 smoke; "
                         "compare mode measures the routed path regardless")
+    p.add_argument("--metric", choices=("cosine", "mips"), default=None,
+                   help="smoke mode: run the metric lane (store build + "
+                        "search under cosine/mips vs the native-metric "
+                        "oracle, search_metric.json) instead of the fp32 "
+                        "smoke")
+    p.add_argument("--filter", action="store_true", dest="filter_lane",
+                   help="smoke mode: run the filtered-search lane "
+                        "(per-query predicate masks, leakage pinned to "
+                        "0, search_metric.json) instead of the fp32 "
+                        "smoke")
     args = p.parse_args(argv)
     if args.mode == "smoke":
         if args.router:
             return run_smoke_router()
+        if args.metric is not None:
+            return run_smoke_metric(args.metric)
+        if args.filter_lane:
+            return run_smoke_filter()
         if args.precision is not None:
             return run_smoke_quant(args.precision)
         return run_smoke()

@@ -45,6 +45,18 @@ when any gated metric violates its pinned floor:
     truth) at or above ``--chaos-floor``, and the corrupted-snapshot
     cold start must fall back to the older committed step
     bit-identically (``fallback_bitident``) — when ``--chaos`` is given
+  * metric — the cosine AND MIPS smoke lanes (``bench_search.py --mode
+    smoke --metric ...``) must each reach ``metric_recall`` at or above
+    ``--metric-floor`` against the NATIVE-metric brute-force oracle
+    (top cosine similarity / top inner product, not l2), and
+    ``sim_err_rel`` — the relative error of the distance→similarity
+    conversion (core/metric.py similarity_from_dist) on the returned
+    neighbors — must stay tiny (<= 1e-3; observed ~1e-7: the reduction
+    is exact up to fp32 rounding). The filtered lane
+    (``--filter``) must report ``leaked == 0`` — no query may ever
+    surface an id its predicate excluded, across the fused per-query,
+    fused shared-mask, int8 store and ref-oracle variants — with a
+    non-vacuous ``filter_frac`` — when ``--metric`` is given
   * SLO — the bursty open-loop overload schedule (bench_slo.py) must be
     survived gracefully: ``crashes == 0``, ``silent_drops == 0`` (every
     non-served request carries a typed rejection), interactive p99 at or
@@ -70,6 +82,7 @@ Usage: python benchmarks/check_gate.py results/bench/online.json \
            --router results/bench/search_router.json --router-floor 0.90 \
            --persist results/bench/persist.json --persist-floor 5.0 \
            --chaos results/bench/chaos.json --chaos-floor 0.80 \
+           --metric results/bench/search_metric.json --metric-floor 0.90 \
            --slo results/bench/slo.json --slo-p99-floor 150 \
            --slo-shed-max 0.35
 """
@@ -294,6 +307,62 @@ def check_chaos(rows: list, floor: float) -> list:
     return failures
 
 
+def check_metric(rows: list, floor: float, sim_tol: float = 1e-3) -> list:
+    failures = []
+    smoke = [r for r in rows if r.get("op") == "smoke_search_metric"]
+    seen = {r.get("metric") for r in smoke}
+    # BOTH reductions are gated: a lane silently dropping out of the CI
+    # matrix must fail here, not pass vacuously
+    for want in ("cosine", "mips"):
+        if want not in seen:
+            failures.append(
+                f"no smoke_search_metric row for metric '{want}'")
+    for r in smoke:
+        met = r.get("metric", "?")
+        missing = [key for key in ("metric_recall", "sim_err_rel")
+                   if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(
+                f"smoke_search_metric[{met}] row missing gated keys "
+                f"{missing}")
+            continue
+        recall = float(r["metric_recall"])
+        if recall < floor:
+            failures.append(
+                f"{met} metric_recall {recall:.4f} below pinned floor "
+                f"{floor} (vs the native-metric brute-force oracle)")
+        err = float(r["sim_err_rel"])
+        if not err == err or err > sim_tol:
+            failures.append(
+                f"{met} sim_err_rel {err} above bound {sim_tol} "
+                "(distance->similarity conversion is no longer exact "
+                "for the native metric)")
+    filt = [r for r in rows if r.get("op") == "smoke_search_filter"]
+    if not filt:
+        failures.append("no smoke_search_filter row in benchmark output")
+    for r in filt:
+        missing = [key for key in ("leaked", "filter_frac",
+                                   "filtered_recall") if key not in r]
+        if missing:
+            # a gated key drifting out of the bench output must FAIL the
+            # gate, not pass it vacuously
+            failures.append(
+                f"smoke_search_filter row missing gated keys {missing}")
+            continue
+        if int(r["leaked"]):
+            failures.append(
+                f"filtered search leaked {r['leaked']} predicate-"
+                "excluded id(s) across variants (zero-leakage contract "
+                "broken)")
+        if float(r["filter_frac"]) <= 0.0:
+            failures.append(
+                "filter_frac is 0 — the smoke filter excluded nothing, "
+                "the leakage gate is vacuous")
+    return failures
+
+
 def check_slo(rows: list, p99_floor: float, shed_max: float) -> list:
     failures = []
     smoke = [r for r in rows if r.get("op") == "smoke_slo"]
@@ -400,6 +469,26 @@ _SUMMARY_SPEC = (
      "fallback_bitident", "== True"),
     ("chaos", "recovery_s (fallback cold start)", "smoke_chaos",
      "recovery_s", ""),
+    ("metric", "cosine metric_recall (fused)", "smoke_search_metric:cosine",
+     "metric_recall", "metric_floor"),
+    ("metric", "cosine sim_err_rel", "smoke_search_metric:cosine",
+     "sim_err_rel", "<= 0.001"),
+    ("metric", "mips metric_recall (fused)", "smoke_search_metric:mips",
+     "metric_recall", "metric_floor"),
+    ("metric", "mips sim_err_rel", "smoke_search_metric:mips",
+     "sim_err_rel", "<= 0.001"),
+    ("metric", "mips_m (augmentation bound)", "smoke_search_metric:mips",
+     "mips_m", ""),
+    ("metric", "leaked (filtered, all variants)", "smoke_search_filter",
+     "leaked", "== 0"),
+    ("metric", "filter_frac (excluded fraction)", "smoke_search_filter",
+     "filter_frac", "> 0"),
+    ("metric", "filtered_recall (fused per-query)", "smoke_search_filter",
+     "filtered_recall", ""),
+    ("metric", "filtered_recall_int8 (store path)", "smoke_search_filter",
+     "filtered_recall_int8", ""),
+    ("metric", "filtered_recall_ref (oracle)", "smoke_search_filter",
+     "filtered_recall_ref", ""),
     ("slo", "crashes (open-loop burst schedule)", "smoke_slo", "crashes",
      "== 0"),
     ("slo", "silent_drops (typed rejections only)", "smoke_slo",
@@ -428,6 +517,8 @@ def write_step_summary(row_sets: dict, floors: dict, failures: list):
     for rows in row_sets.values():
         for r in rows or []:
             by_op.setdefault(r.get("op"), r)     # first row per op
+            if "metric" in r:                    # per-metric lanes share an op
+                by_op.setdefault(f"{r.get('op')}:{r['metric']}", r)
     lines = [
         "## bench-smoke gates",
         "",
@@ -491,6 +582,13 @@ def main(argv: list | None = None) -> int:
                    help="pinned degraded_recall floor — recall against "
                         "the surviving shards' attainable ground truth "
                         "with 1 of 4 shards dead")
+    p.add_argument("--metric", default=None,
+                   help="path to search_metric.json (enables the cosine/"
+                        "MIPS + filtered-search gate)")
+    p.add_argument("--metric-floor", type=float, default=0.90,
+                   help="pinned metric_recall floor vs the native-metric "
+                        "brute-force oracle, for BOTH the cosine and "
+                        "MIPS smoke lanes (observed ~0.97 / ~0.95)")
     p.add_argument("--slo", default=None,
                    help="path to slo.json (enables the overload/SLO "
                         "gate)")
@@ -538,6 +636,11 @@ def main(argv: list | None = None) -> int:
             chaos_rows = json.load(f)
         row_sets["chaos"] = chaos_rows
         failures += check_chaos(chaos_rows, args.chaos_floor)
+    if args.metric is not None:
+        with open(args.metric) as f:
+            metric_rows = json.load(f)
+        row_sets["metric"] = metric_rows
+        failures += check_metric(metric_rows, args.metric_floor)
     if args.slo is not None:
         with open(args.slo) as f:
             slo_rows = json.load(f)
@@ -552,6 +655,7 @@ def main(argv: list | None = None) -> int:
          "router_floor": args.router_floor,
          "persist_floor": args.persist_floor,
          "chaos_floor": args.chaos_floor,
+         "metric_floor": args.metric_floor,
          "slo_p99": args.slo_p99_floor,
          "slo_shed": args.slo_shed_max},
         failures,
@@ -578,6 +682,10 @@ def main(argv: list | None = None) -> int:
                  f"; chaos schedule: 0 crashes, 0 dropped queries, "
                  f"degraded_recall >= {args.chaos_floor}, "
                  "bit-identical snapshot fallback")
+              + ("" if args.metric is None else
+                 f"; cosine+MIPS metric_recall >= {args.metric_floor} "
+                 "with exact similarity conversion, filtered search "
+                 "leaked 0 ids")
               + ("" if args.slo is None else
                  f"; SLO burst: 0 crashes, 0 silent drops, interactive "
                  f"p99 <= {args.slo_p99_floor}ms, shed_frac <= "

@@ -16,6 +16,7 @@ Paper artifact map:
     build       -> (ours) fused local join vs. global-lexsort routing
     search      -> (ours) fused batched beam search vs. greedy ref loop
     persist     -> (ours) snapshot/restore parity + zero-rebuild cold start
+    metric      -> (ours) cosine/MIPS reductions + filtered-search leakage
     slo         -> (ours) overload: admission/backpressure under a burst
 """
 from __future__ import annotations
@@ -68,6 +69,13 @@ def main(argv=None):
             n_eval=256 if quick else 1024),
         "persist": lambda: bench_persist.run_smoke(
             n=2048 if quick else 4096),
+        "metric": lambda: (
+            bench_search.run_smoke_metric("cosine",
+                                          n=2048 if quick else 8192),
+            bench_search.run_smoke_metric("mips",
+                                          n=2048 if quick else 8192),
+            bench_search.run_smoke_filter(n=2048 if quick else 8192),
+        ),
         "slo": lambda: (bench_slo.run_smoke() if quick
                         else bench_slo.main(["--mode", "full"])),
     }

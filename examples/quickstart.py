@@ -52,6 +52,29 @@ def main():
     print(f"graph search: 16 queries in {time.time()-t0:.2f}s, "
           f"recall@10 = {recall_at_k(qi, tqi):.3f}")
 
+    # ---- other metrics: same kernels, input-side reductions
+    # (docs/METRICS.md). Cosine normalizes rows inside the store; MIPS
+    # appends the augmented coordinate. Distances come back in the
+    # transformed space — monotone in the native metric — and
+    # similarity_from_dist converts them back exactly.
+    from repro.core import metric as metric_mod
+    from repro.core.online import MutableKNNStore, OnlineConfig
+
+    store, _ = MutableKNNStore.build(
+        x, k=20, cfg=OnlineConfig(metric="cosine"), key=jax.random.key(1))
+    # wider beam than the l2 demo: normalization tightens the clusters
+    # on the sphere, so random entries need more budget to navigate in
+    # (attach a router — docs/ARCHITECTURE.md — to fix the entries
+    # themselves)
+    cd, ci = store.search(q, k_out=10, beam=64, rounds=32,
+                          key=jax.random.key(2))
+    cos = metric_mod.similarity_from_dist(cd, "cosine")
+    xn = x / jax.numpy.linalg.norm(x, axis=1, keepdims=True)
+    qn = q / jax.numpy.linalg.norm(q, axis=1, keepdims=True)
+    _, cti = jax.lax.top_k(qn @ xn.T, 10)     # native cosine oracle
+    print(f"cosine search: recall@10 = {recall_at_k(ci, cti):.3f} vs "
+          f"the top-similarity oracle; best cos = {float(cos[0, 0]):.4f}")
+
     # ---- knobs
     print("\nknobs (DescentConfig):")
     for f, v in DescentConfig().__dict__.items():

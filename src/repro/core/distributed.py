@@ -620,13 +620,38 @@ def graph_search_sharded(
     by construction). All shards dead answers every query empty — degraded
     recall, never an exception.
 
+    ``cfg.metric`` selects the distance ("l2" | "cosine" | "mips") the
+    same way the single-chip entry does: the CORPUS must already be
+    transformed (rows normalized for cosine; the sqrt(M^2 - |x|^2)
+    augmented coordinate appended for MIPS — build the sharded corpus
+    through ``core.metric.transform_corpus`` before slicing it over the
+    mesh), and this driver applies the matching QUERY-side transform
+    once, before admission/routing, so the per-shard fused searches and
+    the global top-k merge stay pure squared-l2. Returned distances are
+    transformed-space l2 — convert with
+    ``core.metric.similarity_from_dist`` when native-metric scores are
+    needed.
+
     Returns (dist (q, k_out), idx (q, k_out) global ids), replicated —
     plus a stats dict (fanout/shards/routed/searched/dropped queries)
     when ``with_stats``.
     """
+    from repro.core import metric as metric_mod
     from repro.core.graph_search import _admit_queries, _batch_key, \
         _mask_bad_rows
     cfg = cfg or SearchConfig()
+    # query-side metric transform runs HERE (driver level): per-shard
+    # graph_search calls re-apply it, which is a no-op by construction
+    # (normalization is idempotent; MIPS queries are already at the
+    # augmented width so the zero-pad branch never fires again)
+    if cfg.metric == "cosine":
+        queries = metric_mod.normalize_rows(queries.astype(jnp.float32))
+    elif cfg.metric == "mips" and queries.ndim == 2 \
+            and queries.shape[1] < x.shape[1]:
+        queries = jnp.pad(
+            queries, ((0, 0), (0, x.shape[1] - queries.shape[1])))
+    else:
+        metric_mod.check_metric(cfg.metric)
     # admission runs HERE, on the concrete batch — graph_search inside
     # the shard_map bodies sees tracers and skips its own check
     queries, bad_rows = _admit_queries(queries, x.shape[1], cfg.strict)

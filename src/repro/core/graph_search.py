@@ -35,14 +35,38 @@ and every shipped config) both backends expand exactly ``rounds`` nodes;
 otherwise the fused budget rounds UP to the next multiple of ``expand``
 (core/online.py's analytic eval bound accounts for this).
 
-Entry points: when ``entry`` is None, ``beam`` entry points are drawn
-from ``key`` (uniform over live rows) — a K-NN graph over clustered data
-has no inter-cluster edges, so search only reaches clusters holding an
-entry point. When ``key`` is also None it is derived from the *content*
-of the query batch instead of a silent constant, so repeated serving
-batches stop reusing identical entry points while identical batches stay
-deterministic; serving callers should still thread an explicit key
-(serve/knn_lm.knn_logits, core/online.knn_insert do).
+Entry points: when ``entry`` is None and a ``router`` is passed (the
+serving default — MutableKNNStore / KNNDatastore thread theirs), each
+query's beam is seeded from the member rows of its top-``router_t``
+centroids (core/router.py — the hierarchical entry points that fixed the
+large-n recall collapse); holes, and the no-router / ``router="off"`` /
+``backend="ref"`` cases, fall back to a keyed draw uniform over live
+(and filter-admitted) rows. When ``key`` is None it is derived from the
+*content* of the query batch instead of a silent constant, so repeated
+serving batches stop reusing identical entry points while identical
+batches stay deterministic; serving callers should still thread an
+explicit key (serve/knn_lm.knn_logits, core/online.knn_insert do).
+
+**Metric** (``SearchConfig.metric``: l2 | cosine | mips): the kernels
+only ever compute squared l2 — cosine and MIPS ride the input-side
+reductions of core/metric.py. The CORPUS handed to ``graph_search`` must
+already be transformed (stores built with ``OnlineConfig.metric`` /
+``DescentConfig.metric`` do this once at build/insert); the QUERIES are
+transformed here, once per batch (cosine: row-normalize; mips: append
+the zero coordinate — realized as zero right-padding, which is also what
+feature padding does, so any narrower query widens safely). Returned
+distances are transformed-space squared l2 (monotone in the native
+metric; ``metric.similarity_from_dist`` converts back exactly).
+
+**Filtered search** (``filter_ids``): a caller-supplied predicate mask —
+(n,) shared across the batch, or (q, n) per query (True = row admitted).
+It rides the exact alive-mask path the tombstones use: filtered rows are
+neither expanded nor returned (their ids fold to -1 before the distance
+tile, and ``kernels/knn_search.py``'s epilogue maps id -1 to +inf), so a
+filtered-out id can never surface — the zero-leakage contract the CI
+metric lane gates. Highly selective filters cost recall the way mass
+deletions do: the beam must traverse THROUGH admitted rows only (see
+docs/METRICS.md; ``metric.filter_frac`` reports the admitted fraction).
 """
 from __future__ import annotations
 
@@ -55,6 +79,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heap, quantize
+from repro.core import metric as metric_mod
 from repro.core.heap import NeighborLists
 from repro.core.quantize import QuantizedStore
 from repro.kernels import ops
@@ -83,6 +108,16 @@ class SearchConfig:
                             # costs bounded candidate-recall noise only.
                             # backend="ref" (the parity oracle) is always
                             # fp32 and ignores this knob.
+    metric: str = "l2"      # l2 | cosine | mips — metric the distances
+                            # realize via core/metric.py's input-side
+                            # reductions (the kernels stay pure squared
+                            # l2). The corpus must be pre-transformed
+                            # (stores with a matching OnlineConfig.metric
+                            # are); queries transform per batch inside
+                            # graph_search. Returned distances are
+                            # transformed-space l2 — monotone in the
+                            # native metric, convertible back exactly
+                            # via metric.similarity_from_dist.
     router: str = "auto"    # auto = seed the beam from the router's
                             # centroid member lists when a router is
                             # passed; off = always random entries.
@@ -129,7 +164,10 @@ def q_block_bucket(nq: int, cfg: "SearchConfig") -> int:
     batch that lands in it — while a small interactive burst stops
     paying the full-block distance tile (pad waste stays < 2x).
     ``cfg.fixed_block`` pins the ladder to the single legacy full-block
-    quantum (the measured baseline in benchmarks/bench_slo.py)."""
+    quantum (the measured baseline in benchmarks/bench_slo.py).
+    Metric- and filter-independent: the bucket depends only on ``nq``
+    (query transforms are per-row, and per-query ``filter_ids`` masks
+    are sliced along the query axis with the block)."""
     if cfg.fixed_block or nq <= 0:
         return max(1, cfg.q_block)
     return max(1, min(cfg.q_block, 1 << (nq - 1).bit_length()))
@@ -156,7 +194,10 @@ def expand_frontier(
     hub-heavy closures (ROADMAP watch item). The mask is exact either
     way. The hop passes are O(n*k) bitwise work — no distance
     evaluations; the point is that the *expensive* per-row kernels then
-    run on the compacted ids.
+    run on the compacted ids. Pure graph topology, so metric-oblivious
+    (it never sees features); ``alive`` folds out tombstoned rows —
+    query-time filter masks do NOT apply here (the frontier is an
+    update-path construct, not a query result).
     """
     n, _ = graph_idx.shape
     # scatter-min BFS: hop[i] = fewest hops from any seed (hops+1 = unseen)
@@ -281,6 +322,8 @@ def graph_search(
     cfg: SearchConfig | None = None,
     qstore: QuantizedStore | None = None,   # cached quantized corpus
     router=None,                            # core/router.Router — routed seeds
+    filter_ids: jax.Array | None = None,    # (n,) shared or (q, n) per-query
+                                            # predicate mask (True = admitted)
 ):
     """Returns (dist (q, k_out), idx (q, k_out)) ascending; empty slots
     are (+inf/_BIG, -1).
@@ -300,6 +343,18 @@ def graph_search(
     the per-call recomputation; queries' norms are hoisted once per batch
     either way.
 
+    ``cfg.metric`` selects l2 / cosine / mips via the input-side
+    reductions (module docstring): the corpus/``x2`` must already be
+    transformed, the queries are transformed here, distances come back
+    as transformed-space squared l2 under EVERY backend (``"ref"``
+    included — the oracle is metric-general through the same reduction).
+
+    ``filter_ids`` restricts results to admitted rows — (n,) bool shared
+    across the batch, or (q, n) bool per query. Filtered rows behave
+    exactly like tombstoned ones for this call: never seeded, never
+    expanded, never returned (zero leakage, gated in CI). Both layouts
+    work under every backend and precision.
+
     With ``cfg.precision`` "int8"/"bf16" the traversal scores candidates
     on the quantized corpus mirror and re-ranks the final pool fp32 (see
     SearchConfig). ``qstore`` passes a cached mirror (MutableKNNStore /
@@ -310,8 +365,33 @@ def graph_search(
         cfg = SearchConfig(beam=beam, rounds=rounds)
     x = x.astype(jnp.float32)
     queries = queries.astype(jnp.float32)
+    if cfg.metric == "cosine":
+        queries = metric_mod.normalize_rows(queries)
+    elif cfg.metric == "mips" and queries.ndim == 2 \
+            and queries.shape[1] < x.shape[1]:
+        # the mips query transform is literally zero right-padding (the
+        # augmented coordinate is 0), same as feature padding — widen
+        # narrower query batches up to the transformed corpus width
+        queries = jnp.pad(queries, ((0, 0), (0, x.shape[1]
+                                             - queries.shape[1])))
+    else:
+        metric_mod.check_metric(cfg.metric)
     queries, bad_rows = _admit_queries(queries, x.shape[1], cfg.strict)
     n = graph_idx.shape[0]
+    filt = None
+    if filter_ids is not None:
+        filter_ids = jnp.asarray(filter_ids, bool)
+        if filter_ids.shape[-1] != n:
+            raise ValueError(
+                f"filter_ids covers {filter_ids.shape[-1]} rows; the "
+                f"graph has {n}")
+        if filter_ids.ndim == 1:
+            # a shared predicate IS a tombstone mask for this call —
+            # fold it into `alive` and the whole existing path (entry
+            # draw, candidate masking, epilogue) enforces it for free
+            alive = filter_ids if alive is None else alive & filter_ids
+        else:
+            filt = filter_ids
     if n == 0:
         # empty corpus (a store before its first insert): every query
         # gets the empty result, same contract as a fully-dead store
@@ -344,6 +424,29 @@ def graph_search(
         else:
             entry = _draw_entries(key, n, cfg.beam, alive)
     entry = entry.astype(jnp.int32)
+    if filt is not None:
+        # per-query predicates need per-query entries: broadcast shared
+        # seeds, drop seeds the query's own filter rejects, and refill
+        # the holes from a keyed draw over each query's admitted live
+        # rows (same sampling-without-replacement trick as
+        # _draw_entries, one weight vector shared across the batch)
+        if entry.ndim == 1:
+            entry = jnp.broadcast_to(
+                entry[None, :], (queries.shape[0], entry.shape[0]))
+        fok = jnp.take_along_axis(filt, jnp.clip(entry, 0, n - 1), axis=1)
+        entry = jnp.where((entry >= 0) & fok, entry, -1)
+        key = _batch_key(queries) if key is None else key
+        w = jax.random.uniform(jax.random.fold_in(key, 7), (n,))
+        if alive is not None:
+            w = jnp.where(alive, w, -1.0)
+        fd, fent = jax.lax.top_k(
+            jnp.where(filt, w[None, :], -1.0), min(entry.shape[1], n))
+        fent = jnp.where(fd >= 0.0, fent, -1).astype(jnp.int32)
+        if fent.shape[1] < entry.shape[1]:
+            fent = jnp.pad(
+                fent, ((0, 0), (0, entry.shape[1] - fent.shape[1])),
+                constant_values=-1)
+        entry = jnp.where(entry >= 0, entry, fent)
     if cfg.precision == "f32" or cfg.backend == "ref":
         qstore = None
     elif qstore is None or qstore.mode != cfg.precision:
@@ -354,7 +457,7 @@ def graph_search(
 
     if cfg.backend == "ref":
         rd, ri = _graph_search_ref(
-            x, x2, graph_idx, queries, entry, alive,
+            x, x2, graph_idx, queries, entry, alive, filt,
             k_out=k_out, beam=cfg.beam, rounds=cfg.rounds,
         )
         return _mask_bad_rows(rd, ri, bad_rows)
@@ -374,6 +477,8 @@ def graph_search(
     q2 = jnp.sum(qp * qp, axis=1)
     if entry.ndim == 2:     # per-query seeds ride along with their block
         entry = jnp.pad(entry, ((0, pad), (0, 0)), constant_values=-1)
+    if filt is not None:    # pad queries admit everything (sliced off)
+        filt = jnp.pad(filt, ((0, pad), (0, 0)), constant_values=True)
     # Deadline degradation: once the batch has spent its cumulative
     # per-block slice, remaining blocks run with the expansion budget cut
     # to ONE fused round — the answer degrades (fewer expansions, lower
@@ -403,6 +508,7 @@ def graph_search(
         ent_b = entry if entry.ndim == 1 else entry[s:s + qb]
         od, oi = _search_block(
             x, x2, graph_idx, qp[s:s + qb], q2[s:s + qb], ent_b, alive,
+            None if filt is None else filt[s:s + qb],
             qstore, k_out=k_out, cfg=bcfg,
         )
         if use_deadline:
@@ -428,12 +534,15 @@ def _search_block(
     q2: jax.Array,         # (qb,) query squared norms (hoisted)
     entry: jax.Array,      # (e,) shared or (qb, e) per-query entry ids
     alive: jax.Array | None,
+    filt: jax.Array | None,          # (qb, n) per-query predicate mask
     qstore: QuantizedStore | None,   # quantized corpus mirror (quant only)
     *,
     k_out: int,
     cfg: SearchConfig,
 ):
-    """One query block of the fused search (see module docstring)."""
+    """One query block of the fused search (see module docstring).
+    ``filt`` (per-query filtered search) masks candidates exactly like
+    ``alive`` does, gathered per query row."""
     n, k = graph_idx.shape
     qb = q.shape[0]
     beam = cfg.beam
@@ -463,6 +572,8 @@ def _search_block(
         eids = entry
         if alive is not None:
             eids = jnp.where(alive[ent], eids, -1)
+        if filt is not None:   # filt implies per-query entries (dispatcher)
+            eids = jnp.where(jnp.take_along_axis(filt, ent, 1), eids, -1)
         if quant:
             c2q = jnp.where(eids >= 0, qstore.x2[ent], 0.0)
             if cfg.precision == "int8":
@@ -533,6 +644,13 @@ def _search_block(
         ok = can[:, :, None] & (nbrs >= 0)
         if alive is not None:
             ok &= alive[jnp.clip(nbrs, 0, n - 1)]
+        if filt is not None:
+            # per-query predicate: filtered candidates fold to -1 here,
+            # the epilogue maps id -1 to +inf — zero-leakage by the same
+            # mechanism tombstones use
+            ok &= jnp.take_along_axis(
+                filt, jnp.clip(nbrs, 0, n - 1).reshape(qb, e * k), 1
+            ).reshape(qb, e, k)
         cand = jnp.where(ok, nbrs, -1).reshape(qb, e * k)
         safe_c = jnp.where(cand >= 0, cand, 0)
         if quant:
@@ -603,14 +721,19 @@ def _graph_search_ref(
     queries: jax.Array,    # (q, dp) f32
     entry: jax.Array,      # (e,) shared or (q, e) per-query entry ids
     alive: jax.Array | None,
+    filt: jax.Array | None,   # (q, n) per-query predicate mask
     *,
     k_out: int,
     beam: int,
     rounds: int,
 ):
     """The original one-node-per-round greedy search, kept as the fused
-    path's parity oracle. Norms are hoisted: x2 comes in precomputed and
-    each query's norm is evaluated once per batch, not once per round."""
+    path's parity oracle — metric-general through the same input-side
+    reduction as the fused path (it sees transformed rows, computes pure
+    l2), and filter-aware: ``filt`` rows mask entries and candidates
+    exactly like ``alive`` does, vmapped per query. Norms are hoisted:
+    x2 comes in precomputed and each query's norm is evaluated once per
+    batch, not once per round."""
     n, k = graph_idx.shape
     if entry.ndim == 1:
         entry = jnp.broadcast_to(
@@ -621,7 +744,7 @@ def _graph_search_ref(
         rows = x[ids]
         return jnp.maximum(x2[ids] - 2.0 * rows @ q + q2s, 0.0)
 
-    def one_query(q, q2s, ent):
+    def one_query(q, q2s, ent, frow):
         pool_i = jnp.full((beam,), -1, dtype=jnp.int32)
         pool_d = jnp.full((beam,), _BIG, dtype=jnp.float32)
         pool_e = jnp.zeros((beam,), dtype=bool)   # expanded?
@@ -634,6 +757,9 @@ def _graph_search_ref(
         if alive is not None:
             dead = (pool_i >= 0) & ~alive[jnp.clip(pool_i, 0, n - 1)]
             pool_d = jnp.where(dead, _BIG, pool_d)
+        if frow is not None:
+            shut = (pool_i >= 0) & ~frow[jnp.clip(pool_i, 0, n - 1)]
+            pool_d = jnp.where(shut, _BIG, pool_d)
 
         def round_fn(_, state):
             pool_d, pool_i, pool_e = state
@@ -647,6 +773,8 @@ def _graph_search_ref(
             nb_ok = (nbrs >= 0) & can
             if alive is not None:
                 nb_ok &= alive[jnp.clip(nbrs, 0, n - 1)]
+            if frow is not None:
+                nb_ok &= frow[jnp.clip(nbrs, 0, n - 1)]
             nd = jnp.where(
                 nb_ok, q_dist(q, q2s, jnp.clip(nbrs, 0, n - 1)), _BIG
             )
@@ -679,4 +807,8 @@ def _graph_search_ref(
         return out_d, out_i
 
     q2 = jnp.sum(queries * queries, axis=1)
-    return jax.vmap(one_query)(queries, q2, entry)
+    if filt is None:
+        return jax.vmap(
+            lambda q, q2s, ent: one_query(q, q2s, ent, None)
+        )(queries, q2, entry)
+    return jax.vmap(one_query)(queries, q2, entry, filt)

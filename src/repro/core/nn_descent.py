@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heap, quantize, selection
+from repro.core import metric as metric_mod
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
 from repro.core.quantize import QuantizedStore
@@ -71,6 +72,15 @@ class DescentConfig:
                                # buffer (0 = 2*C); overflow beyond it is
                                # dropped (bounded-buffer sampling noise,
                                # like every other buffer in NN-Descent)
+    metric: str = "l2"         # l2 | cosine | mips — realized by the
+                               # input-side reductions of core/metric.py
+                               # (cosine: row-normalize; mips: augmented
+                               # coordinate, d -> d+1) applied ONCE at
+                               # build entry; every join/select/merge
+                               # below stays pure squared l2. Graph
+                               # distances come back in the TRANSFORMED
+                               # space — monotone in the native metric.
+                               # All backends, "ref" included.
     precision: str = "f32"     # f32 | bf16 | int8 — candidate-SCORING
                                # dtype of the sampled local joins
                                # (kernels/l2_quant.py over a quantized
@@ -417,16 +427,24 @@ def build_knn_graph(
     key: jax.Array | None = None,
     callback: Callable | None = None,
 ):
-    """Build an approximate K-NN graph of x (n, d), squared-l2 metric.
+    """Build an approximate K-NN graph of x (n, d).
 
     Returns (dist (n,k) f32 ascending, idx (n,k) i32 in ORIGINAL ids,
     stats). Deterministic given ``key``.
+
+    ``cfg.metric`` selects l2 (default) / cosine / mips: the raw rows
+    are reduced to an l2-equivalent form once, here (core/metric.py),
+    and the whole descent below runs unchanged on the transformed rows.
+    Returned distances are transformed-space squared l2 — neighbor ORDER
+    is the native metric's; convert values with
+    ``metric.similarity_from_dist`` if needed.
     """
     cfg = cfg or DescentConfig(k=k)
     if cfg.k != k:
         cfg = dataclasses.replace(cfg, k=k)
     key = jax.random.key(0) if key is None else key
     n = x.shape[0]
+    x, _ = metric_mod.transform_corpus(x, cfg.metric)
     xp = pad_features(x.astype(jnp.float32))
     x2 = jnp.sum(xp * xp, axis=1)
 

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import faults, heap, quantize
+from repro.core import metric as metric_mod
 from repro.core.graph_search import SearchConfig, expand_frontier, graph_search
 from repro.core.heap import NeighborLists
 from repro.core.layout import pad_features
@@ -110,6 +111,18 @@ class OnlineConfig:
                               # source-incidence buffer (0 = 2*merge_mult*k;
                               # overflow is dropped — bounded-buffer
                               # sampling noise, cf. DescentConfig.join_src)
+    metric: str = "l2"        # l2 | cosine | mips — the store keeps its
+                              # rows in the metric's l2-equivalent form
+                              # (core/metric.py: cosine rows normalized,
+                              # mips rows augmented d -> d+1 with the
+                              # bound in MutableKNNStore.mips_m), applied
+                              # once where rows enter (from_graph /
+                              # knn_insert) so the kernels, the quantized
+                              # mirror, and the router all work per
+                              # metric unchanged. Searches transform
+                              # queries per batch; distances come back
+                              # transformed-space l2 (monotone in the
+                              # native metric).
     precision: str = "f32"    # f32 | bf16 | int8 — the store keeps a
                               # quantized mirror (core/quantize.py) that
                               # candidate SCORING reads on the query and
@@ -138,17 +151,24 @@ class MutableKNNStore:
     """Growable K-NN graph store. Rows [0, n) are allocated; ``alive``
     marks the live ones (False = tombstoned or unallocated)."""
 
-    x: jax.Array          # (cap, dp) feature-padded points
+    x: jax.Array          # (cap, dp) feature-padded points, stored in
+                          # cfg.metric's l2-equivalent transformed form
     x2: jax.Array         # (cap,) cached squared norms
     nl: NeighborLists     # (cap, k) bounded neighbor lists
     alive: jax.Array      # (cap,) bool
     n: int                # allocation high-water mark
-    d: int                # logical (unpadded) feature dim
+    d: int                # logical RAW feature dim (what callers hand
+                          # insert/search; mips stores d+1 internally)
     cfg: OnlineConfig
     qs: QuantizedStore | None = None  # quantized mirror of ``x``
                                       # (cfg.precision != "f32" only)
     router: Router | None = None      # coarse routing layer
                                       # (cfg.router is not None only)
+    mips_m: float = 0.0   # mips augmentation bound M (cfg.metric="mips"
+                          # only; echoed/validated by core/persist.py).
+                          # Set at build, or at the FIRST insert of a
+                          # store that started empty; later inserts
+                          # share it (over-norm rows clamp + warn).
 
     @property
     def capacity(self) -> int:
@@ -174,9 +194,14 @@ class MutableKNNStore:
         *,
         cfg: OnlineConfig | None = None,
     ) -> "MutableKNNStore":
-        """Wrap an offline ``build_knn_graph`` result (original id space)."""
+        """Wrap an offline ``build_knn_graph`` result (original id
+        space). ``x`` is the RAW (untransformed) corpus: under
+        cfg.metric the same reduction the build applied is applied here
+        (same rows, same mips bound M), so the stored rows match the
+        graph's transformed-space distances exactly."""
         cfg = cfg or OnlineConfig()
         n, d = x.shape
+        x, mips_m = metric_mod.transform_corpus(x, cfg.metric)
         xp = pad_features(x.astype(jnp.float32))
         cap = _next_capacity(n)
         store = cls(
@@ -193,6 +218,7 @@ class MutableKNNStore:
             n=n,
             d=d,
             cfg=cfg,
+            mips_m=mips_m,
         )
         store = dataclasses.replace(
             store, x2=jnp.sum(store.x * store.x, axis=1)
@@ -202,7 +228,10 @@ class MutableKNNStore:
                 store,
                 qs=quantize.quantize_corpus(
                     store.x, cfg.precision,
-                    width=quantize.mirror_width(d, store.x.shape[1]),
+                    # the mirror's logical dim is the TRANSFORMED one
+                    # (mips appends a coordinate) — x was reduced above
+                    width=quantize.mirror_width(x.shape[1],
+                                                store.x.shape[1]),
                 ),
             )
         if cfg.router is not None:
@@ -227,9 +256,12 @@ class MutableKNNStore:
         and the first ``knn_insert`` acts as a first build (all seeds
         miss, so the batch self-join links the graph). A configured
         router attaches lazily via ``ensure_router`` once rows exist —
-        there is nothing to cluster yet."""
+        there is nothing to cluster yet. Under cfg.metric="mips" the
+        augmentation bound M is unknown until rows exist — the first
+        ``knn_insert`` sets ``mips_m`` from its batch."""
         cfg = cfg or OnlineConfig()
-        dp = pad_features(jnp.zeros((1, d), jnp.float32)).shape[1]
+        d_t = metric_mod.transformed_dim(d, cfg.metric)
+        dp = pad_features(jnp.zeros((1, d_t), jnp.float32)).shape[1]
         store = cls(
             x=jnp.full((8, dp), _FILL, jnp.float32),
             x2=jnp.full((8,), dp * _FILL * _FILL, jnp.float32),
@@ -248,7 +280,7 @@ class MutableKNNStore:
                 store,
                 qs=quantize.quantize_corpus(
                     store.x, cfg.precision,
-                    width=quantize.mirror_width(d, dp),
+                    width=quantize.mirror_width(d_t, dp),
                 ),
             )
         return store
@@ -263,10 +295,16 @@ class MutableKNNStore:
         descent: DescentConfig | None = None,
         key: jax.Array | None = None,
     ) -> tuple["MutableKNNStore", DescentStats]:
-        """Offline build + wrap. Returns (store, build stats)."""
+        """Offline build + wrap. Returns (store, build stats). ``x`` is
+        RAW rows; ``cfg.metric`` propagates into the DescentConfig so
+        the build and the store apply the same reduction (each to the
+        raw input, exactly once)."""
+        cfg = cfg or OnlineConfig()
         dcfg = descent or DescentConfig(k=k, rho=1.0, max_iters=15)
         if dcfg.k != k:
             dcfg = dataclasses.replace(dcfg, k=k)
+        if dcfg.metric != cfg.metric:
+            dcfg = dataclasses.replace(dcfg, metric=cfg.metric)
         dist, idx, stats = build_knn_graph(x, k=k, cfg=dcfg, key=key)
         return cls.from_graph(x, dist, idx, cfg=cfg), stats
 
@@ -279,23 +317,45 @@ class MutableKNNStore:
         rounds: int = 24,
         key: jax.Array | None = None,
         cfg: SearchConfig | None = None,
+        filter_ids: jax.Array | None = None,
     ):
         """Batched query path: fused blocked graph search that never
         returns a tombstoned or unallocated row. The store's cached norm
         vector is passed through (no per-call x2 recomputation); ``cfg``
         overrides the default SearchConfig built from the kwargs and the
-        store's backend / expansion / query-block knobs."""
+        store's backend / expansion / query-block knobs (its ``metric``
+        is always forced to the store's — rows are stored transformed,
+        searching them under another metric would be silent garbage).
+
+        Queries come in RAW (store.d features, any metric) and are
+        reduced here/in graph_search; returned distances are
+        transformed-space squared l2 (metric.similarity_from_dist
+        converts back). ``filter_ids`` is a per-call predicate mask —
+        (rows,) shared or (q, rows) per query, sized to ``store.n`` or
+        the full capacity (shorter masks are False-padded: unallocated
+        rows are inadmissible anyway) — filtered rows are never
+        returned, exactly like tombstones."""
         if cfg is None:
             cfg = SearchConfig(
                 beam=beam, rounds=rounds, expand=self.cfg.seed_expand,
                 q_block=self.cfg.q_block, backend=self.cfg.backend,
                 precision=self.cfg.precision,
             )
-        q = _pad_to(queries, self.x.shape[1])
+        if cfg.metric != self.cfg.metric:
+            cfg = dataclasses.replace(cfg, metric=self.cfg.metric)
+        if filter_ids is not None:
+            filter_ids = jnp.asarray(filter_ids, bool)
+            short = self.capacity - filter_ids.shape[-1]
+            if short > 0:
+                pad = [(0, 0)] * (filter_ids.ndim - 1) + [(0, short)]
+                filter_ids = jnp.pad(filter_ids, pad,
+                                     constant_values=False)
+        q = _pad_to(metric_mod.transform_queries(queries, self.cfg.metric),
+                    self.x.shape[1])
         return graph_search(
             self.x, self.nl.idx, q, k_out=k_out, key=key,
             alive=self.alive, x2=self.x2, cfg=cfg, qstore=self.qs,
-            router=self.router,
+            router=self.router, filter_ids=filter_ids,
         )
 
 
@@ -550,6 +610,13 @@ def knn_insert(
     """Insert ``new_points`` (m, d) into the store. Deterministic given
     ``key`` (the only randomness is the seed search's entry points).
 
+    ``new_points`` are RAW rows; the store's metric reduction is applied
+    here (cosine: normalize; mips: augment with the store's bound
+    ``mips_m`` — rows that outgrow it clamp with a RuntimeWarning, and a
+    store that started ``empty`` sets the bound from its first batch),
+    so the seeding search, the FoaF refinement, the quantized mirror
+    update and the router maintenance below all run metric-unchanged.
+
     Returns (store, stats); ``stats.dist_evals`` is an upper bound on the
     distance evaluations spent (the seed-search term is the analytic bound
     beam + rounds*k per query; the refinement term is exact).
@@ -564,7 +631,16 @@ def knn_insert(
         raise ValueError(
             f"new points have dim {new_points.shape[1]}, store has {store.d}"
         )
-    q = _pad_to(new_points, store.x.shape[1])
+    mips_m = store.mips_m
+    if cfg.metric == "mips" and store.n == 0 and mips_m == 0.0:
+        # a store built via ``empty`` has no bound yet — its first batch
+        # defines M (later batches share it, clamping past it)
+        mips_m = metric_mod.mips_max_norm(new_points)
+        store = dataclasses.replace(store, mips_m=mips_m)
+    new_t, _ = metric_mod.transform_corpus(
+        new_points, cfg.metric, mips_m=mips_m if cfg.metric == "mips"
+        else None)
+    q = _pad_to(new_t, store.x.shape[1])
     store = _grown(store, store.n + m)
     ids = jnp.arange(store.n, store.n + m, dtype=jnp.int32)
 
@@ -572,7 +648,7 @@ def knn_insert(
     scfg = SearchConfig(
         beam=beam, rounds=cfg.seed_rounds, expand=cfg.seed_expand,
         q_block=cfg.q_block, backend=cfg.backend,
-        precision=cfg.precision,
+        precision=cfg.precision, metric=cfg.metric,
     )
     seed_d, seed_i = graph_search(
         store.x, store.nl.idx, q, k_out=k, key=key, alive=store.alive,
@@ -657,7 +733,9 @@ def ensure_router(
 ) -> MutableKNNStore:
     """Idempotently attach a router to an existing store (serving-side
     plumbing: ContinuousBatcher / MutableKNNDatastore opt in without
-    rebuilding the store)."""
+    rebuilding the store). The router clusters the store's TRANSFORMED
+    rows, so routed entries are correct under any ``cfg.metric`` with
+    no per-metric routing code."""
     if store.router is not None:
         return store
     rcfg = rcfg or store.cfg.router or RouterConfig()
@@ -808,6 +886,13 @@ def knn_delete(
     into ``cfg.chunk``-row padded chunks — O(frontier) work, not O(n).
     With ``cfg.frontier=False`` every allocated row is processed (the
     dense baseline; identical results).
+
+    Metric/filter behavior: refill distances are computed over the
+    store's already-transformed rows, so deletion is metric-correct
+    with no per-metric code; downstream, a tombstoned row exits every
+    search exactly like a filtered one (id -1 -> +inf in the kernel
+    epilogue) — ``filter_ids`` masks compose with tombstones, they do
+    not replace them.
     """
     cfg = store.cfg
     ids = jnp.asarray(ids, jnp.int32)

@@ -330,6 +330,14 @@ def capture_store(store: MutableKNNStore, *, values=None):
         "live": live,
         "tombstones": int(store.n) - live,
         "precision": store.cfg.precision,
+        # the metric is echoed TOP-LEVEL (not only inside the config
+        # echo) and validated on restore: rows are stored in the
+        # metric's transformed space, so restoring them under another
+        # metric would serve silently wrong distances. mips_m is the
+        # augmentation bound the stored rows were transformed with —
+        # without it, post-restore inserts could not be made consistent.
+        "metric": store.cfg.metric,
+        "mips_m": float(store.mips_m),
         "has_qs": store.qs is not None,
         "has_router": store.router is not None,
         "config": _cfg_echo(store.cfg),
@@ -361,8 +369,25 @@ def _rebuild_router(arrays: dict) -> Router:
     )
 
 
+def _metric_meta(manifest: dict, cfg: OnlineConfig) -> float:
+    """Validate the top-level metric echo against the config echo and
+    return the mips augmentation bound. Pre-metric snapshots (same
+    format version, older writer) carry neither key — they are l2."""
+    met = manifest.get("metric", "l2")
+    if met != cfg.metric:
+        raise SnapshotError(
+            f"snapshot metric echo {met!r} disagrees with its config "
+            f"echo {cfg.metric!r} — refusing to serve transformed rows "
+            "under the wrong metric"
+        )
+    return float(manifest.get("mips_m", 0.0))
+
+
 def rebuild_store(arrays: dict, manifest: dict):
-    """Inverse of ``capture_store``: (store, values-or-None)."""
+    """Inverse of ``capture_store``: (store, values-or-None). The
+    metric echo is validated (``_metric_meta``) and the mips bound
+    restored, so post-restore inserts augment exactly like pre-snapshot
+    ones did."""
     cfg = _cfg_from_echo(manifest["config"])
     store = MutableKNNStore(
         x=jnp.asarray(arrays["x"]),
@@ -379,6 +404,7 @@ def rebuild_store(arrays: dict, manifest: dict):
         qs=_rebuild_qs(arrays) if "qs_data" in arrays else None,
         router=_rebuild_router(arrays)
         if "router_centroids" in arrays else None,
+        mips_m=_metric_meta(manifest, cfg),
     )
     values = jnp.asarray(arrays["values"]) if "values" in arrays else None
     return store, values
@@ -564,6 +590,7 @@ def _rebuild_restored(directory: str, payload: tuple,
         qs=qs,
         router=_rebuild_router(arrays)
         if "router_centroids" in arrays else None,
+        mips_m=_metric_meta(manifest, cfg),
     )
     values = jnp.asarray(arrays["values"]) if "values" in arrays else None
     return Restored(store, values, step, manifest,
@@ -602,6 +629,11 @@ def capture_datastore(ds):
         "k": int(ds.graph_idx.shape[1]),
         "has_qs": getattr(ds, "qstore", None) is not None,
         "has_router": router is not None,
+        # metric echo: keys are stored TRANSFORMED, so a restore must
+        # serve them under the same metric (defaults cover pre-metric
+        # snapshots — format unchanged, old snapshots stay loadable)
+        "metric": getattr(ds, "metric", "l2"),
+        "mips_m": float(getattr(ds, "mips_m", 0.0)),
         "build_stats": {k: v for k, v in
                         getattr(ds, "build_stats", {}).items()
                         if isinstance(v, (int, float, str, bool))},
@@ -624,6 +656,8 @@ def rebuild_datastore(arrays: dict, manifest: dict) -> dict:
         "qstore": _rebuild_qs(arrays) if "qs_data" in arrays else None,
         "router": _rebuild_router(arrays)
         if "router_centroids" in arrays else None,
+        "metric": manifest.get("metric", "l2"),
+        "mips_m": float(manifest.get("mips_m", 0.0)),
     }
 
 

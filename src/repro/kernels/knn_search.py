@@ -18,6 +18,15 @@ into the epilogue: masked candidates come out +inf so the downstream
 free. The restriction to l2 is what makes this blocked form possible — the
 source paper's core lesson, applied to the serving path.
 
+That restriction is NOT a metric restriction: cosine and MIPS serving
+(core/metric.py) reduce to squared l2 by transforming the INPUTS (rows
+normalized; the MIPS augmented coordinate appended), so this kernel — and
+every other kernel in the package — runs those metrics unchanged, with
+identical tiles, masks and epilogues. Filtered queries ride the same id
+mask: a row filtered out by a predicate reaches this kernel as id -1,
+exactly like a tombstoned or padded candidate, and exits as +inf — zero
+per-metric or per-filter kernel variants to maintain.
+
 The gather itself (adjacency rows -> candidate ids -> feature rows) stays
 outside the kernel in XLA, like every other kernel in this package
 (cf. knn_join_dists_blocked's pre-gathered ``xg``): Pallas sees only

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DescentConfig, SearchConfig, build_knn_graph, graph_search
+from repro.core import metric as metric_mod
 from repro.core.online import (
     MutableKNNStore,
     OnlineConfig,
@@ -50,11 +51,19 @@ class KNNDatastore:
     # coarse routing layer (core/router.py): hierarchical entry points
     # for every knn_logits search (built when ``build(router=...)``)
     router: Router | None = None
+    # distance metric the datastore was built under ("l2" | "cosine" |
+    # "mips"); ``keys`` are stored TRANSFORMED (normalized / augmented —
+    # core/metric.py), so every knn_logits search must run under the
+    # same metric. ``mips_m`` is the MIPS norm bound M baked into the
+    # augmented coordinate (0.0 unless metric == "mips").
+    metric: str = "l2"
+    mips_m: float = 0.0
 
     @classmethod
     def build(cls, keys: jax.Array, values: jax.Array, *, k: int = 16,
               cfg: DescentConfig | None = None,
               precision: str = "f32",
+              metric: str = "l2",
               router: RouterConfig | None = None,
               key: jax.Array | None = None):
         """``precision`` selects the serving-time candidate-scoring dtype
@@ -64,10 +73,21 @@ class KNNDatastore:
         a quantized SearchConfig from it per call), NOT by pinning
         ``search_cfg`` — so per-call ``beam``/``rounds`` keep working.
         ``router`` builds the coarse routing layer over the keys so every
-        retrieval seeds its beam from the query's nearest centroids."""
+        retrieval seeds its beam from the query's nearest centroids.
+        ``metric`` ("l2" | "cosine" | "mips") selects the retrieval
+        distance: keys are transformed ONCE here (core/metric.py) and
+        stored transformed, the graph/mirror/router are built over the
+        transformed rows, and every knn_logits search reuses the pure-l2
+        kernels unchanged (queries transformed per call)."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
+        if cfg.metric != metric:
+            cfg = dataclasses.replace(cfg, metric=metric)
         dist, idx, st = build_knn_graph(keys, k=k, cfg=cfg, key=key)
-        keys = keys.astype(jnp.float32)
+        # store the TRANSFORMED keys (same transform the graph build
+        # applied internally — deterministic, so M matches exactly);
+        # mirror and router are built over the transformed rows too
+        keys, mips_m = metric_mod.transform_corpus(
+            keys.astype(jnp.float32), metric)
         return cls(
             keys=keys,
             values=values,
@@ -81,6 +101,8 @@ class KNNDatastore:
                         keys, cfg=router,
                         key=jax.random.key(29) if key is None else key,
                     )),
+            metric=metric,
+            mips_m=mips_m,
         )
 
     def snapshot(self, directory: str, step: int = 0, *,
@@ -133,6 +155,7 @@ class MutableKNNDatastore:
               frontier_chunk: int | None = None,
               q_block: int | None = None,
               precision: str | None = None,
+              metric: str | None = None,
               router: RouterConfig | None = None,
               key: jax.Array | None = None):
         """``frontier_chunk`` overrides the online store's frontier chunk
@@ -148,7 +171,11 @@ class MutableKNNDatastore:
         searches score on (fp32 re-rank — exact retrieval distances).
         ``router`` overrides OnlineConfig.router: the store builds and
         maintains the coarse routing layer (hierarchical entry points for
-        every query and insert-seeding search)."""
+        every query and insert-seeding search). ``metric`` overrides
+        OnlineConfig.metric ("l2" | "cosine" | "mips"): the store keeps
+        its rows transformed (core/metric.py) and transforms queries and
+        decode-time inserts itself, so append/search/delete all stay
+        metric-consistent with zero caller-side work."""
         cfg = cfg or DescentConfig(k=k, rho=1.0, max_iters=10)
         online_cfg = online_cfg or OnlineConfig()
         if frontier_chunk is not None:
@@ -159,6 +186,8 @@ class MutableKNNDatastore:
         if precision is not None:
             online_cfg = dataclasses.replace(online_cfg,
                                              precision=precision)
+        if metric is not None:
+            online_cfg = dataclasses.replace(online_cfg, metric=metric)
         if router is not None:
             online_cfg = dataclasses.replace(online_cfg, router=router)
         store, st = MutableKNNStore.build(
@@ -247,6 +276,7 @@ def knn_logits(
     rounds: int = 24,
     key: jax.Array | None = None,
     cfg: SearchConfig | None = None,
+    filter_ids: jax.Array | None = None,
 ) -> jax.Array:
     """Graph-search retrieval -> (q, vocab) log-probabilities.
 
@@ -258,19 +288,41 @@ def knn_logits(
     search knobs; default is the fused path with legacy beam/rounds. A
     datastore built with a quantized ``precision`` carries the mode on
     its cached mirror: with no pinned cfg, the two-stage search runs at
-    the CALL's beam/rounds (nothing is silently overridden)."""
+    the CALL's beam/rounds (nothing is silently overridden).
+
+    The datastore's build ``metric`` is enforced here the same way: a
+    datastore built under cosine/mips holds TRANSFORMED keys, so the
+    search always runs under the build metric (a caller cfg with a
+    different metric is overridden, never silently mis-scored). The
+    retrieval weights exp(-d/T) use the transformed-space squared-l2
+    distance, which is a monotone map of the native metric — ranking is
+    exact; retune ``temperature`` when switching metrics.
+
+    ``filter_ids`` restricts retrieval to admitted datastore rows —
+    (n,) bool shared across the batch or (q, n) bool per query (e.g.
+    per-tenant visibility during decode). Filtered rows are never
+    retrieved, so they contribute zero mass to p_kNN (zero leakage —
+    same contract as core/graph_search)."""
     cfg = cfg or ds.search_cfg
     if cfg is None and getattr(ds, "qstore", None) is not None:
         cfg = SearchConfig(beam=beam, rounds=rounds,
                            precision=ds.qstore.mode)
     if isinstance(ds, MutableKNNDatastore):
+        # the store enforces its own OnlineConfig.metric inside search
         dist, idx = ds.store.search(queries, k_out=k, beam=beam,
-                                    rounds=rounds, key=key, cfg=cfg)
+                                    rounds=rounds, key=key, cfg=cfg,
+                                    filter_ids=filter_ids)
     else:
+        met = getattr(ds, "metric", "l2")
+        if cfg is None:
+            cfg = SearchConfig(beam=beam, rounds=rounds, metric=met)
+        elif cfg.metric != met:
+            cfg = dataclasses.replace(cfg, metric=met)
         dist, idx = graph_search(ds.keys, ds.graph_idx, queries,
                                  k_out=k, beam=beam, rounds=rounds,
                                  key=key, cfg=cfg, qstore=ds.qstore,
-                                 router=getattr(ds, "router", None))
+                                 router=getattr(ds, "router", None),
+                                 filter_ids=filter_ids)
     # empty slots carry (+inf, -1) and must get zero weight; a row with
     # NO valid hit at all (empty store, or a poisoned query sanitized at
     # admission) would make softmax 0/0 — such rows degrade to the flat

@@ -227,6 +227,15 @@ class SchedulerConfig:
     default_deadline_ms: float | None = None
     #                               # applied when submit() passes None
     min_deadline_s: float = 1e-3    # floor for the propagated budget cut
+    result_cache: int = 0           # LRU result-cache capacity, in
+    #                               # entries (0 = off). Keyed on the
+    #                               # int8-quantized query bytes: near-
+    #                               # duplicate queries (same int8 image)
+    #                               # are answered at admission without a
+    #                               # search dispatch. MUST be
+    #                               # invalidated on every corpus
+    #                               # mutation (RetrievalScheduler
+    #                               # .invalidate_cache).
 
 
 class RetrievalScheduler:
@@ -251,6 +260,24 @@ class RetrievalScheduler:
         becomes ``SearchConfig.max_rounds_deadline`` — the fused
         search's per-block time slice that cuts late blocks down to
         their minimum round budget (graph_search's deadline cut).
+      * Result cache (``SchedulerConfig.result_cache`` > 0): an LRU of
+        recent (query -> dist/idx) results keyed on the query's
+        int8-quantized bytes (the quantize_sym_int8 per-row scheme, so
+        near-duplicate queries that share an int8 image hit). Hits are
+        answered AT ADMISSION — no queue slot, no dispatch, counted in
+        ``cache_hits``. Deadline-cut dispatches never populate the
+        cache (a degraded answer must not be replayed to a full-budget
+        caller). The scheduler cannot see the corpus behind
+        ``search_fn``: the OWNER must call :meth:`invalidate_cache`
+        after every store mutation (insert/delete/restore), or stale
+        results will be served.
+
+    The scheduler is metric- and filter-agnostic: ``base_cfg.metric``
+    rides through untouched to the search closure, and per-tenant
+    ``filter_ids`` belong INSIDE ``search_fn`` (one scheduler per
+    visibility domain — cache keys carry no filter identity, so mixing
+    tenants behind one cached scheduler would leak results across the
+    filter boundary).
 
     Fault sites (deterministic overload, core/faults.py): ``sched.burst``
     amplifies one submit into N injected copies; ``sched.stall``
@@ -274,15 +301,41 @@ class RetrievalScheduler:
         self.dispatches = 0
         self.served = 0
         self.latency_ms = {lane: [] for lane in LANES}
+        # admission-path result LRU (SchedulerConfig.result_cache):
+        # int8-quantized query bytes -> (dist, idx) numpy copies
+        self._cache: collections.OrderedDict = collections.OrderedDict()
+        self.cache_hits = 0
 
     def now(self) -> float:
         return self._clock() + self._stall
+
+    @staticmethod
+    def _cache_key(q: np.ndarray) -> bytes:
+        """int8 image of the query (quantize_sym_int8's per-row scheme:
+        scale = max|q|/127) + the scale bytes — collisions require the
+        same quantized direction AND magnitude, i.e. queries the search
+        itself could not meaningfully tell apart."""
+        q = np.asarray(q, np.float32).reshape(-1)
+        s = max(float(np.max(np.abs(q))) / 127.0, 1e-30) \
+            if q.size else 1e-30
+        qi = np.clip(np.round(q / s), -127, 127).astype(np.int8)
+        return qi.tobytes() + np.float32(s).tobytes()
+
+    def invalidate_cache(self) -> None:
+        """Drop every cached result. Call after ANY mutation of the
+        corpus behind ``search_fn`` (insert / delete / restore /
+        re-quantization) — the scheduler cannot observe those, so cache
+        coherence is the owner's contract."""
+        self._cache.clear()
 
     def submit(self, query, *, lane: str = "interactive",
                deadline_ms: float | None = None,
                qid: int | None = None) -> QueryRequest:
         """Admit one query. Returns its QueryRequest — check
-        ``.rejection`` for an admission-time refusal. An active
+        ``.rejection`` for an admission-time refusal. A result-cache
+        hit (SchedulerConfig.result_cache) is answered here directly:
+        the returned request is already ``done`` with the cached
+        dist/idx and never occupies a queue slot. An active
         ``sched.burst`` spec amplifies this arrival into ``arg``
         (default 8) extra injected copies submitted behind it."""
         if deadline_ms is None:
@@ -293,6 +346,18 @@ class RetrievalScheduler:
         self._next_qid = max(self._next_qid, qid) + 1
         req = QueryRequest(qid=qid, query=q, lane=lane,
                            deadline_ms=deadline_ms)
+        if self.cfg.result_cache > 0:
+            ck = self._cache_key(q)
+            hit = self._cache.get(ck)
+            if hit is not None:
+                self._cache.move_to_end(ck)
+                now = self.now()
+                req.submitted_at = now
+                req.dist, req.idx = hit[0].copy(), hit[1].copy()
+                req.finished_at = now
+                self.cache_hits += 1
+                self.latency_ms[lane].append(0.0)
+                return req
         self.queue.push(req, self.now())
         spec = faults.fire("sched.burst")
         if spec is not None:
@@ -307,7 +372,9 @@ class RetrievalScheduler:
 
     def pump(self) -> list:
         """Dispatch one lane-pure batch. Returns the served requests
-        ([] when the queue had nothing serviceable)."""
+        ([] when the queue had nothing serviceable). Full-budget
+        dispatches populate the result cache; deadline-cut ones do
+        not (their answers may be round-budget degraded)."""
         spec = faults.fire("sched.stall")
         if spec is not None:
             self._stall += float(spec.arg) if spec.arg is not None \
@@ -339,6 +406,11 @@ class RetrievalScheduler:
             r.dist, r.idx, r.finished_at = dist[j], idx[j], end
             if r.latency_ms is not None:
                 self.latency_ms[r.lane].append(r.latency_ms)
+            if self.cfg.result_cache > 0 and not rem:
+                self._cache[self._cache_key(r.query)] = (
+                    dist[j].copy(), idx[j].copy())
+        while len(self._cache) > self.cfg.result_cache:
+            self._cache.popitem(last=False)
         self.dispatches += 1
         self.served += nq
         return batch
@@ -376,6 +448,8 @@ class RetrievalScheduler:
             "expired": q.expired,
             "served": self.served,
             "dispatches": self.dispatches,
+            "cache_hits": self.cache_hits,
+            "cache_size": len(self._cache),
             "latency_ms": {lane: list(v)
                            for lane, v in self.latency_ms.items()},
         }

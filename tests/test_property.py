@@ -194,6 +194,99 @@ def test_int8_error_feedback_bounded(seed, scale, nelem):
     assert (err <= step * 0.5 + 1e-7).all()
 
 
+@given(d=st.sampled_from([4, 16, 64]), seed=st.integers(0, 999))
+@settings(max_examples=10, deadline=None)
+def test_cosine_bitwise_l2_on_unit_rows(d, seed):
+    """Cosine is implemented as row normalization + the unchanged l2
+    path (core/metric.py): on inputs whose rows are EXACTLY unit norm
+    (entries +-1/sqrt(d) with d a power of 4, so both the entries and
+    the row norms are exact in fp32), normalization divides by exactly
+    1.0 and the cosine search must be BIT-identical to the l2 search —
+    same distances, same ids, zero numeric drift from the reduction."""
+    from repro.core.graph_search import SearchConfig, graph_search
+    rng = np.random.RandomState(seed)
+    n, nq, k = 64, 8, 4
+    s = np.float32(1.0 / np.sqrt(d))
+    x = ((rng.randint(0, 2, size=(n, d)) * 2 - 1) * s).astype(np.float32)
+    q = ((rng.randint(0, 2, size=(nq, d)) * 2 - 1) * s).astype(np.float32)
+    idx = jnp.asarray(rng.randint(0, n, size=(n, k)).astype(np.int32))
+    outs = {}
+    for met in ("l2", "cosine"):
+        cfg = SearchConfig(beam=8, rounds=6, q_block=8, metric=met)
+        outs[met] = graph_search(jnp.asarray(x), idx, jnp.asarray(q),
+                                 k_out=4, key=jax.random.key(seed),
+                                 cfg=cfg)
+    assert np.array_equal(np.asarray(outs["l2"][1]),
+                          np.asarray(outs["cosine"][1]))
+    assert np.array_equal(np.asarray(outs["l2"][0]),
+                          np.asarray(outs["cosine"][0]))
+
+
+@given(n=st.integers(8, 48), d=st.integers(2, 12), nq=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+@_settings
+def test_mips_reduction_matches_ip_oracle(n, d, nq, seed):
+    """The MIPS augmentation (core/metric.py): transformed-space squared
+    l2 must recover the exact inner product through
+    ``similarity_from_dist`` and preserve the IP ranking — against a
+    brute-force q @ x.T oracle, for ANY data."""
+    from repro.core import metric as metric_mod
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, d).astype(np.float32) * 2.0
+    q = rng.randn(nq, d).astype(np.float32)
+    xt, m = metric_mod.transform_corpus(jnp.asarray(x), "mips")
+    qt = metric_mod.transform_queries(jnp.asarray(q), "mips")
+    dist = ref.pairwise_sq_l2(qt, xt)                      # (nq, n)
+    q2 = jnp.sum(jnp.asarray(q) ** 2, axis=1)
+    sim = metric_mod.similarity_from_dist(dist, "mips", q2=q2[:, None],
+                                          mips_m=m)
+    ip = q @ x.T
+    scale = max(1.0, float(np.abs(ip).max()))
+    np.testing.assert_allclose(np.asarray(sim), ip,
+                               atol=2e-4 * scale, rtol=0)
+    # ranking: the min-distance row is a max-IP row (within fp32 slack)
+    best = np.asarray(jnp.argmin(dist, axis=1))
+    for r in range(nq):
+        assert ip[r, best[r]] >= ip[r].max() - 1e-3 * scale
+
+
+@given(
+    n=st.integers(16, 48), k=st.integers(2, 5), d=st.integers(2, 10),
+    nq=st.integers(1, 8), seed=st.integers(0, 2**16),
+    precision=st.sampled_from(["f32", "int8"]),
+    per_query=st.booleans(),
+)
+@settings(max_examples=15, deadline=None)
+def test_filtered_search_never_leaks(n, k, d, nq, seed, precision,
+                                     per_query):
+    """Filtered search (graph_search ``filter_ids``): for ANY graph,
+    tombstone mask, precision mode and predicate — shared (n,) or
+    per-query (q, n) — no returned id is ever filtered-out or dead
+    (zero leakage), and valid ids still pair with finite distances."""
+    from repro.core.graph_search import SearchConfig, graph_search
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    idx = jnp.asarray(rng.randint(-1, n, size=(n, k)).astype(np.int32))
+    alive = jnp.asarray(rng.rand(n) < 0.8)
+    q = jnp.asarray(rng.randn(nq, d).astype(np.float32))
+    if per_query:
+        filt = jnp.asarray(rng.rand(nq, n) < 0.5)
+    else:
+        filt = jnp.asarray(rng.rand(n) < 0.5)
+    cfg = SearchConfig(beam=8, rounds=6, q_block=4, precision=precision)
+    dd, ii = graph_search(x, idx, q, k_out=4, key=jax.random.key(seed),
+                          alive=alive, filter_ids=filt, cfg=cfg)
+    dd, ii = np.asarray(dd), np.asarray(ii)
+    assert ((ii >= 0) == np.isfinite(dd)).all()
+    a = np.asarray(alive)
+    f = np.asarray(filt)
+    for r in range(nq):
+        ids = ii[r][ii[r] >= 0]
+        assert a[ids].all(), "leaked a tombstoned row"
+        frow = f[r] if per_query else f
+        assert frow[ids].all(), "leaked a filtered-out row"
+
+
 @given(seed=st.integers(0, 99))
 @settings(max_examples=10, deadline=None)
 def test_sampling_probability_expectation(seed):
